@@ -1,0 +1,26 @@
+"""Benchmark helpers: CSV emission + timing."""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Any, Dict, List
+
+
+class Reporter:
+    def __init__(self) -> None:
+        self.rows: List[Dict[str, Any]] = []
+
+    def row(self, name: str, us_per_call: float, **derived) -> None:
+        d = {"name": name, "us_per_call": us_per_call, **derived}
+        self.rows.append(d)
+        extras = ",".join(f"{k}={v}" for k, v in derived.items())
+        print(f"{name},{us_per_call:.2f},{extras}")
+
+
+@contextmanager
+def timed():
+    t0 = time.perf_counter()
+    box = {}
+    yield box
+    box["s"] = time.perf_counter() - t0

@@ -1,0 +1,7 @@
+"""repro: PyWren ("Occupy the Cloud") as a production JAX framework.
+
+Subpackages: core (serverless runtime), storage (object/KV stores), models,
+kernels (Pallas TPU), train, serve, data, configs, launch, analysis.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+"""Roofline analysis from compiled XLA artifacts."""
+
+from . import roofline
+
+__all__ = ["roofline"]

@@ -1,0 +1,174 @@
+"""Three-term roofline from compiled XLA artifacts.
+
+  compute term    = per-device HLO FLOPs / peak FLOP/s
+  memory term     = per-device HLO bytes accessed / HBM bandwidth
+  collective term = per-device collective wire bytes / ICI link bandwidth
+
+`cost_analysis()` on the partitioned executable is already per-device.
+Collective bytes are NOT in cost_analysis: we parse the post-SPMD HLO text
+(`compiled.as_text()`) where every collective op carries its per-device
+result shape and replica groups, and apply standard ring-algorithm wire
+accounting per op kind.
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(?P<ng>\d+),(?P<gs>\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group("gs"))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].split(",")
+        return max(len([x for x in first if x.strip() != ""]), 1)
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0  # per device
+    by_op: Dict[str, float] = field(default_factory=dict)
+    counts: Dict[str, int] = field(default_factory=dict)
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op").replace("-start", "")
+        nbytes = _type_bytes(m.group("type"))
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        if op == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif op == "all-gather":
+            wire = (n - 1) / n * nbytes  # result is the gathered buffer
+        elif op == "reduce-scatter":
+            wire = (n - 1) * nbytes  # result is the scattered shard
+        elif op == "all-to-all":
+            wire = (n - 1) / n * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        stats.wire_bytes += wire
+        stats.by_op[op] = stats.by_op.get(op, 0.0) + wire
+        stats.counts[op] = stats.counts.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float  # 6*N*D (or 6*N_active*D), global per step
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+    collective_by_op: Dict[str, float] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    memory_stats: Dict[str, float] = field(default_factory=dict)
+
+    def finalize(self) -> "Roofline":
+        self.compute_s = self.hlo_flops_per_device / PEAK_FLOPS
+        self.memory_s = self.hlo_bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / LINK_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.dominant = max(terms, key=terms.get)
+        total_hlo = self.hlo_flops_per_device * self.n_devices
+        self.useful_ratio = self.model_flops / total_hlo if total_hlo else 0.0
+        return self
+
+    def step_time_bound_s(self) -> float:
+        """Roofline lower bound on step time (no overlap assumption: max)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def roofline_fraction(self) -> float:
+        """Achievable-MFU proxy: useful FLOPs at peak vs roofline-bound time."""
+        ideal_s = self.model_flops / (self.n_devices * PEAK_FLOPS)
+        bound = self.step_time_bound_s()
+        return ideal_s / bound if bound else 0.0
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction(),
+            "step_bound_s": self.step_time_bound_s(),
+            "collective_by_op": self.collective_by_op,
+            "collective_counts": self.collective_counts,
+            "memory_stats": self.memory_stats,
+        }
+
+
+def model_flops_per_step(total_params: int, active_params: int, tokens: int, kind: str) -> float:
+    """6ND for training (fwd+bwd), 2ND for inference (fwd only)."""
+    n = active_params
+    if kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

@@ -1,0 +1,48 @@
+"""The paper's contribution: a serverless stateless-function runtime.
+
+Layers: functions (serialization/idempotency) → scheduler (leases, retries,
+speculation) → executor (elastic container pool) → wren (map API) → bsp /
+ps (higher-level abstractions built on the single primitive).
+"""
+
+from .bsp import mapreduce, run_stage, terasort, verify_sorted, word_count
+from .executor import FaultPlan, Worker, WorkerPool, WorkerStats
+from .functions import FunctionSpec, TaskResult, TaskSpec, run_task, stage_input
+from .futures import ALL_COMPLETED, ANY_COMPLETED, ALWAYS, ResultFuture, get_all, wait
+from .ps import ParameterServer, PSConfig, hogwild_sgd
+from .resources import LAMBDA_2017, TPU_TASK_2026, ResourceLimits, io_compute_balance
+from .scheduler import Scheduler, SchedulerConfig
+from .wren import WrenExecutor
+
+__all__ = [
+    "WrenExecutor",
+    "Scheduler",
+    "SchedulerConfig",
+    "WorkerPool",
+    "Worker",
+    "WorkerStats",
+    "FaultPlan",
+    "FunctionSpec",
+    "TaskSpec",
+    "TaskResult",
+    "run_task",
+    "stage_input",
+    "ResultFuture",
+    "wait",
+    "get_all",
+    "ALL_COMPLETED",
+    "ANY_COMPLETED",
+    "ALWAYS",
+    "mapreduce",
+    "word_count",
+    "terasort",
+    "verify_sorted",
+    "run_stage",
+    "ParameterServer",
+    "PSConfig",
+    "hogwild_sgd",
+    "ResourceLimits",
+    "LAMBDA_2017",
+    "TPU_TASK_2026",
+    "io_compute_balance",
+]

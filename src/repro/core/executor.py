@@ -1,0 +1,254 @@
+"""Elastic worker pool: Lambda-container emulation with fault injection.
+
+Each worker thread emulates one serverless container:
+
+  * **cold start** — first task on a fresh container pays the paper's
+    measured start latency (Table 2: 9.7 s start + 14.2 s setup, as virtual
+    time, deterministic per worker seed); warm containers pay ~0.1 s.
+    Container *reuse* across tasks is the paper's §4 caching mitigation.
+  * **statelessness** — the container scratch dict is wiped between jobs;
+    nothing a task leaves behind is visible to the next (paper §3.1: "none
+    of the state created by the function will be retained").
+  * **resource limits** — Lambda 2017 limits enforced per task.
+  * **fault injection** — test hooks: die_before_publish (instance loss →
+    lease expiry → retry), slowdown factors (stragglers → speculation),
+    kill switches (elastic scale-down).
+
+Workers heartbeat their lease from a side thread while the user function
+runs, so long tasks are not falsely reaped, but a *dead* worker stops
+heartbeating and is.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.storage import ObjectStore
+
+from .functions import TaskResult, TaskSpec, run_task
+from .resources import LAMBDA_2017, ResourceLimits
+from .scheduler import Scheduler
+
+# Paper Table 2 constants (seconds, virtual).
+COLD_START_MEAN_S = 9.7
+COLD_SETUP_MEAN_S = 14.2
+WARM_START_S = 0.1
+
+
+@dataclass
+class FaultPlan:
+    """Deterministic fault-injection plan for tests/benchmarks."""
+
+    die_before_publish_tasks: set = field(default_factory=set)  # task ids die once
+    slowdown: Dict[str, float] = field(default_factory=dict)  # worker -> factor
+    max_tasks_per_worker: Optional[int] = None
+    _fired: set = field(default_factory=set)  # faults fire once *globally*
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def should_die(self, task_id: str) -> bool:
+        with self._lock:
+            if task_id in self.die_before_publish_tasks and task_id not in self._fired:
+                self._fired.add(task_id)
+                return True
+            return False
+
+
+@dataclass
+class WorkerStats:
+    tasks_ok: int = 0
+    tasks_failed: int = 0
+    cold_starts: int = 0
+    vtime_busy_s: float = 0.0
+
+
+class Worker(threading.Thread):
+    def __init__(
+        self,
+        name: str,
+        store: ObjectStore,
+        scheduler: Scheduler,
+        limits: ResourceLimits = LAMBDA_2017,
+        fault_plan: Optional[FaultPlan] = None,
+        compute_time_fn: Optional[Callable[[float], float]] = None,
+        seed: int = 0,
+        poll_s: float = 0.002,
+    ) -> None:
+        super().__init__(name=name, daemon=True)
+        self.worker_id = name
+        self.store = store
+        self.scheduler = scheduler
+        self.limits = limits
+        self.fault_plan = fault_plan or FaultPlan()
+        self.compute_time_fn = compute_time_fn
+        self.rng = random.Random(seed)
+        self.poll_s = poll_s
+        self.stats = WorkerStats()
+        self._stop = threading.Event()
+        self._warm = False  # container temperature
+
+    # -- lifecycle ---------------------------------------------------------
+    def stop(self) -> None:
+        self._stop.set()
+
+    def kill(self) -> None:
+        """Hard kill: stop without completing the current lease (scale-down /
+        spot preemption).  The scheduler's reaper picks up the pieces."""
+        self._stop.set()
+
+    # -- the container loop ---------------------------------------------------
+    def run(self) -> None:  # noqa: D102
+        tasks_done = 0
+        while not self._stop.is_set():
+            task = self.scheduler.lease_next(self.worker_id)
+            if task is None:
+                time.sleep(self.poll_s)
+                continue
+            self._execute(task)
+            tasks_done += 1
+            cap = self.fault_plan.max_tasks_per_worker
+            if cap is not None and tasks_done >= cap:
+                return
+
+    def _execute(self, task: TaskSpec) -> None:
+        # cold-start accounting (virtual)
+        if self._warm:
+            setup_vtime = WARM_START_S
+        else:
+            setup_vtime = max(
+                0.5,
+                self.rng.gauss(COLD_START_MEAN_S, 2.0)
+                + self.rng.gauss(COLD_SETUP_MEAN_S, 2.0),
+            )
+            self.stats.cold_starts += 1
+            self._warm = True
+
+        # heartbeat while running
+        hb_stop = threading.Event()
+
+        def _heartbeat() -> None:
+            while not hb_stop.is_set():
+                if self._stop.is_set():
+                    return  # dead workers don't heartbeat
+                self.scheduler.heartbeat(task, self.worker_id)
+                hb_stop.wait(self.scheduler.config.heartbeat_interval_s)
+
+        hb = threading.Thread(target=_heartbeat, daemon=True)
+        hb.start()
+        t0 = time.monotonic()
+        died = False
+        try:
+            # fault injection: die mid-task, before publishing (once per task,
+            # globally — the retried attempt on another container succeeds)
+            if self.fault_plan.should_die(task.task_id):
+                # fetch input (burn some ledger ops) then vanish: the lease
+                # must be left dangling so only expiry can recover the task
+                try:
+                    self.store.get_bytes(task.func_key, worker=self.worker_id)
+                except KeyError:
+                    pass
+                died = True
+                self._stop.set()
+                return
+
+            slow = self.fault_plan.slowdown.get(self.worker_id, 1.0)
+            if slow > 1.0:
+                time.sleep(self.poll_s * slow)
+
+            ct = self.compute_time_fn
+            if slow > 1.0 and ct is not None:
+                base_ct = ct
+                ct = lambda s: base_ct(s) * slow  # noqa: E731
+
+            result = run_task(
+                self.store,
+                task,
+                worker=self.worker_id,
+                setup_vtime=setup_vtime,
+                compute_time_fn=ct,
+            )
+            vtotal = sum(result.phases.values())
+            try:
+                self.limits.check_runtime(vtotal)
+            except TimeoutError:
+                # Over-limit tasks fail permanently (the Lambda contract);
+                # record but keep the published result (it is still correct —
+                # the limit models billing, not correctness).
+                result.phases["over_limit"] = vtotal
+            if result.success:
+                self.stats.tasks_ok += 1
+            else:
+                self.stats.tasks_failed += 1
+            self.stats.vtime_busy_s += vtotal
+        finally:
+            hb_stop.set()
+            if not died:
+                self.scheduler.complete(task, self.worker_id, time.monotonic() - t0)
+
+
+class WorkerPool:
+    """Elastic pool: scale_to() adds/removes containers at any time."""
+
+    def __init__(
+        self,
+        store: ObjectStore,
+        scheduler: Scheduler,
+        num_workers: int,
+        limits: ResourceLimits = LAMBDA_2017,
+        fault_plan: Optional[FaultPlan] = None,
+        compute_time_fn: Optional[Callable[[float], float]] = None,
+        seed: int = 0,
+    ) -> None:
+        self.store = store
+        self.scheduler = scheduler
+        self.limits = limits
+        self.fault_plan = fault_plan or FaultPlan()
+        self.compute_time_fn = compute_time_fn
+        self.seed = seed
+        self.workers: List[Worker] = []
+        self._next_id = 0
+        self.scale_to(num_workers)
+
+    def scale_to(self, n: int) -> None:
+        """Elasticity: spin containers up or down; safe mid-job because state
+        is storage-resident and tasks are idempotent."""
+        alive = [w for w in self.workers if w.is_alive() or not w.ident]
+        while len(alive) < n:
+            w = Worker(
+                name=f"w{self._next_id:04d}",
+                store=self.store,
+                scheduler=self.scheduler,
+                limits=self.limits,
+                fault_plan=self.fault_plan,
+                compute_time_fn=self.compute_time_fn,
+                seed=self.seed + self._next_id,
+            )
+            self._next_id += 1
+            self.workers.append(w)
+            alive.append(w)
+            w.start()
+        # scale down: kill newest first
+        excess = len(alive) - n
+        for w in reversed(alive):
+            if excess <= 0:
+                break
+            w.kill()
+            excess -= 1
+
+    def kill_worker(self, idx: int) -> None:
+        self.workers[idx].kill()
+
+    def stop_all(self) -> None:
+        for w in self.workers:
+            w.stop()
+        for w in self.workers:
+            w.join(timeout=2.0)
+
+    def stats(self) -> Dict[str, WorkerStats]:
+        return {w.worker_id: w.stats for w in self.workers}
+
+    def alive_count(self) -> int:
+        return sum(1 for w in self.workers if w.is_alive())

@@ -1,0 +1,183 @@
+"""Stateless functions: serialization, identity, idempotency.
+
+PyWren's central trick: *one* registered Lambda is reused for every user
+function by shipping the pickled function + datum through S3 under globally
+unique keys, then invoking the generic entry point.  We reproduce exactly
+that structure:
+
+  * ``FunctionSpec``  — the pickled callable (content-addressed in the object
+    store; identical functions dedupe to one object, the paper's mitigation
+    for function-registration latency and code-size limits);
+  * ``TaskSpec``      — one invocation = (function key, input key, task id);
+    the task id is a *deterministic* hash of function + input + job, which is
+    what makes re-execution idempotent;
+  * ``run_task``      — the generic container entry point: fetch code, fetch
+    datum, execute, publish result atomically (first writer wins).
+
+The result envelope carries success/exception (pickled traceback string) and
+per-phase virtual timings, mirroring the paper's Table 2 phase breakdown.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import pickle
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import cloudpickle  # the paper's serializer [7]
+
+from repro.storage import ObjectStore, serialization
+
+
+@dataclass(frozen=True)
+class FunctionSpec:
+    """A content-addressed serialized callable."""
+
+    key: str  # object-store key of the pickled callable
+    name: str
+
+    @staticmethod
+    def register(store: ObjectStore, fn: Callable, *, worker: str = "-") -> "FunctionSpec":
+        blob = cloudpickle.dumps(fn, protocol=pickle.HIGHEST_PROTOCOL)
+        key = serialization.content_key("func", blob)
+        store.put_bytes(key, blob, worker=worker, if_absent=True)
+        return FunctionSpec(key=key, name=getattr(fn, "__name__", "<lambda>"))
+
+    def load(self, store: ObjectStore, *, worker: str = "-") -> Callable:
+        return pickle.loads(store.get_bytes(self.key, worker=worker))
+
+
+@dataclass(frozen=True)
+class TaskSpec:
+    """One stateless invocation."""
+
+    task_id: str
+    job_id: str
+    func_key: str
+    func_name: str
+    input_key: str
+    result_key: str
+    attempt: int = 0  # bumped on retry; same result_key (idempotent)
+
+    @staticmethod
+    def make(
+        job_id: str, func: FunctionSpec, input_key: str, index: int
+    ) -> "TaskSpec":
+        h = hashlib.sha256(
+            f"{job_id}|{func.key}|{input_key}|{index}".encode()
+        ).hexdigest()[:24]
+        return TaskSpec(
+            task_id=f"{job_id}/t{index:06d}-{h[:8]}",
+            job_id=job_id,
+            func_key=func.key,
+            func_name=func.name,
+            input_key=input_key,
+            result_key=f"result/{job_id}/{h}",
+        )
+
+    def retry(self) -> "TaskSpec":
+        return TaskSpec(
+            task_id=self.task_id,
+            job_id=self.job_id,
+            func_key=self.func_key,
+            func_name=self.func_name,
+            input_key=self.input_key,
+            result_key=self.result_key,
+            attempt=self.attempt + 1,
+        )
+
+
+@dataclass
+class TaskResult:
+    task_id: str
+    success: bool
+    value: Any = None
+    error: Optional[str] = None
+    phases: Dict[str, float] = field(default_factory=dict)  # virtual seconds
+    worker: str = "-"
+    attempt: int = 0
+
+
+def stage_input(store: ObjectStore, job_id: str, value: Any, *, worker: str = "-") -> str:
+    """Place one serialized datum at a content-addressed key."""
+    return store.put_content_addressed(f"input/{job_id}", value, worker=worker)
+
+
+def run_task(
+    store: ObjectStore,
+    task: TaskSpec,
+    *,
+    worker: str = "-",
+    setup_vtime: float = 0.0,
+    compute_time_fn: Optional[Callable[[float], float]] = None,
+) -> TaskResult:
+    """The generic container entry point (the single registered Lambda).
+
+    Executes the task; returns the result envelope *and* publishes it
+    atomically at ``task.result_key``.  A concurrent duplicate (speculative
+    copy or lease-expired retry) publishing first simply wins; this copy's
+    publish becomes a no-op — the paper's exactly-once-visibility contract.
+
+    ``compute_time_fn`` maps real compute seconds to virtual seconds (the
+    Lambda-core calibration used by the paper-figure benchmarks).
+    """
+    phases: Dict[str, float] = {"setup": setup_vtime}
+
+    ledger = store.ledger
+
+    def _span(op: str):
+        before = len(ledger.records())
+
+        class _Ctx:
+            def __enter__(self_inner):
+                return self_inner
+
+            def __exit__(self_inner, *exc):
+                recs = ledger.records()[before:]
+                phases[op] = phases.get(op, 0.0) + sum(
+                    r.vtime_s for r in recs if r.worker == worker
+                )
+                return False
+
+        return _Ctx()
+
+    try:
+        with _span("fetch_code"):
+            fn = pickle.loads(store.get_bytes(task.func_key, worker=worker))
+        with _span("fetch_input"):
+            arg = store.get(task.input_key, worker=worker)
+        t0 = time.perf_counter()
+        value = fn(arg)
+        real_compute = time.perf_counter() - t0
+        phases["compute"] = (
+            compute_time_fn(real_compute) if compute_time_fn else real_compute
+        )
+        with _span("write_output"):
+            result = TaskResult(
+                task_id=task.task_id,
+                success=True,
+                value=value,
+                phases=phases,
+                worker=worker,
+                attempt=task.attempt,
+            )
+            store.publish_result(task.result_key, result, worker=worker)
+        return result
+    except Exception:  # noqa: BLE001 — a task may raise anything
+        result = TaskResult(
+            task_id=task.task_id,
+            success=False,
+            error=traceback.format_exc(),
+            phases=phases,
+            worker=worker,
+            attempt=task.attempt,
+        )
+        # Failures are also published atomically, but under an attempt-scoped
+        # key so a later successful attempt can still win the result key.
+        store.put(
+            f"{task.result_key}.err{task.attempt}", result, worker=worker, if_absent=True
+        )
+        return result

@@ -1,0 +1,91 @@
+"""Futures over storage keys.
+
+A PyWren future is just 'does the result key exist yet?'.  The future does
+not talk to workers or the scheduler — completion is signalled purely by the
+atomic existence of the result object, so futures survive scheduler restarts
+and work across processes (anyone with the store handle can poll).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, List, Optional, Sequence, Tuple
+
+from repro.storage import ObjectStore
+
+from .functions import TaskResult, TaskSpec
+
+ALL_COMPLETED = "ALL_COMPLETED"
+ANY_COMPLETED = "ANY_COMPLETED"
+ALWAYS = "ALWAYS"
+
+
+class ResultFuture:
+    def __init__(self, store: ObjectStore, task: TaskSpec) -> None:
+        self.store = store
+        self.task = task
+        self._cached: Optional[TaskResult] = None
+
+    @property
+    def result_key(self) -> str:
+        return self.task.result_key
+
+    def done(self) -> bool:
+        if self._cached is not None:
+            return True
+        return self.store.backend.exists(self.task.result_key)
+
+    def peek(self) -> Optional[TaskResult]:
+        if self._cached is None and self.done():
+            self._cached = self.store.get(self.task.result_key)
+        return self._cached
+
+    def result(self, timeout_s: float = 120.0, poll_s: float = 0.001) -> Any:
+        deadline = time.monotonic() + timeout_s
+        while not self.done():
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"task {self.task.task_id} not done in {timeout_s}s")
+            time.sleep(poll_s)
+        res = self.peek()
+        assert res is not None
+        if not res.success:
+            raise RuntimeError(
+                f"task {self.task.task_id} failed after attempt {res.attempt}:\n{res.error}"
+            )
+        return res.value
+
+    def errors(self) -> List[TaskResult]:
+        """All published failed attempts (for diagnostics)."""
+        out = []
+        for key in self.store.backend.list(self.task.result_key + ".err"):
+            out.append(self.store.get(key))
+        return out
+
+
+def wait(
+    futures: Sequence[ResultFuture],
+    return_when: str = ALL_COMPLETED,
+    timeout_s: float = 120.0,
+    poll_s: float = 0.001,
+) -> Tuple[List[ResultFuture], List[ResultFuture]]:
+    """PyWren-style wait: returns (done, not_done)."""
+    deadline = time.monotonic() + timeout_s
+    while True:
+        done = [f for f in futures if f.done()]
+        not_done = [f for f in futures if not f.done()]
+        if return_when == ALWAYS:
+            return done, not_done
+        if return_when == ANY_COMPLETED and done:
+            return done, not_done
+        if return_when == ALL_COMPLETED and not not_done:
+            return done, not_done
+        if time.monotonic() > deadline:
+            raise TimeoutError(
+                f"wait timed out with {len(not_done)}/{len(futures)} pending"
+            )
+        time.sleep(poll_s)
+
+
+def get_all(futures: Sequence[ResultFuture], timeout_s: float = 120.0) -> List[Any]:
+    wait(futures, ALL_COMPLETED, timeout_s=timeout_s)
+    return [f.result(timeout_s=timeout_s) for f in futures]

@@ -1,0 +1,145 @@
+"""Parameter server on the KV store (paper §3.3 'Parameter Servers').
+
+'We can implement HOGWILD! stochastic gradient descent by having each
+function compute the gradients based on the latest version of shared model.
+Since the only coordination across functions happens through the parameter
+server, such applications fit very well into the stateless function model.'
+
+Design:
+  * the model is split into **blocks** (the paper's 'range updates'), each a
+    KV key, sharded across KV shards;
+  * workers ``pull()`` the latest blocks, compute a gradient on their datum,
+    and ``push()`` deltas via server-side ``eval`` — atomic per block, no
+    global lock: HOGWILD! semantics;
+  * optional **staleness bound** (the paper's 'flexible consistency
+    models'): a version counter per block; pushes older than ``max_staleness``
+    versions are rejected and the worker re-pulls;
+  * optional int8 **gradient compression** with stochastic rounding — a
+    beyond-paper distributed-optimization trick (bytes through the KV store
+    are the PS bottleneck, as Fig 4 quantifies).
+"""
+
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.storage import KVStore
+
+from .futures import get_all
+from .wren import WrenExecutor
+
+
+def _quantize_int8(arr: np.ndarray, rng: np.random.Generator) -> Tuple[np.ndarray, float]:
+    scale = float(np.max(np.abs(arr))) / 127.0 if arr.size else 1.0
+    if scale == 0.0:
+        scale = 1.0
+    scaled = arr / scale
+    low = np.floor(scaled)
+    frac = scaled - low
+    q = low + (rng.random(arr.shape) < frac)  # stochastic rounding
+    return np.clip(q, -127, 127).astype(np.int8), scale
+
+
+def _dequantize_int8(q: np.ndarray, scale: float) -> np.ndarray:
+    return q.astype(np.float32) * scale
+
+
+@dataclass
+class PSConfig:
+    num_blocks: int = 8
+    max_staleness: Optional[int] = None  # None = fully async (HOGWILD!)
+    compress_int8: bool = False
+
+
+class ParameterServer:
+    """Blocked parameter server over a KVStore."""
+
+    def __init__(self, kv: KVStore, params: np.ndarray, config: PSConfig, name: str = "ps") -> None:
+        self.kv = kv
+        self.config = config
+        self.name = f"{name}-{uuid.uuid4().hex[:6]}"
+        self.dim = int(params.size)
+        self.block_slices = self._make_blocks(self.dim, config.num_blocks)
+        for b, sl in enumerate(self.block_slices):
+            self.kv.set(self._bkey(b), params[sl].copy(), worker="ps-init")
+            self.kv.set(self._vkey(b), 0, worker="ps-init")
+
+    @staticmethod
+    def _make_blocks(dim: int, n: int) -> List[slice]:
+        edges = np.linspace(0, dim, n + 1).astype(int)
+        return [slice(int(a), int(b)) for a, b in zip(edges[:-1], edges[1:])]
+
+    def _bkey(self, b: int) -> str:
+        return f"{self.name}/block/{b}"
+
+    def _vkey(self, b: int) -> str:
+        return f"{self.name}/ver/{b}"
+
+    # ---- client ops ------------------------------------------------------
+    def pull(self, worker: str = "-") -> Tuple[np.ndarray, List[int]]:
+        parts, vers = [], []
+        for b in range(len(self.block_slices)):
+            parts.append(self.kv.get(self._bkey(b), worker=worker))
+            vers.append(int(self.kv.get(self._vkey(b), 0, worker=worker)))
+        return np.concatenate(parts), vers
+
+    def push_delta(
+        self,
+        delta: np.ndarray,
+        pulled_versions: Optional[List[int]] = None,
+        worker: str = "-",
+        rng: Optional[np.random.Generator] = None,
+    ) -> int:
+        """Apply delta block-wise.  Returns number of blocks applied (blocks
+        rejected for staleness are skipped — caller may re-pull)."""
+        applied = 0
+        rng = rng or np.random.default_rng(0)
+        for b, sl in enumerate(self.block_slices):
+            if self.config.max_staleness is not None and pulled_versions is not None:
+                cur_ver = int(self.kv.get(self._vkey(b), 0, worker=worker))
+                if cur_ver - pulled_versions[b] > self.config.max_staleness:
+                    continue
+            chunk = delta[sl]
+            if self.config.compress_int8:
+                q, scale = _quantize_int8(chunk, rng)
+                chunk = _dequantize_int8(q, scale)
+            # server-side range update (Redis EVAL analogue): atomic per block
+            self.kv.eval(self._bkey(b), lambda cur, c=chunk: cur + c, worker=worker)
+            self.kv.incr(self._vkey(b), 1, worker=worker)
+            applied += 1
+        return applied
+
+    def current(self, worker: str = "-") -> np.ndarray:
+        return self.pull(worker=worker)[0]
+
+
+def hogwild_sgd(
+    wex: WrenExecutor,
+    ps: ParameterServer,
+    grad_fn: Callable[[np.ndarray, Any], np.ndarray],
+    data_shards: Sequence[Any],
+    *,
+    steps_per_worker: int = 10,
+    lr: float = 0.1,
+    timeout_s: float = 300.0,
+) -> np.ndarray:
+    """Run HOGWILD! SGD: one stateless function per data shard, each doing
+    ``steps_per_worker`` async pull→grad→push iterations."""
+
+    def _worker_fn(arg: Tuple[int, Any]) -> float:
+        wid, shard = arg
+        rng = np.random.default_rng(wid)
+        last = 0.0
+        for _ in range(steps_per_worker):
+            params, vers = ps.pull(worker=f"psw{wid}")
+            g = grad_fn(params, shard)
+            ps.push_delta(-lr * g, vers, worker=f"psw{wid}", rng=rng)
+            last = float(np.linalg.norm(g))
+        return last
+
+    get_all(wex.map(_worker_fn, list(enumerate(data_shards))), timeout_s=timeout_s)
+    return ps.current()

@@ -1,0 +1,162 @@
+"""Global scheduler: queue, leases, retries, straggler speculation.
+
+The paper's architecture (Fig 1) has a *global scheduler* dispatching
+stateless functions to containers.  Scheduling state itself lives in the
+low-latency KV store (we eat our own dogfood: the scheduler is a KV-store
+client, not a stateful server — it can be restarted at any time and recover
+from storage, the same property the paper demands of workers).
+
+Fault tolerance model (paper §3.1):
+  * a worker takes a *lease* on a task (KV ``setnx``) with an expiry;
+  * while running it heartbeats (extends the lease);
+  * if the worker dies, the lease expires and ``reap()`` re-enqueues the
+    task; since results publish atomically, the retry is idempotent;
+  * *speculation*: tasks running much longer than the completed-task median
+    get a duplicate enqueued (the paper observed S3 stragglers in its word
+    count; speculative copies are PyWren-safe because of first-writer-wins).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.storage import KVStore, ObjectStore
+
+from .functions import TaskSpec
+
+_Q = "sched/queue"
+_LEASE = "sched/lease/"
+_ATTEMPTS = "sched/attempts/"
+_RUNNING = "sched/running"
+_DURATION = "sched/durations"
+
+
+@dataclass
+class SchedulerConfig:
+    lease_timeout_s: float = 1.0
+    max_attempts: int = 4
+    speculation_factor: float = 3.0  # duplicate tasks slower than f * median
+    min_completed_for_speculation: int = 5
+    heartbeat_interval_s: float = 0.2
+
+
+class Scheduler:
+    def __init__(
+        self,
+        kv: KVStore,
+        store: ObjectStore,
+        config: Optional[SchedulerConfig] = None,
+    ) -> None:
+        self.kv = kv
+        self.store = store
+        self.config = config or SchedulerConfig()
+        self._lock = threading.Lock()
+        # task_id -> spec, for requeue on reap (specs are tiny; the heavy
+        # payloads live behind input/func keys in the object store).
+        self._specs: Dict[str, TaskSpec] = {}
+        self._speculated: set = set()
+
+    # ---- submission -----------------------------------------------------
+    def submit(self, task: TaskSpec) -> None:
+        with self._lock:
+            self._specs[task.task_id] = task
+        self.kv.rpush(_Q, task, worker="scheduler")
+
+    def submit_many(self, tasks: List[TaskSpec]) -> None:
+        with self._lock:
+            for t in tasks:
+                self._specs[t.task_id] = t
+        self.kv.rpush(_Q, *tasks, worker="scheduler")
+
+    # ---- worker protocol --------------------------------------------------
+    def lease_next(self, worker: str) -> Optional[TaskSpec]:
+        """Atomically pop a task and take its lease."""
+        while True:
+            task: Optional[TaskSpec] = self.kv.lpop(_Q, worker=worker)
+            if task is None:
+                return None
+            if self.store.backend.exists(task.result_key):
+                continue  # already done (speculative duplicate became moot)
+            attempts = self.kv.incr(_ATTEMPTS + task.task_id, 1, worker=worker)
+            if attempts > self.config.max_attempts:
+                continue  # dropped; driver will surface missing-result error
+            now = time.monotonic()
+            self.kv.set(
+                _LEASE + task.task_id,
+                {"worker": worker, "expires": now + self.config.lease_timeout_s,
+                 "started": now, "attempt": int(attempts) - 1},
+                worker=worker,
+            )
+            return task.retry() if attempts > 1 else task
+
+    def heartbeat(self, task: TaskSpec, worker: str) -> None:
+        def _extend(cur):
+            if cur is None:
+                return cur
+            cur = dict(cur)
+            cur["expires"] = time.monotonic() + self.config.lease_timeout_s
+            return cur
+
+        self.kv.eval(_LEASE + task.task_id, _extend, worker=worker)
+
+    def complete(self, task: TaskSpec, worker: str, duration_s: float) -> None:
+        self.kv.delete(_LEASE + task.task_id, worker=worker)
+        self.kv.rpush(_DURATION, duration_s, worker=worker)
+
+    # ---- control loop -----------------------------------------------------
+    def reap(self) -> int:
+        """Re-enqueue tasks whose lease expired (worker death). Returns count."""
+        n = 0
+        now = time.monotonic()
+        with self._lock:
+            specs = dict(self._specs)
+        for task_id, spec in specs.items():
+            if self.store.backend.exists(spec.result_key):
+                continue
+            lease = self.kv.get(_LEASE + task_id, worker="scheduler")
+            if lease is not None and lease["expires"] < now:
+                self.kv.delete(_LEASE + task_id, worker="scheduler")
+                self.kv.rpush(_Q, spec, worker="scheduler")
+                n += 1
+        return n
+
+    def speculate(self) -> int:
+        """Enqueue duplicates of straggling tasks. Returns count."""
+        durations: List[float] = self.kv.lrange(_DURATION, worker="scheduler")
+        if len(durations) < self.config.min_completed_for_speculation:
+            return 0
+        med = sorted(durations)[len(durations) // 2]
+        threshold = max(self.config.speculation_factor * med, 1e-3)
+        n = 0
+        now = time.monotonic()
+        with self._lock:
+            specs = dict(self._specs)
+        for task_id, spec in specs.items():
+            if task_id in self._speculated:
+                continue
+            if self.store.backend.exists(spec.result_key):
+                continue
+            lease = self.kv.get(_LEASE + task_id, worker="scheduler")
+            if lease is None:
+                continue
+            if now - lease["started"] > threshold:
+                self._speculated.add(task_id)
+                self.kv.rpush(_Q, spec, worker="scheduler")
+                n += 1
+        return n
+
+    def pending(self) -> int:
+        with self._lock:
+            specs = dict(self._specs)
+        return sum(
+            0 if self.store.backend.exists(s.result_key) else 1 for s in specs.values()
+        )
+
+    def queue_depth(self) -> int:
+        return self.kv.llen(_Q, worker="scheduler")
+
+    def attempts(self, task: TaskSpec) -> int:
+        return int(self.kv.get(_ATTEMPTS + task.task_id, 0, worker="scheduler"))

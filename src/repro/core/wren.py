@@ -1,0 +1,106 @@
+"""Public API: the PyWren surface.
+
+    wex = WrenExecutor(num_workers=32)
+    futures = wex.map(my_function, my_list)
+    results = wren.get_all(futures)
+
+``map`` launches one stateless function per element ("Calling map launches
+as many stateless functions as there are elements in the list") and mirrors
+Python's native map API.  The executor owns a control loop that reaps dead
+workers' leases and speculates on stragglers until the job drains.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+
+from repro.storage import KVStore, ObjectStore
+
+from .executor import FaultPlan, WorkerPool
+from .functions import FunctionSpec, TaskSpec, stage_input
+from .futures import ALL_COMPLETED, ResultFuture, get_all, wait
+from .resources import LAMBDA_2017, ResourceLimits
+from .scheduler import Scheduler, SchedulerConfig
+
+
+class WrenExecutor:
+    def __init__(
+        self,
+        store: Optional[ObjectStore] = None,
+        kv: Optional[KVStore] = None,
+        num_workers: int = 8,
+        limits: ResourceLimits = LAMBDA_2017,
+        scheduler_config: Optional[SchedulerConfig] = None,
+        fault_plan: Optional[FaultPlan] = None,
+        compute_time_fn: Optional[Callable[[float], float]] = None,
+        seed: int = 0,
+    ) -> None:
+        self.store = store or ObjectStore()
+        self.kv = kv or KVStore(num_shards=2)
+        self.scheduler = Scheduler(self.kv, self.store, scheduler_config)
+        self.pool = WorkerPool(
+            self.store,
+            self.scheduler,
+            num_workers,
+            limits=limits,
+            fault_plan=fault_plan,
+            compute_time_fn=compute_time_fn,
+            seed=seed,
+        )
+        self._control_stop = threading.Event()
+        self._control = threading.Thread(target=self._control_loop, daemon=True)
+        self._control.start()
+
+    # ---- control loop: reap + speculate --------------------------------
+    def _control_loop(self) -> None:
+        while not self._control_stop.is_set():
+            try:
+                self.scheduler.reap()
+                self.scheduler.speculate()
+            except Exception:  # noqa: BLE001 — control loop must survive
+                pass
+            self._control_stop.wait(0.05)
+
+    # ---- the paper's API -------------------------------------------------
+    def map(
+        self,
+        fn: Callable[[Any], Any],
+        items: Iterable[Any],
+        *,
+        job_id: Optional[str] = None,
+    ) -> List[ResultFuture]:
+        """One stateless function invocation per item."""
+        job = job_id or f"job-{uuid.uuid4().hex[:8]}"
+        func = FunctionSpec.register(self.store, fn, worker="driver")
+        tasks: List[TaskSpec] = []
+        for i, item in enumerate(items):
+            input_key = stage_input(self.store, job, item, worker="driver")
+            tasks.append(TaskSpec.make(job, func, input_key, i))
+        self.scheduler.submit_many(tasks)
+        return [ResultFuture(self.store, t) for t in tasks]
+
+    def call_async(self, fn: Callable[[Any], Any], arg: Any) -> ResultFuture:
+        return self.map(fn, [arg])[0]
+
+    def map_get(
+        self, fn: Callable[[Any], Any], items: Iterable[Any], timeout_s: float = 120.0
+    ) -> List[Any]:
+        return get_all(self.map(fn, items), timeout_s=timeout_s)
+
+    # ---- elasticity -----------------------------------------------------
+    def scale_to(self, n: int) -> None:
+        self.pool.scale_to(n)
+
+    # ---- lifecycle ------------------------------------------------------
+    def shutdown(self) -> None:
+        self._control_stop.set()
+        self.pool.stop_all()
+
+    def __enter__(self) -> "WrenExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,5 @@
+"""Deterministic data pipeline (stateless-training contract)."""
+
+from .pipeline import DataConfig, make_documents, shard_corpus, synthetic_batch, tokenize_line
+
+__all__ = ["DataConfig", "synthetic_batch", "make_documents", "shard_corpus", "tokenize_line"]

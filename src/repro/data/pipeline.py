@@ -1,0 +1,116 @@
+"""Deterministic data pipeline.
+
+Training batches MUST be a pure function of the step index for the stateless
+training contract to hold (idempotent re-execution).  We use a counter-mode
+PRNG (threefry via jax.random, keyed by (seed, step)) over a synthetic
+Zipf-ish corpus, plus a real-text path that tokenizes documents stored in
+the object store (used by the word-count/featurization benchmarks and the
+e2e example).
+
+Also provides `shard_corpus`: split documents into object-store partitions,
+the input format of the BSP jobs.
+"""
+
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.storage import ObjectStore
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    seed: int = 0
+    zipf_a: float = 1.2  # skew of the synthetic token distribution
+
+
+def synthetic_batch(dcfg: DataConfig, step: int, cfg: Optional[ModelConfig] = None) -> Dict[str, jnp.ndarray]:
+    """Pure function of (config, step): (tokens, labels) + modality stubs.
+
+    Tokens follow a noisy affine Markov chain — next = (31*cur + 17) mod V
+    with prob ~0.85, else a zipf-skewed random draw — so there is real,
+    learnable sequence structure at any vocab size (a pure-zipf stream is
+    nearly uniform for large V and gives models nothing to learn)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(dcfg.seed), step)
+    B, S, V = dcfg.global_batch, dcfg.seq_len, dcfg.vocab_size
+    k1, k2, k3 = jax.random.split(key, 3)
+    # Zipf-ish random draws: exponentiate uniform to skew token ids low
+    u = jax.random.uniform(k1, (B, S + 1), minval=1e-6, maxval=1.0)
+    rand_toks = jnp.minimum((u ** dcfg.zipf_a * V).astype(jnp.int32), V - 1)
+    keep = jax.random.uniform(k2, (B, S + 1)) < 0.85
+    x0 = jax.random.randint(k3, (B,), 0, V)
+
+    def chain(x, inp):
+        r, k = inp
+        nxt = jnp.where(k, (31 * x + 17) % V, r)
+        return nxt, nxt
+
+    _, seq = jax.lax.scan(chain, x0, (rand_toks.T, keep.T))
+    tokens_all = seq.T  # (B, S+1)
+    batch: Dict[str, jnp.ndarray] = {
+        "tokens": tokens_all[:, :S],
+        "labels": tokens_all[:, 1:],
+    }
+    if cfg is not None and cfg.frontend == "vision_stub":
+        kp = jax.random.fold_in(key, 1)
+        batch["prefix_embed"] = (
+            jax.random.normal(kp, (B, cfg.num_prefix_tokens, cfg.d_model)) * 0.02
+        )
+    if cfg is not None and cfg.family == "encdec":
+        ka = jax.random.fold_in(key, 2)
+        batch["audio_frames"] = (
+            jax.random.normal(ka, (B, cfg.encoder_seq, cfg.d_model)) * 0.02
+        )
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# text corpus utilities (benchmarks / examples)
+# ---------------------------------------------------------------------------
+
+_WORDS = (
+    "the quick brown fox jumps over lazy dog cloud lambda function stateless "
+    "storage elastic server data process compute worker map reduce shuffle "
+    "model train serve batch token layer attention expert state scan kernel"
+).split()
+
+
+def make_documents(n_docs: int, lines_per_doc: int, seed: int = 0) -> List[List[str]]:
+    rng = np.random.default_rng(seed)
+    docs = []
+    for _ in range(n_docs):
+        lines = []
+        for _ in range(lines_per_doc):
+            n = rng.integers(4, 12)
+            lines.append(" ".join(rng.choice(_WORDS, size=n)))
+        docs.append(lines)
+    return docs
+
+
+def shard_corpus(
+    store: ObjectStore, prefix: str, docs: Sequence[List[str]]
+) -> List[str]:
+    keys = []
+    for i, doc in enumerate(docs):
+        key = f"{prefix}/doc{i:06d}"
+        store.put(key, list(doc))
+        keys.append(key)
+    return keys
+
+
+def tokenize_line(line: str, vocab_size: int) -> List[int]:
+    """Stable hash tokenizer (featurization stand-in)."""
+    return [
+        int.from_bytes(hashlib.sha1(w.encode()).digest()[:4], "little") % vocab_size
+        for w in line.split()
+    ]

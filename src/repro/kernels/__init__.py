@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for the model zoo's compute hot spots.
+
+The paper (PyWren) has no kernel-level contribution — its contribution is the
+runtime.  Kernels here serve the assigned architectures: flash attention
+(+GQA/window/softcap), decode attention, Mamba2 SSD chunked scan, and the
+mLSTM parallel cell.  Each has a pure-jnp oracle in ref.py and a jit-able
+dispatcher in ops.py.
+"""
+
+from . import ops, ref
+from .decode_attention import decode_attention_pallas
+from .flash_attention import flash_attention_pallas
+from .mamba2_ssd import ssd_pallas
+from .mlstm_kernel import mlstm_pallas
+
+__all__ = [
+    "ops",
+    "ref",
+    "flash_attention_pallas",
+    "decode_attention_pallas",
+    "ssd_pallas",
+    "mlstm_pallas",
+]

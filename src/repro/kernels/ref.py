@@ -1,0 +1,326 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the ground truth for kernel tests (assert_allclose against
+interpret-mode Pallas) AND the CPU execution path: this container has no TPU,
+so models run these references; `ops.py` dispatches per platform.
+
+All references are written naively (full materialization) for auditability —
+scalability is the kernels' job, correctness is this file's job.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None or cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def mha_reference(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, K, D)   K divides H (GQA)
+    v: jnp.ndarray,  # (B, Sk, K, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window (None = full)
+    logit_cap: Optional[float] = None,
+    q_offset: int = 0,  # absolute position of q[0] (decode: cache length)
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Naive attention with GQA head grouping, causal/sliding masks, softcap."""
+    B, Sq, H, D = q.shape
+    _, Sk, K, _ = k.shape
+    assert H % K == 0, (H, K)
+    group = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # expand kv heads to q heads
+    k = jnp.repeat(k, group, axis=2)  # (B, Sk, H, D)
+    v = jnp.repeat(v, group, axis=2)
+
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q * scale, k)
+    logits = softcap(logits, logit_cap)
+
+    q_pos = jnp.arange(Sq)[:, None] + q_offset  # (Sq, 1)
+    k_pos = jnp.arange(Sk)[None, :]  # (1, Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None and window > 0:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def decode_attention_reference(
+    q: jnp.ndarray,  # (B, H, D)          one new token
+    k_cache: jnp.ndarray,  # (B, S, K, D)
+    v_cache: jnp.ndarray,  # (B, S, K, D)
+    cache_len: jnp.ndarray,  # (B,) int32 valid lengths
+    *,
+    logit_cap: Optional[float] = None,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """GQA handled by reshaping q to (B, K, G, D) — the KV cache is NEVER
+    materialized with repeated heads (a repeat would change the divisible
+    head count and make SPMD reshard a sequence-sharded cache: an
+    all-gather of the whole cache per layer)."""
+    B, H, D = q.shape
+    _, S, K, _ = k_cache.shape
+    group = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, K, group, D)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    logits = softcap(logits, logit_cap)
+    pos = jnp.arange(S)[None, :]  # (1, S)
+    valid = pos < cache_len[:, None]
+    if window is not None and window > 0:
+        valid &= pos > (cache_len[:, None] - 1 - window)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs.astype(q.dtype), v_cache)
+    return out.reshape(B, H, D)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD (state-space dual) chunked scan
+# ---------------------------------------------------------------------------
+
+def ssd_reference(
+    x: jnp.ndarray,  # (B, S, H, P)   inputs per head
+    dt: jnp.ndarray,  # (B, S, H)      softplus'd timestep
+    A: jnp.ndarray,  # (H,)           negative decay rate  (A < 0)
+    Bmat: jnp.ndarray,  # (B, S, G, N)   input matrix  (G groups broadcast to H)
+    Cmat: jnp.ndarray,  # (B, S, G, N)   output matrix
+    D: Optional[jnp.ndarray] = None,  # (H,) skip connection
+    *,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+    return_state: bool = False,
+):
+    """Sequential (exact) SSD recurrence:
+        h_t = exp(A*dt_t) * h_{t-1} + dt_t * B_t x_t^T
+        y_t = C_t . h_t  (+ D*x)
+    Shapes follow Mamba2: per-head state (P, N)."""
+    Bz, S, H, P = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bmat, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cmat, rep, axis=2)
+
+    decay = jnp.exp(A[None, None, :] * dt)  # (B,S,H)
+
+    def step(h, inp):
+        x_t, dt_t, dec_t, b_t, c_t = inp
+        # h: (B,H,P,N)
+        h = h * dec_t[..., None, None] + (dt_t[..., None, None] * x_t[..., None]) * b_t[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    h0 = (
+        init_state
+        if init_state is not None
+        else jnp.zeros((Bz, H, P, N), dtype=jnp.float32)
+    )
+    xs = (
+        x.swapaxes(0, 1).astype(jnp.float32),
+        dt.swapaxes(0, 1).astype(jnp.float32),
+        decay.swapaxes(0, 1).astype(jnp.float32),
+        Bh.swapaxes(0, 1).astype(jnp.float32),
+        Ch.swapaxes(0, 1).astype(jnp.float32),
+    )
+    h_final, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1)  # (B,S,H,P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, h_final
+    return y
+
+
+def ssd_chunked_reference(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bmat: jnp.ndarray,
+    Cmat: jnp.ndarray,
+    D: Optional[jnp.ndarray] = None,
+    *,
+    chunk: int = 64,
+    init_state: Optional[jnp.ndarray] = None,
+    return_state: bool = False,
+):
+    """Matmul-form chunked SSD (the algorithm the Pallas kernel implements):
+    within-chunk quadratic attention-like term + cross-chunk state recurrence.
+    Mathematically identical to `ssd_reference` (fp32 accumulation)."""
+    Bz, S, H, P = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    rep = H // G
+
+    xf = x.astype(jnp.float32).reshape(Bz, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bz, nc, chunk, H)
+    Bh = jnp.repeat(Bmat, rep, axis=2).astype(jnp.float32).reshape(Bz, nc, chunk, H, N)
+    Ch = jnp.repeat(Cmat, rep, axis=2).astype(jnp.float32).reshape(Bz, nc, chunk, H, N)
+
+    a = A[None, None, None, :] * dtf  # (B,nc,c,H) log-decay increments
+    a_cum = jnp.cumsum(a, axis=2)  # inclusive cumsum within chunk
+    a_total = a_cum[:, :, -1, :]  # (B,nc,H)
+
+    # within-chunk: y_intra[t] = sum_{s<=t} C_t B_s^T exp(a_cum[t]-a_cum[s]) dt_s x_s
+    seg = a_cum[:, :, :, None, :] - a_cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bnthk,bnshk->bntsh", Ch, Bh)  # (B,nc,t,s,H)
+    scores = cb * L  # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bntsh,bnsh,bnshp->bnthp", scores, dtf, xf)
+
+    # chunk states: h_chunk = sum_s exp(a_total - a_cum[s]) dt_s B_s x_s^T
+    decay_to_end = jnp.exp(a_total[:, :, None, :] - a_cum)  # (B,nc,c,H)
+    chunk_state = jnp.einsum(
+        "bnch,bnch,bnchk,bnchp->bnhpk", decay_to_end, dtf, Bh, xf
+    )
+
+    # cross-chunk recurrence over nc
+    def step(h, inp):
+        a_tot, st = inp  # (B,H), (B,H,P,N)
+        h_new = h * jnp.exp(a_tot)[:, :, None, None] + st
+        return h_new, h  # emit state *entering* the chunk
+
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((Bz, H, P, N), jnp.float32)
+    )
+    h_final, h_in = jax.lax.scan(
+        step,
+        h0,
+        (a_total.swapaxes(0, 1), chunk_state.swapaxes(0, 1)),
+    )
+    h_in = h_in.swapaxes(0, 1)  # (B,nc,H,P,N) state entering each chunk
+
+    # inter-chunk contribution: y_inter[t] = C_t exp(a_cum[t]) h_in
+    y_inter = jnp.einsum("bnch,bnchk,bnhpk->bnchp", jnp.exp(a_cum), Ch, h_in)
+    y = (y_intra + y_inter).reshape(Bz, S, H, P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, h_final
+    return y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell), parallel stabilized form
+# ---------------------------------------------------------------------------
+
+def mlstm_reference(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, H, D)
+    v: jnp.ndarray,  # (B, S, H, D)
+    i_gate: jnp.ndarray,  # (B, S, H) input-gate preactivation
+    f_gate: jnp.ndarray,  # (B, S, H) forget-gate preactivation
+) -> jnp.ndarray:
+    """Stabilized parallel mLSTM (xLSTM eq. 19-27):
+        D_ts = exp(logsig-cumsum(f)[t] - ..[s] + i_s - m_t), lower-triangular
+        out  = (QK^T/sqrt(d) * D) V / max(|row-sum|, exp(-m_t))
+    """
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    logf = jax.nn.log_sigmoid(f_gate.astype(jnp.float32))  # (B,S,H)
+    F = jnp.cumsum(logf, axis=1)
+    # log decay matrix: F[t] - F[s] + i[s]  for s<=t
+    dmat = F[:, :, None, :] - F[:, None, :, :] + i_gate.astype(jnp.float32)[:, None, :, :]
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+    m = jnp.max(dmat, axis=2, keepdims=True)  # (B,S,1,H) row max
+    dprime = jnp.exp(dmat - m)
+    scores = jnp.einsum("bthd,bshd->btsh", q, k).astype(jnp.float32) * scale
+    weights = scores * dprime
+    denom = jnp.maximum(
+        jnp.abs(jnp.sum(weights, axis=2, keepdims=True)), jnp.exp(-m)
+    )  # (B,S,1,H)
+    out = jnp.einsum("btsh,bshd->bthd", weights / denom, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def mlstm_recurrent_step(
+    c: jnp.ndarray,  # (B, H, D, D) matrix memory
+    n: jnp.ndarray,  # (B, H, D) normalizer
+    m: jnp.ndarray,  # (B, H) stabilizer
+    q_t: jnp.ndarray,  # (B, H, D)
+    k_t: jnp.ndarray,
+    v_t: jnp.ndarray,
+    i_t: jnp.ndarray,  # (B, H)
+    f_t: jnp.ndarray,  # (B, H)
+) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    """O(1) decode step for the mLSTM cell (long_500k path)."""
+    D = q_t.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    logf = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+    m_new = jnp.maximum(logf + m, i_t.astype(jnp.float32))
+    fgate = jnp.exp(logf + m - m_new)
+    igate = jnp.exp(i_t.astype(jnp.float32) - m_new)
+    c_new = fgate[..., None, None] * c + igate[..., None, None] * (
+        v_t.astype(jnp.float32)[..., :, None] * k_t.astype(jnp.float32)[..., None, :]
+    )
+    n_new = fgate[..., None] * n + igate[..., None] * k_t.astype(jnp.float32)
+    h_num = jnp.einsum("bhvk,bhk->bhv", c_new, q_t.astype(jnp.float32) * scale)
+    h_den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q_t.astype(jnp.float32) * scale)),
+        jnp.exp(-m_new),
+    )
+    h = h_num / h_den[..., None]
+    return (c_new, n_new, m_new), h.astype(q_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory recurrent cell with exponential gating)
+# ---------------------------------------------------------------------------
+
+def slstm_reference(
+    x: jnp.ndarray,  # (B, S, H, D) pre-projected inputs (per gate computed outside)
+    gates_x: jnp.ndarray,  # (B, S, H, D, 4) input contributions to i,f,z,o
+    r_kernel: jnp.ndarray,  # (H, D, D, 4) block-diagonal recurrent weights
+    init: Optional[Tuple[jnp.ndarray, ...]] = None,
+) -> jnp.ndarray:
+    """sLSTM with exponential input gate, sigmoid/exp forget gate, stabilizer
+    state (xLSTM eq. 7-18).  Strictly sequential: lax.scan over time."""
+    B, S, H, D = x.shape
+
+    def step(carry, gx_t):
+        c, n, m, h = carry  # each (B,H,D) except m (B,H,D)
+        rec = jnp.einsum("bhd,hdke->bhke", h, r_kernel)  # (B,H,D,4)
+        pre = gx_t + rec
+        i_t = pre[..., 0]
+        f_t = pre[..., 1]
+        z_t = jnp.tanh(pre[..., 2])
+        o_t = jax.nn.sigmoid(pre[..., 3])
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        igate = jnp.exp(i_t - m_new)
+        fgate = jnp.exp(logf + m - m_new)
+        c_new = fgate * c + igate * z_t
+        n_new = fgate * n + igate
+        h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    zeros = jnp.zeros((B, H, D), jnp.float32)
+    carry0 = init if init is not None else (zeros, zeros, zeros - 1e9, zeros)
+    gx = gates_x.swapaxes(0, 1).astype(jnp.float32)  # (S,B,H,D,4)
+    _, hs = jax.lax.scan(step, carry0, gx)
+    return hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,H,D)

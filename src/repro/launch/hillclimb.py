@@ -1,0 +1,74 @@
+"""§Perf hillclimb driver: re-analyze a dry-run cell under optimization
+variants and log hypothesis → change → before/after.
+
+Variants are environment/kwarg levers over the SAME model code:
+  axis=tp_model|fsdp_all      logical axis mapping (TP16 vs pure ZeRO-3)
+  sp=0|1                      Megatron sequence-parallel residual stream
+  remat=nothing|dots|none     activation checkpoint policy
+  mb=N                        gradient-accumulation microbatches
+  moe_group=N                 MoE dispatch group size
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch llama3-8b \
+      --shape train_4k --variant axis=fsdp_all --variant sp=1
+Each run writes reports/perf/<cell>__<variant-string>.json.
+"""
+
+import argparse
+import json
+import os
+
+# env must be set before jax device init (dryrun sets XLA_FLAGS on import)
+from repro.launch import dryrun  # noqa: E402  (imports first: sets XLA_FLAGS)
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "reports", "perf")
+
+
+def apply_variant(tokens):
+    kw = {}
+    tags = []
+    for t in tokens:
+        key, val = t.split("=", 1)
+        if key == "axis":
+            os.environ["REPRO_AXIS_MAP"] = val
+        elif key == "sp":
+            os.environ["REPRO_SEQ_PARALLEL"] = val
+        elif key == "remat":
+            os.environ["REPRO_REMAT_POLICY"] = val
+        elif key == "ce":
+            os.environ["REPRO_FUSED_CE"] = "1" if val == "fused" else "0"
+        elif key == "pbf16":
+            os.environ["REPRO_ATTN_P_BF16"] = val
+        elif key == "mb":
+            kw["microbatches"] = int(val)
+        elif key == "moe_group":
+            kw["moe_group"] = int(val)
+        else:
+            raise ValueError(f"unknown variant key {key}")
+        tags.append(f"{key}-{val}")
+    return kw, "_".join(tags) if tags else "baseline"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--variant", action="append", default=[])
+    args = ap.parse_args()
+
+    kw, tag = apply_variant(args.variant)
+    out = dryrun.analyze_cell(args.arch, args.shape, multi_pod=args.multipod, **kw)
+    out["variant"] = tag
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    mesh_name = "2x16x16" if args.multipod else "16x16"
+    path = os.path.join(
+        REPORT_DIR, f"{args.arch}__{args.shape}__{mesh_name}__{tag}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

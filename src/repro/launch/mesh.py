@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun.py forces 512).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(dp: int, tp: int, pods: int = 1):
+    """Arbitrary mesh for experiments / elastic remesh."""
+    if pods > 1:
+        return jax.make_mesh((pods, dp, tp), ("pod", "data", "model"))
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def mesh_num_devices(mesh) -> int:
+    return mesh.devices.size

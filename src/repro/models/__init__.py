@@ -1,0 +1,23 @@
+"""Model zoo: composable JAX definitions for the assigned architectures."""
+
+from . import attention, layers, mamba2, mla, model, moe, sharding, transformer, xlstm
+from .model import decode_step, forward, forward_hidden, head_weight, init_cache, init_params, prefill
+
+__all__ = [
+    "attention",
+    "layers",
+    "mamba2",
+    "mla",
+    "model",
+    "moe",
+    "sharding",
+    "transformer",
+    "xlstm",
+    "init_params",
+    "forward",
+    "forward_hidden",
+    "head_weight",
+    "init_cache",
+    "prefill",
+    "decode_step",
+]

@@ -1,0 +1,206 @@
+"""GQA/MHA attention block: train (full), prefill (cache fill), decode
+(single token), optional cross-attention (enc-dec).
+
+KV-cache layout per layer: {"k": (B, Smax, K, hd), "v": (B, Smax, K, hd)};
+`cache_len` is a scalar (aligned batched serving).  Sharding: batch over dp.
+For the cache's head dim: if K % tp == 0 heads shard over tp; otherwise the
+*sequence* dim shards over tp and the decode softmax reductions become
+all-reduces (flash-decoding across the model axis) — handled purely by
+sharding constraints, see `cache_logical_spec`.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+from . import layers
+from .cache_update import write_row, write_segment
+from .layers import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init
+from .sharding import DP, TP, current_mesh, shard
+
+
+def attn_init(
+    key,
+    cfg: ModelConfig,
+    *,
+    q_in_dim: Optional[int] = None,
+    kv_in_dim: Optional[int] = None,
+    dtype=jnp.float32,
+) -> Params:
+    D = cfg.d_model
+    qd = q_in_dim or D
+    kvd = kv_in_dim or D
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "wq": dense_init(ks[0], qd, H, hd, dtype=dtype),
+        "wk": dense_init(ks[1], kvd, K, hd, dtype=dtype),
+        "wv": dense_init(ks[2], kvd, K, hd, dtype=dtype),
+        "wo": dense_init(ks[3], H, hd, D, dtype=dtype),
+    }
+    if cfg.attn_bias:
+        p["wq_b"] = jnp.zeros((H, hd), dtype)
+        p["wk_b"] = jnp.zeros((K, hd), dtype)
+        p["wv_b"] = jnp.zeros((K, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def init_kv_cache(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> Dict[str, jnp.ndarray]:
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((batch, max_len, K, hd), dtype),
+    }
+
+
+def _dp_size() -> int:
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    import numpy as _np
+
+    return int(_np.prod([mesh.shape[a] for a in ("pod", "data") if a in mesh.axis_names]) or 1)
+
+
+def cache_logical_spec(cfg: ModelConfig, tp_size: int, batch: int) -> Tuple:
+    """(B, S, K, hd) logical axes for the KV cache.  Must agree with
+    launch/shardings.py:cache_pspec."""
+    dp_n = _dp_size()
+    heads_ok = tp_size and cfg.n_kv_heads % tp_size == 0
+    if batch % max(dp_n, 1) == 0 and batch >= dp_n:
+        return (DP, None, TP, None) if heads_ok else (DP, TP, None, None)
+    # tiny batch (long-context decode): shard the sequence dim
+    return (None, DP, TP, None) if heads_ok else (None, (DP, TP), None, None)
+
+
+def _project_qkv(p: Params, xq: jnp.ndarray, xkv: jnp.ndarray, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"])
+    if cfg.attn_bias:
+        q = q + p["wq_b"][None, None]
+        k = k + p["wk_b"][None, None]
+        v = v + p["wv_b"][None, None]
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], eps=cfg.rms_eps)
+        k = rmsnorm(k, p["k_norm"], eps=cfg.rms_eps)
+    return q, k, v
+
+
+def _tp_size() -> int:
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return 0
+    return mesh.shape["model"]
+
+
+def attn_apply(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,  # (S,) absolute positions
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_len: Optional[jnp.ndarray] = None,  # scalar int32
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # encoder k, v
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (out, updated_cache)."""
+    B, S, D = x.shape
+    tp = _tp_size()
+    scale = cfg.attn_scale if cfg.attn_scale is not None else 1.0 / math.sqrt(cfg.hd)
+
+    if cross_kv is not None:
+        # cross-attention: kv precomputed from encoder (no cache update here)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        if cfg.attn_bias:
+            q = q + p["wq_b"][None, None]
+        k, v = cross_kv
+        out = ops.flash_attention(q, k, v, causal=False, scale=scale)
+        out = shard(out, DP, None, TP, None)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+
+    q, k, v = _project_qkv(p, x, x, cfg)
+    if use_rope and cfg.pos_embedding == "rope":
+        if positions is None:
+            positions = jnp.arange(S)
+        q = apply_rope(q, positions[None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    q = shard(q, DP, None, TP, None)
+
+    if cache is None:
+        # train / no-cache prefill
+        out = ops.flash_attention(
+            q, k, v,
+            causal=causal,
+            window=window,
+            logit_cap=cfg.attn_softcap,
+            scale=scale,
+        )
+        out = shard(out, DP, None, TP, None)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), None
+
+    spec = cache_logical_spec(cfg, tp, B)
+    # seq-dim sharded caches cannot take dynamic_update_slice at a traced
+    # index (SPMD would all-gather the cache); use local masked writes
+    dus_ok = spec[1] is None
+    if S > 1:
+        # lay fresh k/v out like the cache BEFORE the update — otherwise SPMD
+        # falls back to replicate-then-repartition around dynamic_update_slice
+        k = shard(k, *spec)
+        v = shard(v, *spec)
+    if S == 1:
+        # decode: append then attend against cache
+        new_k = write_row(cache["k"], k, cache_len, dus_ok=dus_ok)
+        new_v = write_row(cache["v"], v, cache_len, dus_ok=dus_ok)
+        new_k = shard(new_k, *spec)
+        new_v = shard(new_v, *spec)
+        out = ops.decode_attention(
+            q[:, 0],
+            new_k,
+            new_v,
+            jnp.full((B,), cache_len + 1, jnp.int32),
+            logit_cap=cfg.attn_softcap,
+            window=window,
+            scale=scale,
+        )[:, None]  # (B, 1, H, hd)
+    else:
+        # prefill: write the whole segment, attend causally within it
+        new_k = write_segment(cache["k"], k, cache_len, dus_ok=dus_ok)
+        new_v = write_segment(cache["v"], v, cache_len, dus_ok=dus_ok)
+        new_k = shard(new_k, *spec)
+        new_v = shard(new_v, *spec)
+        out = ops.flash_attention(
+            q, k, v,
+            causal=causal,
+            window=window,
+            logit_cap=cfg.attn_softcap,
+            q_offset=0,
+            scale=scale,
+        )
+    out = shard(out, DP, None, TP, None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), {"k": new_k, "v": new_v}
+
+
+def cross_kv_init(p: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    """Precompute encoder K/V for decoder cross-attention layers."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.attn_bias:
+        k = k + p["wk_b"][None, None]
+        v = v + p["wv_b"][None, None]
+    return k, v

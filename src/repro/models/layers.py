@@ -1,0 +1,142 @@
+"""Common neural-net layers (pure-functional, pytree params).
+
+Everything takes/returns plain jnp arrays; params are nested dicts of
+arrays.  Initializers return (params, apply) separation is avoided — each
+layer exposes `init_*` and a pure `*_apply` so layers compose under scan /
+remat / shard_map without framework machinery.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+from repro.util import scan_unroll  # noqa: F401  (re-export)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, *out_dims: int, dtype=jnp.float32, scale: Optional[float] = None):
+    shape = (in_dim, *out_dims)
+    fan_out = math.prod(out_dims)
+    std = scale if scale is not None else (2.0 / (in_dim + fan_out)) ** 0.5
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, dim)) * dim**-0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.zeros((dim,), dtype)  # stored as offset-from-1 (gemma) or raw
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, *, eps: float = 1e-6, offset: bool = True) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    scale = (1.0 + w.astype(jnp.float32)) if offset else w.astype(jnp.float32)
+    return (xn * scale).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,  # (..., S, H, D) or (..., H, D) with positions given
+    positions: jnp.ndarray,  # broadcastable to (..., S)
+    theta: float,
+) -> jnp.ndarray:
+    """Rotary embedding over the last dim (pairs split as [0:D/2], [D/2:D])."""
+    D = x.shape[-1]
+    freqs = rope_frequencies(D, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., : D // 2], x[..., D // 2 :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "w_up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "w_down": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    fn = jax.nn.silu if act == "silu" else (lambda v: jax.nn.gelu(v, approximate=True))
+    gate = fn(x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None or cap <= 0:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def causal_conv1d(
+    x: jnp.ndarray,  # (B, S, C)
+    kernel: jnp.ndarray,  # (K, C) depthwise
+    bias: Optional[jnp.ndarray] = None,
+    state: Optional[jnp.ndarray] = None,  # (B, K-1, C) left context (decode)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv; returns (y, new_state)."""
+    K = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    # cache states may live in a different dtype (fp32 cache, bf16 compute);
+    # concat must not promote the activation dtype
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+K-1, C)
+    # depthwise conv as sum of shifted scalings (K is tiny: 4)
+    S = x.shape[1]
+    y = sum(xp[:, i : i + S, :] * kernel[i][None, None, :] for i in range(K))
+    if bias is not None:
+        y = y + bias[None, None, :]
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else jnp.zeros_like(state)
+    return y, new_state
+
+
+def grouped_rmsnorm(x: jnp.ndarray, w: jnp.ndarray, n_groups: int, eps: float = 1e-6) -> jnp.ndarray:
+    """Per-group RMS norm over the channel dim (xLSTM/Mamba gated norm)."""
+    B, S, C = x.shape
+    xg = x.reshape(B, S, n_groups, C // n_groups).astype(jnp.float32)
+    var = jnp.mean(xg * xg, axis=-1, keepdims=True)
+    xn = (xg * jax.lax.rsqrt(var + eps)).reshape(B, S, C)
+    return (xn * (1.0 + w.astype(jnp.float32))).astype(x.dtype)

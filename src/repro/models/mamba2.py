@@ -1,0 +1,122 @@
+"""Mamba2 mixer block (Zamba2 backbone).
+
+in_proj fans out to [z | x | B | C | dt]; depthwise causal conv over
+[x|B|C]; SSD scan over heads (Pallas kernel / chunked jnp via ops.ssd_scan);
+gated RMSNorm; out_proj.  Decode keeps (conv_state, ssm_state) — O(1) per
+token, which is what makes the hybrid run `long_500k`.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+from .layers import Params, causal_conv1d, dense_init, grouped_rmsnorm
+from .sharding import DP, TP, residual_shard, shard
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.num_groups * s.state_dim
+    return s, d_in, n_heads, conv_dim
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    s, d_in, nh, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_in + 2 * s.num_groups * s.state_dim + nh
+    dt = jnp.exp(
+        jax.random.uniform(ks[1], (nh,)) * (jnp.log(s.dt_max) - jnp.log(s.dt_min))
+        + jnp.log(s.dt_min)
+    )
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], D, proj_out, dtype=dtype),
+        "conv_kernel": (jax.random.normal(ks[2], (s.conv_kernel, conv_dim)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gated_norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[3], d_in, D, dtype=dtype),
+    }
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+    }
+
+
+def mamba_state_spec() -> Dict[str, Tuple]:
+    return {"conv": (DP, None, TP), "ssm": (DP, TP, None, None)}
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    s, d_in, nh, _ = _dims(cfg)
+    gn = s.num_groups * s.state_dim
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : d_in + d_in + 2 * gn]
+    dt = zxbcdt[..., -nh:]
+    return z, xBC, dt
+
+
+def mamba2_apply(
+    p: Params,
+    x: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (out, new_state).  state=None -> train (no state carried)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    B, S, D = x.shape
+    gn = s.num_groups * s.state_dim
+
+    zxbcdt = x @ p["in_proj"]
+    zxbcdt = shard(zxbcdt, DP, None, TP)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = causal_conv1d(xBC, p["conv_kernel"], p["conv_bias"], conv_state)
+    xBC = jax.nn.silu(xBC)
+
+    xs = xBC[..., :d_in].reshape(B, S, nh, s.head_dim)
+    Bm = xBC[..., d_in : d_in + gn].reshape(B, S, s.num_groups, s.state_dim)
+    Cm = xBC[..., d_in + gn :].reshape(B, S, s.num_groups, s.state_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+
+    if state is not None and S == 1:
+        new_ssm, y = ops.ssd_decode_step(
+            state["ssm"], xs[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], p["D"]
+        )
+        y = y[:, None]  # (B, 1, nh, hd)
+    else:
+        new_ssm = None
+        if state is not None:  # prefill: one pass, state returned by the scan
+            y, new_ssm = ops.ssd_scan(
+                xs, dt, A, Bm, Cm, p["D"], chunk=s.chunk, return_state=True
+            )
+        else:
+            y = ops.ssd_scan(xs, dt, A, Bm, Cm, p["D"], chunk=s.chunk)
+
+    y = y.reshape(B, S, d_in)
+    y = grouped_rmsnorm(y * jax.nn.silu(z), p["gated_norm"], n_groups=s.num_groups, eps=cfg.rms_eps)
+    out = y @ p["out_proj"]
+    out = residual_shard(out)
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": new_ssm}
+    return out, new_state

@@ -1,0 +1,392 @@
+"""Model facade: init / forward / prefill / decode for every assigned arch.
+
+The batch dict carries family-specific inputs:
+  tokens          (B, S_text)  int32  — always present
+  prefix_embed    (B, P, D)            — vlm stub (precomputed patch embeds)
+  audio_frames    (B, S_enc, D)        — audio stub (precomputed frames)
+  labels          (B, S_text)  int32   — train mode (-1 = ignore)
+
+Caches are family-specific pytrees with a shared scalar "len".
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn
+from . import mamba2 as mb
+from . import mla as mla_mod
+from . import transformer as tfm
+from . import xlstm as xl
+from .layers import Params, dtype_of, embed_init, rmsnorm, rmsnorm_init, softcap
+from .sharding import DP, TP, residual_shard, shard
+
+Batch = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    p: Params = {
+        "embed": {"tok": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype=dt)},
+        "final_norm": rmsnorm_init(cfg.d_model, dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[1], cfg.d_model, cfg.vocab_size, dtype=dt)
+
+    if cfg.pos_embedding == "learned":
+        p["embed"]["pos"] = embed_init(ks[2], cfg.max_target_positions, cfg.d_model, dtype=dt)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["decoder"] = tfm.decoder_stage_init(ks[3], cfg, cfg.n_layers, use_moe=False, dtype=dt)
+    elif fam == "moe":
+        nd = cfg.moe.num_dense_layers
+        if nd:
+            p["dense_prefix"] = tfm.decoder_stage_init(ks[3], cfg, nd, use_moe=False, dtype=dt)
+        p["decoder"] = tfm.decoder_stage_init(ks[4], cfg, cfg.n_layers - nd, use_moe=True, dtype=dt)
+        if cfg.mtp_depth:
+            p["mtp"] = {
+                "proj": embed_init(ks[6], 2 * cfg.d_model, cfg.d_model, dtype=dt),
+                "block": tfm.decoder_layer_init(ks[7], cfg, use_moe=False, dtype=dt),
+                "norm": rmsnorm_init(cfg.d_model, dt),
+            }
+    elif fam == "hybrid":
+        p["decoder"] = tfm.hybrid_stage_init(ks[3], cfg, dtype=dt)
+    elif fam == "ssm":
+        p["decoder"] = tfm.xlstm_stage_init(ks[3], cfg, dtype=dt)
+    elif fam == "encdec":
+        p["enc_pos"] = embed_init(ks[5], cfg.encoder_seq, cfg.d_model, dtype=dt)
+        p["encoder"] = tfm.encoder_stage_init(ks[3], cfg, dtype=dt)
+        p["encoder_norm"] = rmsnorm_init(cfg.d_model, dt)
+        p["decoder"] = tfm.xdecoder_stage_init(ks[4], cfg, dtype=dt)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_tokens(p: Params, cfg: ModelConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.take(p["embed"]["tok"], tokens, axis=0)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model**0.5, h.dtype)
+    return h
+
+
+def _lm_logits(p: Params, cfg: ModelConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rmsnorm(h, p["final_norm"], eps=cfg.rms_eps)
+    w = p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = (h @ w).astype(jnp.float32)
+    logits = softcap(logits, cfg.final_softcap)
+    return shard(logits, DP, None, TP)
+
+
+def _assemble_input(
+    p: Params, cfg: ModelConfig, batch: Batch, *, offset: jnp.ndarray | int = 0
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (hidden (B,S,D), positions (S,))."""
+    tokens = batch["tokens"]
+    h = _embed_tokens(p, cfg, tokens)
+    if cfg.frontend == "vision_stub" and "prefix_embed" in batch:
+        h = jnp.concatenate([batch["prefix_embed"].astype(h.dtype), h], axis=1)
+    S = h.shape[1]
+    positions = jnp.arange(S) + offset
+    if cfg.pos_embedding == "learned":
+        idx = jnp.minimum(positions, p["embed"]["pos"].shape[0] - 1)
+        h = h + jnp.take(p["embed"]["pos"], idx, axis=0)[None]
+    h = residual_shard(h)
+    return h, positions
+
+
+# ---------------------------------------------------------------------------
+# backbone dispatch
+# ---------------------------------------------------------------------------
+
+def _backbone(
+    p: Params,
+    cfg: ModelConfig,
+    h: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    cache: Optional[Dict] = None,
+    cache_len: Optional[jnp.ndarray] = None,
+    enc_out: Optional[jnp.ndarray] = None,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Dict], jnp.ndarray]:
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "vlm"):
+        h, new_cache, aux = tfm.decoder_stage_apply(
+            p["decoder"], h, cfg,
+            positions=positions, cache=None if cache is None else cache["decoder"],
+            cache_len=cache_len, use_moe=False, remat=remat,
+        )
+        new_cache = None if new_cache is None else {"decoder": new_cache}
+    elif fam == "moe":
+        new_cache_d = {}
+        if "dense_prefix" in p:
+            h, nc0, a0 = tfm.decoder_stage_apply(
+                p["dense_prefix"], h, cfg,
+                positions=positions,
+                cache=None if cache is None else cache["dense_prefix"],
+                cache_len=cache_len, use_moe=False, remat=remat,
+            )
+            aux = aux + a0
+            if nc0 is not None:
+                new_cache_d["dense_prefix"] = nc0
+        h, nc1, a1 = tfm.decoder_stage_apply(
+            p["decoder"], h, cfg,
+            positions=positions,
+            cache=None if cache is None else cache["decoder"],
+            cache_len=cache_len, use_moe=True, remat=remat,
+        )
+        aux = aux + a1
+        if nc1 is not None:
+            new_cache_d["decoder"] = nc1
+        new_cache = new_cache_d or None
+    elif fam == "hybrid":
+        h, new_cache = tfm.hybrid_stage_apply(
+            p["decoder"], h, cfg,
+            positions=positions, cache=None if cache is None else cache["decoder"],
+            cache_len=cache_len, remat=remat,
+        )
+        new_cache = None if new_cache is None else {"decoder": new_cache}
+    elif fam == "ssm":
+        h, new_cache = tfm.xlstm_stage_apply(
+            p["decoder"], h, cfg,
+            cache=None if cache is None else cache["decoder"], remat=remat,
+        )
+        new_cache = None if new_cache is None else {"decoder": new_cache}
+    elif fam == "encdec":
+        h, new_cache = tfm.xdecoder_stage_apply(
+            p["decoder"], h, cfg,
+            enc_out=enc_out, positions=positions,
+            cache=None if cache is None else cache["decoder"],
+            cache_len=cache_len, remat=remat,
+        )
+        new_cache = None if new_cache is None else {"decoder": new_cache}
+    else:
+        raise ValueError(fam)
+    return h, new_cache, aux
+
+
+def _encode(p: Params, cfg: ModelConfig, batch: Batch, *, remat: bool = False) -> jnp.ndarray:
+    frames = batch["audio_frames"]  # (B, S_enc, D) — conv frontend stub
+    h = frames.astype(dtype_of(cfg.dtype)) + p["enc_pos"][None, : frames.shape[1]]
+    h = shard(h, DP, None, None)
+    h = tfm.encoder_stage_apply(p["encoder"], h, cfg, remat=remat)
+    return rmsnorm(h, p["encoder_norm"], eps=cfg.rms_eps)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def _forward_trunk(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Batch,
+    *,
+    remat: bool = False,
+):
+    """Shared trunk: returns (h_final (pre-final-norm), aux, h_mtp or None)."""
+    enc_out = _encode(p, cfg, batch, remat=remat) if cfg.family == "encdec" else None
+    h, positions = _assemble_input(p, cfg, batch)
+    h = h.astype(dtype_of(cfg.dtype))
+    h, _, aux = _backbone(p, cfg, h, positions, enc_out=enc_out, remat=remat)
+
+    h_mtp = None
+    if cfg.mtp_depth and "mtp" in p:
+        # DeepSeek MTP: predict t+2 from [h_t ; embed(tok_{t+1})]
+        emb_next = _embed_tokens(p, cfg, batch["tokens"])[:, 1:]  # (B, S-1, D)
+        h_trunc = h[:, :-1]
+        cat = jnp.concatenate([rmsnorm(h_trunc, p["mtp"]["norm"], eps=cfg.rms_eps), emb_next], axis=-1)
+        h_mtp = cat @ p["mtp"]["proj"]
+        h_mtp, _, _ = tfm.decoder_layer_apply(
+            p["mtp"]["block"], h_mtp, cfg,
+            window=None, positions=positions[:-1],
+            cache=None, cache_len=None, use_moe=False,
+        )
+    return h, aux, h_mtp
+
+
+def head_weight(p: Params, cfg: ModelConfig) -> jnp.ndarray:
+    """(D, V) output head (tied or separate)."""
+    return p["embed"]["tok"].T if cfg.tie_embeddings else p["lm_head"]
+
+
+def forward(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Batch,
+    *,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Full-sequence forward (train / eval).  Returns (logits, aux_loss, extras)."""
+    h, aux, h_mtp = _forward_trunk(p, cfg, batch, remat=remat)
+    logits = _lm_logits(p, cfg, h)
+    extras: Dict[str, jnp.ndarray] = {}
+    if h_mtp is not None:
+        extras["mtp_logits"] = _lm_logits(p, cfg, h_mtp)
+    return logits, aux, extras
+
+
+def forward_hidden(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Batch,
+    *,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Forward without the head matmul: returns (h_normed, aux, extras with
+    mtp hidden) for fused (chunked-vocab) loss computation."""
+    h, aux, h_mtp = _forward_trunk(p, cfg, batch, remat=remat)
+    h = rmsnorm(h, p["final_norm"], eps=cfg.rms_eps)
+    extras: Dict[str, jnp.ndarray] = {}
+    if h_mtp is not None:
+        extras["mtp_hidden"] = rmsnorm(h_mtp, p["final_norm"], eps=cfg.rms_eps)
+    return h, aux, extras
+
+
+def init_cache(
+    cfg: ModelConfig, batch_size: int, max_len: int, cache_dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    """Family-specific stacked cache pytree."""
+    fam = cfg.family
+    period = cfg.global_every if (cfg.sliding_window and cfg.global_every) else 1
+
+    def kv_stack(n_outer, per=period):
+        # layout matches the scanned params: (outer, period, B, S, K, hd)
+        one = attn.init_kv_cache(cfg, batch_size, max_len, cache_dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n_outer, per, *a.shape)).copy(), one
+        )
+
+    if fam in ("dense", "vlm"):
+        cache: Dict[str, Any] = {"decoder": kv_stack(cfg.n_layers // period)}
+    elif fam == "moe":
+        nd = cfg.moe.num_dense_layers
+        cache = {}
+        mk = (
+            (lambda n: jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n, 1, *a.shape)).copy(),
+                mla_mod.init_mla_cache(cfg, batch_size, max_len, cache_dtype),
+            ))
+            if cfg.mla is not None
+            else (lambda n: kv_stack(n, 1))
+        )
+        if nd:
+            cache["dense_prefix"] = mk(nd)
+        cache["decoder"] = mk(cfg.n_layers - nd)
+    elif fam == "hybrid":
+        per = cfg.shared_attn_every
+        n_super = cfg.n_layers // per
+        n_tail = cfg.n_layers - n_super * per
+        one_m = mb.init_mamba_state(cfg, batch_size)
+        stack_m = lambda n, inner: jax.tree_util.tree_map(  # noqa: E731
+            lambda a: jnp.broadcast_to(a, (n, *([inner] if inner else []), *a.shape)).copy()
+            if inner
+            else jnp.broadcast_to(a, (n, *a.shape)).copy(),
+            one_m,
+        )
+        one_kv = attn.init_kv_cache(cfg, batch_size, max_len, cache_dtype)
+        cache = {
+            "decoder": {
+                "super": {
+                    "mamba": jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(a, (n_super, per, *a.shape)).copy(), one_m
+                    ),
+                    "attn": jax.tree_util.tree_map(
+                        lambda a: jnp.broadcast_to(a, (n_super, *a.shape)).copy(), one_kv
+                    ),
+                },
+            }
+        }
+        if n_tail:
+            cache["decoder"]["tail"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n_tail, *a.shape)).copy(), one_m
+            )
+        else:
+            cache["decoder"]["tail"] = None
+    elif fam == "ssm":
+        per = cfg.xlstm.slstm_every
+        n_groups = cfg.n_layers // per
+        one_m = xl.init_mlstm_state(cfg, batch_size)
+        one_s = xl.init_slstm_state(cfg, batch_size)
+        cache = {
+            "decoder": {
+                "m": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n_groups, per - 1, *a.shape)).copy(), one_m
+                ),
+                "s": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)).copy(), one_s
+                ),
+            }
+        }
+    elif fam == "encdec":
+        one = attn.init_kv_cache(cfg, batch_size, max_len, cache_dtype)
+        cache = {
+            "decoder": {
+                "self": jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).copy(), one
+                )
+            }
+        }
+    else:
+        raise ValueError(fam)
+    return cache
+
+
+def prefill(
+    p: Params,
+    cfg: ModelConfig,
+    batch: Batch,
+    cache: Dict[str, Any],
+    *,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, Dict[str, Any], jnp.ndarray]:
+    """Process the prompt; returns (last-token logits, cache, new_len)."""
+    enc_out = _encode(p, cfg, batch, remat=remat) if cfg.family == "encdec" else None
+    h, positions = _assemble_input(p, cfg, batch)
+    h = h.astype(dtype_of(cfg.dtype))
+    zero = jnp.zeros((), jnp.int32)
+    h, new_cache, _ = _backbone(
+        p, cfg, h, positions,
+        cache=cache, cache_len=zero, enc_out=enc_out, remat=remat,
+    )
+    logits = _lm_logits(p, cfg, h[:, -1:])
+    return logits, new_cache, jnp.asarray(h.shape[1], jnp.int32)
+
+
+def decode_step(
+    p: Params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,  # (B, 1)
+    cache: Dict[str, Any],
+    cache_len: jnp.ndarray,  # scalar int32
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """One-token decode; returns (logits (B,1,V), new cache)."""
+    h = _embed_tokens(p, cfg, tokens).astype(dtype_of(cfg.dtype))
+    if cfg.pos_embedding == "learned":
+        idx = jnp.minimum(cache_len, p["embed"]["pos"].shape[0] - 1)
+        h = h + p["embed"]["pos"][idx][None, None]
+    h = shard(h, DP, None, None)
+    positions = cache_len[None] if cache_len.ndim == 0 else cache_len
+    h, new_cache, _ = _backbone(
+        p, cfg, h, jnp.atleast_1d(cache_len), cache=cache, cache_len=cache_len
+    )
+    logits = _lm_logits(p, cfg, h)
+    return logits, new_cache

@@ -1,0 +1,246 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, strictly recurrent), composed 7:1.
+
+mLSTM block (pre-up-projection design, xLSTM paper Fig. 10 left):
+  norm -> up-proj to (x, z) at 2x width -> causal conv+silu on x ->
+  headwise q,k (from conv branch), v (from x branch) -> mLSTM cell
+  (ops.mlstm_parallel / recurrent step) -> group-norm -> +learnable skip of
+  conv branch -> gate with silu(z) -> down-proj -> residual.
+
+sLSTM block (post-up-projection): norm -> causal conv+silu -> 4-gate cell
+with headwise recurrence (ops.slstm_scan) -> group-norm -> gated
+ffn (proj_factor 4/3) -> residual.
+
+Decode state: mLSTM (C, n, m) matrix memory — O(1) per token; sLSTM
+(c, n, m, h) — O(1).  This is why xlstm runs the `long_500k` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+
+from .layers import Params, causal_conv1d, dense_init, grouped_rmsnorm, rmsnorm, rmsnorm_init
+from .sharding import DP, TP, shard
+
+
+def _mdims(cfg: ModelConfig):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    hd = d_in // nh
+    return x, d_in, nh, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+def mlstm_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    x, d_in, nh, hd = _mdims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(D, dtype),
+        "w_up": dense_init(ks[0], D, 2 * d_in, dtype=dtype),
+        "conv_kernel": (jax.random.normal(ks[1], (x.conv_kernel, d_in)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((d_in,), dtype),
+        "w_qhw": dense_init(ks[2], nh, hd, hd, dtype=dtype),  # headwise
+        "w_khw": dense_init(ks[3], nh, hd, hd, dtype=dtype),
+        "w_vhw": dense_init(ks[4], nh, hd, hd, dtype=dtype),
+        "w_igate": dense_init(ks[5], 3 * d_in, nh, dtype=jnp.float32, scale=0.01),
+        "w_fgate": dense_init(ks[6], 3 * d_in, nh, dtype=jnp.float32, scale=0.01),
+        "fgate_bias": jnp.linspace(3.0, 6.0, nh).astype(jnp.float32),
+        "igate_bias": jnp.full((nh,), -10.0, jnp.float32),
+        "skip": jnp.ones((d_in,), dtype),
+        "gn": rmsnorm_init(d_in, dtype),
+        "w_down": dense_init(ks[7], d_in, D, dtype=dtype),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    x, d_in, nh, hd = _mdims(cfg)
+    return {
+        "conv": jnp.zeros((batch, x.conv_kernel - 1, d_in), jnp.float32),
+        "c": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e9, jnp.float32),
+    }
+
+
+def mlstm_state_spec():
+    return {"conv": (DP, None, TP), "c": (DP, TP, None, None), "n": (DP, TP, None), "m": (DP, TP)}
+
+
+def _headwise(x: jnp.ndarray, w: jnp.ndarray, nh: int) -> jnp.ndarray:
+    """(B,S,d_in) x (nh,hd,hd) -> (B,S,nh,hd)"""
+    B, S, d_in = x.shape
+    xh = x.reshape(B, S, nh, d_in // nh)
+    return jnp.einsum("bshi,hij->bshj", xh, w)
+
+
+def mlstm_block_apply(
+    p: Params,
+    h: jnp.ndarray,  # (B, S, D) residual stream
+    cfg: ModelConfig,
+    *,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    x, d_in, nh, hd = _mdims(cfg)
+    B, S, D = h.shape
+
+    xin = rmsnorm(h, p["norm"], eps=cfg.rms_eps)
+    up = xin @ p["w_up"]
+    up = shard(up, DP, None, TP)
+    xb, z = up[..., :d_in], up[..., d_in:]
+
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = causal_conv1d(xb, p["conv_kernel"], p["conv_bias"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = _headwise(xc, p["w_qhw"], nh)
+    k = _headwise(xc, p["w_khw"], nh)
+    v = _headwise(xb, p["w_vhw"], nh)
+
+    gate_in = jnp.concatenate([q.reshape(B, S, -1), k.reshape(B, S, -1), v.reshape(B, S, -1)], axis=-1)
+    ig = gate_in.astype(jnp.float32) @ p["w_igate"] + p["igate_bias"]
+    fg = gate_in.astype(jnp.float32) @ p["w_fgate"] + p["fgate_bias"]
+
+    if state is not None and S == 1:
+        (c_new, n_new, m_new), out = ops.mlstm_decode_step(
+            state["c"], state["n"], state["m"],
+            q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0],
+        )
+        out = out[:, None]
+        new_state = {"conv": new_conv, "c": c_new, "n": n_new, "m": m_new}
+    else:
+        out = ops.mlstm_parallel(q, k, v, ig, fg)
+        new_state = None
+        if state is not None:
+            # prefill: replay recurrence to obtain final state (scan once)
+            def step(carry, t):
+                (c, n, m) = carry
+                (c, n, m), _ = ops.mlstm_decode_step(
+                    c, n, m, q[:, t], k[:, t], v[:, t], ig[:, t], fg[:, t]
+                )
+                return (c, n, m), None
+
+            (c_new, n_new, m_new), _ = jax.lax.scan(
+                step, (state["c"], state["n"], state["m"]), jnp.arange(S)
+            )
+            new_state = {"conv": new_conv, "c": c_new, "n": n_new, "m": m_new}
+
+    out = out.reshape(B, S, d_in)
+    out = grouped_rmsnorm(out, p["gn"], n_groups=nh, eps=cfg.rms_eps)
+    out = out + xc * p["skip"][None, None, :]
+    out = out * jax.nn.silu(z)
+    return h + out @ p["w_down"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+def slstm_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    x = cfg.xlstm
+    D = cfg.d_model
+    nh = cfg.n_heads
+    hd = D // nh
+    f = int(x.slstm_proj_factor * D)
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": rmsnorm_init(D, dtype),
+        "conv_kernel": (jax.random.normal(ks[0], (x.conv_kernel, D)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((D,), dtype),
+        "gates_x": dense_init(ks[1], D, nh, hd * 4, dtype=jnp.float32).reshape(D, nh, hd, 4) * 1.0,
+        "gates_b": jnp.zeros((nh, hd, 4), jnp.float32)
+        .at[..., 1]
+        .set(3.0),  # forget-gate bias
+        "r_kernel": (jax.random.normal(ks[2], (nh, hd, hd, 4)) * (hd**-0.5)).astype(jnp.float32),
+        "gn": rmsnorm_init(D, dtype),
+        "w_gate": dense_init(ks[3], D, f, dtype=dtype),
+        "w_up": dense_init(ks[4], D, f, dtype=dtype),
+        "w_down": dense_init(ks[5], f, D, dtype=dtype),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    x = cfg.xlstm
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, hd), jnp.float32)
+    return {
+        "conv": jnp.zeros((batch, x.conv_kernel - 1, cfg.d_model), jnp.float32),
+        "c": z,
+        "n": z,
+        "m": z - 1e9,
+        "h": z,
+    }
+
+
+def slstm_state_spec():
+    s = (DP, TP, None)
+    return {"conv": (DP, None, TP), "c": s, "n": s, "m": s, "h": s}
+
+
+def _slstm_cell_step(r_kernel, carry, gx_t):
+    c, n, m, h = carry
+    rec = jnp.einsum("bhd,hdke->bhke", h, r_kernel)
+    pre = gx_t + rec
+    i_t, f_t = pre[..., 0], pre[..., 1]
+    z_t = jnp.tanh(pre[..., 2])
+    o_t = jax.nn.sigmoid(pre[..., 3])
+    logf = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(logf + m, i_t)
+    igate = jnp.exp(i_t - m_new)
+    fgate = jnp.exp(logf + m - m_new)
+    c_new = fgate * c + igate * z_t
+    n_new = fgate * n + igate
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_block_apply(
+    p: Params,
+    h: jnp.ndarray,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    state: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    B, S, D = h.shape
+
+    xin = rmsnorm(h, p["norm"], eps=cfg.rms_eps)
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = causal_conv1d(xin, p["conv_kernel"], p["conv_bias"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    gx = jnp.einsum("bsd,dhke->bshke", xc.astype(jnp.float32), p["gates_x"]) + p["gates_b"]
+
+    carry0 = (
+        (state["c"], state["n"], state["m"], state["h"])
+        if state is not None
+        else (
+            jnp.zeros((B, nh, hd), jnp.float32),
+            jnp.zeros((B, nh, hd), jnp.float32),
+            jnp.full((B, nh, hd), -1e9, jnp.float32),
+            jnp.zeros((B, nh, hd), jnp.float32),
+        )
+    )
+    step = lambda carry, gx_t: _slstm_cell_step(p["r_kernel"], carry, gx_t)  # noqa: E731
+    (c, n, m, hh), hs = jax.lax.scan(step, carry0, gx.swapaxes(0, 1))
+    out = hs.swapaxes(0, 1).reshape(B, S, D).astype(h.dtype)
+    out = grouped_rmsnorm(out, p["gn"], n_groups=nh, eps=cfg.rms_eps)
+
+    # gated FFN (proj factor 4/3)
+    ff = (jax.nn.gelu(out @ p["w_gate"], approximate=True) * (out @ p["w_up"])) @ p["w_down"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "c": c, "n": n, "m": m, "h": hh}
+    return h + ff, new_state

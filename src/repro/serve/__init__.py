@@ -1,0 +1,5 @@
+"""Serving substrate: batched engine + storage-mediated request plane."""
+
+from .engine import Engine, ServeConfig, serve_pending, submit_request
+
+__all__ = ["Engine", "ServeConfig", "serve_pending", "submit_request"]

@@ -1,0 +1,116 @@
+"""Batched serving engine: prefill + decode with KV-cache management.
+
+Requests flow through the object store (PyWren style): clients `submit`
+prompts as objects; the engine leases batches, prefills, decodes with a
+jitted single-token step, and publishes results atomically.  The engine
+itself is a stateless function over (model version, request batch): kill it
+mid-stream and a restart re-serves the batch idempotently.
+
+Serving modes:
+  * `generate`: greedy/temperature sampling for N steps (batch-synchronous
+    continuous batching-lite: finished rows are masked, new rows join at
+    chunk boundaries);
+  * `serve_step` export for the dry-run: the one-token decode step lowered
+    at (arch x decode shape).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, init_cache, prefill
+from repro.storage import ObjectStore
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 256
+    max_new_tokens: int = 32
+    temperature: float = 0.0  # 0 = greedy
+    cache_dtype: str = "float32"
+    eos_id: int = -1  # -1 = never stop early
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._decode = jax.jit(lambda p, t, c, l: decode_step(p, cfg, t, c, l))
+        self._prefill = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))
+
+    # ---- batch generation ------------------------------------------------
+    def generate(
+        self, prompts: jnp.ndarray, extras: Optional[Dict[str, jnp.ndarray]] = None
+    ) -> np.ndarray:
+        """prompts: (B, S) int32 -> (B, max_new_tokens) int32."""
+        B, S = prompts.shape
+        scfg = self.scfg
+        dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[scfg.cache_dtype]
+        cache = init_cache(self.cfg, B, scfg.max_len, cache_dtype=dtype)
+        batch = {"tokens": prompts}
+        if extras:
+            batch.update(extras)
+        logits, cache, clen = self._prefill(self.params, batch, cache)
+
+        out = np.zeros((B, scfg.max_new_tokens), np.int32)
+        done = np.zeros((B,), bool)
+        tok = self._sample(logits[:, -1])
+        key = jax.random.PRNGKey(0)
+        for t in range(scfg.max_new_tokens):
+            out[:, t] = np.where(done, 0, np.asarray(tok))
+            if scfg.eos_id >= 0:
+                done |= np.asarray(tok) == scfg.eos_id
+                if done.all():
+                    break
+            logits, cache = self._decode(self.params, tok[:, None], cache, clen)
+            clen = clen + 1
+            key = jax.random.fold_in(key, t)
+            tok = self._sample(logits[:, 0], key)
+        return out
+
+    def _sample(self, logits: jnp.ndarray, key=None) -> jnp.ndarray:
+        if self.scfg.temperature <= 0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / self.scfg.temperature).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# storage-mediated request plane (the PyWren pattern)
+# ---------------------------------------------------------------------------
+
+def submit_request(store: ObjectStore, req_id: str, prompt: List[int]) -> str:
+    key = f"serve/req/{req_id}"
+    store.put(key, {"prompt": prompt, "ts": time.time()})
+    return key
+
+
+def serve_pending(
+    store: ObjectStore, engine: Engine, *, batch_size: int = 8, worker: str = "engine"
+) -> int:
+    """Lease pending requests, serve a batch, publish results atomically.
+    Returns number served.  Idempotent: results publish with put_if_absent."""
+    req_keys = [
+        k for k in store.list("serve/req/")
+        if not store.exists(k.replace("serve/req/", "serve/done/"), worker=worker)
+    ][:batch_size]
+    if not req_keys:
+        return 0
+    reqs = [store.get(k, worker=worker) for k in req_keys]
+    maxlen = max(len(r["prompt"]) for r in reqs)
+    prompts = np.zeros((len(reqs), maxlen), np.int32)
+    for i, r in enumerate(reqs):
+        prompts[i, maxlen - len(r["prompt"]):] = r["prompt"]  # left-pad
+    out = engine.generate(jnp.asarray(prompts))
+    for i, k in enumerate(req_keys):
+        done_key = k.replace("serve/req/", "serve/done/")
+        store.publish_result(done_key, {"tokens": out[i].tolist()}, worker=worker)
+    return len(reqs)

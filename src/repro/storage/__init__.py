@@ -1,0 +1,38 @@
+"""Disaggregated storage plane: object store (S3 semantics), KV store
+(Redis semantics), shuffle, serialization, and paper-calibrated perf models."""
+
+from .kv_store import KVStore
+from .object_store import FileBackend, InMemoryBackend, Ledger, ObjectStore, OpRecord
+from .perf_model import (
+    DISAGG_2026,
+    LOCAL_SSD_C3,
+    LOCAL_SSD_I2,
+    LOCAL_SSD_I2_RAID,
+    PROFILES,
+    REDIS_2017,
+    S3_2017,
+    StorageProfile,
+)
+from .serialization import content_key, digest, dumps, dumps_with_key, loads
+
+__all__ = [
+    "KVStore",
+    "ObjectStore",
+    "InMemoryBackend",
+    "FileBackend",
+    "Ledger",
+    "OpRecord",
+    "StorageProfile",
+    "PROFILES",
+    "S3_2017",
+    "REDIS_2017",
+    "DISAGG_2026",
+    "LOCAL_SSD_C3",
+    "LOCAL_SSD_I2",
+    "LOCAL_SSD_I2_RAID",
+    "dumps",
+    "loads",
+    "digest",
+    "content_key",
+    "dumps_with_key",
+]

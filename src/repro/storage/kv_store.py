@@ -1,0 +1,221 @@
+"""Redis-semantics low-latency KV store: the coordination plane.
+
+The paper uses ElastiCache/Redis for (a) small synchronous put/gets (Fig 4),
+(b) shuffle intermediates when S3 request throughput is the bottleneck
+(Fig 5/6), and (c) parameter servers with server-side scripting for range
+updates / flexible consistency (§3.3).
+
+Reproduced semantics:
+  * sharded keyspace (consistent hashing over N shards, each shard has its
+    own request-throughput budget — the Fig 5/6 bottleneck);
+  * atomic single-key ops: get/set/setnx/incr/cas/delete;
+  * ``eval`` — server-side scripting analogue: apply a Python callable to a
+    key's value *atomically under the shard lock* (Redis EVAL), used by the
+    parameter server for in-place range updates (HOGWILD!);
+  * lists (rpush/lrange) for queues.
+
+Each op is charged virtual wire time and recorded per shard so benchmarks
+can detect shard saturation exactly like the paper's sort experiment.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from .object_store import Ledger, OpRecord, _Endpoint
+from .perf_model import REDIS_2017, StorageProfile
+
+_TOMBSTONE = object()
+
+
+@dataclass
+class ShardStats:
+    ops: int = 0
+    bytes_in: int = 0
+    bytes_out: int = 0
+    vtime_s: float = 0.0
+
+
+class _Shard:
+    def __init__(self, idx: int) -> None:
+        self.idx = idx
+        self.lock = threading.RLock()
+        self.data: Dict[str, Any] = {}
+        self.stats = ShardStats()
+
+
+def _sizeof(value: Any) -> int:
+    if isinstance(value, bytes):
+        return len(value)
+    if isinstance(value, str):
+        return len(value.encode())
+    if isinstance(value, (int, float)):
+        return 8
+    if hasattr(value, "nbytes"):
+        return int(value.nbytes)
+    if isinstance(value, (list, tuple)):
+        return sum(_sizeof(v) for v in value) + 8
+    if isinstance(value, dict):
+        return sum(_sizeof(k) + _sizeof(v) for k, v in value.items()) + 8
+    return 64  # opaque
+
+
+class KVStore(_Endpoint):
+    """Sharded in-memory KV store with Redis-like atomic ops."""
+
+    def __init__(
+        self,
+        num_shards: int = 1,
+        profile: StorageProfile = REDIS_2017,
+        ledger: Optional[Ledger] = None,
+    ) -> None:
+        if num_shards < 1:
+            raise ValueError("num_shards >= 1")
+        self.num_shards = num_shards
+        self.profile = profile
+        self.ledger = ledger or Ledger()
+        self._shards = [_Shard(i) for i in range(num_shards)]
+        self._register_endpoint()
+
+    # ---- sharding ------------------------------------------------------
+    def shard_of(self, key: str) -> int:
+        return zlib.crc32(key.encode()) % self.num_shards
+
+    def _shard(self, key: str) -> _Shard:
+        return self._shards[self.shard_of(key)]
+
+    def _charge(
+        self, shard: _Shard, worker: str, op: str, key: str, nbytes: int, write: bool
+    ) -> None:
+        vt = self.profile.write_time(nbytes) if write else self.profile.read_time(nbytes)
+        shard.stats.ops += 1
+        shard.stats.vtime_s += vt
+        if write:
+            shard.stats.bytes_in += nbytes
+        else:
+            shard.stats.bytes_out += nbytes
+        self.ledger.record(OpRecord(worker, op, key, nbytes, vt, time.monotonic()))
+
+    # ---- atomic single-key ops ------------------------------------------
+    def set(self, key: str, value: Any, *, worker: str = "-") -> None:
+        sh = self._shard(key)
+        with sh.lock:
+            sh.data[key] = value
+            self._charge(sh, worker, "set", key, _sizeof(value), write=True)
+
+    def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
+        sh = self._shard(key)
+        with sh.lock:
+            value = sh.data.get(key, default)
+            self._charge(sh, worker, "get", key, _sizeof(value), write=False)
+            return value
+
+    def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "setnx", key, _sizeof(value), write=True)
+            if key in sh.data:
+                return False
+            sh.data[key] = value
+            return True
+
+    def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
+        sh = self._shard(key)
+        with sh.lock:
+            new = sh.data.get(key, 0) + amount
+            sh.data[key] = new
+            self._charge(sh, worker, "incr", key, 8, write=True)
+            return new
+
+    def cas(self, key: str, expect: Any, value: Any, *, worker: str = "-") -> bool:
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "cas", key, _sizeof(value), write=True)
+            cur = sh.data.get(key, _TOMBSTONE)
+            matched = (cur is not _TOMBSTONE and cur == expect) or (
+                cur is _TOMBSTONE and expect is None
+            )
+            if matched:
+                sh.data[key] = value
+                return True
+            return False
+
+    def delete(self, key: str, *, worker: str = "-") -> None:
+        sh = self._shard(key)
+        with sh.lock:
+            sh.data.pop(key, None)
+            self._charge(sh, worker, "del", key, 0, write=True)
+
+    def exists(self, key: str, *, worker: str = "-") -> bool:
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "exists", key, 0, write=False)
+            return key in sh.data
+
+    # ---- server-side scripting (Redis EVAL analogue) ---------------------
+    def eval(
+        self,
+        key: str,
+        fn: Callable[[Any], Any],
+        *,
+        default: Any = None,
+        worker: str = "-",
+    ) -> Any:
+        """Atomically ``data[key] = fn(data.get(key, default))`` under the
+        shard lock; returns the new value.  This is the paper's 'existing
+        support for server-side scripting … to implement features like range
+        updates' — the parameter server's in-place gradient apply."""
+        sh = self._shard(key)
+        with sh.lock:
+            cur = sh.data.get(key, default)
+            new = fn(cur)
+            sh.data[key] = new
+            self._charge(sh, worker, "eval", key, _sizeof(new), write=True)
+            return new
+
+    # ---- lists (queues) ---------------------------------------------------
+    def rpush(self, key: str, *values: Any, worker: str = "-") -> int:
+        sh = self._shard(key)
+        with sh.lock:
+            lst = sh.data.setdefault(key, [])
+            lst.extend(values)
+            self._charge(sh, worker, "rpush", key, sum(_sizeof(v) for v in values), write=True)
+            return len(lst)
+
+    def lpop(self, key: str, *, worker: str = "-") -> Any:
+        sh = self._shard(key)
+        with sh.lock:
+            lst = sh.data.get(key)
+            value = lst.pop(0) if lst else None
+            self._charge(sh, worker, "lpop", key, _sizeof(value), write=True)
+            return value
+
+    def lrange(self, key: str, start: int = 0, stop: int = -1, *, worker: str = "-") -> List[Any]:
+        sh = self._shard(key)
+        with sh.lock:
+            lst = list(sh.data.get(key, []))
+            out = lst[start:] if stop == -1 else lst[start : stop + 1]
+            self._charge(sh, worker, "lrange", key, sum(_sizeof(v) for v in out), write=False)
+            return out
+
+    def llen(self, key: str, *, worker: str = "-") -> int:
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "llen", key, 8, write=False)
+            return len(sh.data.get(key, []))
+
+    # ---- stats ------------------------------------------------------------
+    def shard_stats(self) -> List[ShardStats]:
+        return [sh.stats for sh in self._shards]
+
+    def total_ops(self) -> int:
+        return sum(sh.stats.ops for sh in self._shards)
+
+    def hottest_shard_vtime(self) -> float:
+        """Virtual busy-time of the most loaded shard — the sort benchmark's
+        bottleneck signal (paper Fig 6: 'Redis I/O time increases by 42%')."""
+        return max((sh.stats.vtime_s for sh in self._shards), default=0.0)

@@ -1,0 +1,303 @@
+"""S3-semantics object store: the bulk state plane of the stateless runtime.
+
+Semantics reproduced from the paper's use of S3:
+  * whole-object atomic ``put`` / ``get`` (no partial writes ever visible);
+  * ``put_if_absent`` — the atomic-write primitive the paper relies on for
+    exactly-once result visibility ("We only need atomic writes to remote
+    storage for tracking which functions have succeeded");
+  * ``list(prefix)`` for completion polling;
+  * **no append** (the paper calls this limitation out in §4) — appends must
+    be emulated by writing new keys, exactly as PyWren's shuffle does;
+  * integrity: every object carries a sha256 etag.
+
+Backends: in-memory (tests, benchmarks) and file-backed (crash-safe via
+``os.replace``; used by checkpointing so restarts survive process death).
+
+Every operation is charged virtual wire time from a
+:class:`~repro.storage.perf_model.StorageProfile` and recorded in a
+:class:`Ledger` keyed by the calling worker, which the paper-figure
+benchmarks aggregate.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+import uuid
+import weakref
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+from . import serialization
+from .perf_model import S3_2017, StorageProfile
+
+# Store handles pickle BY REFERENCE (like an S3 client: the serialized form
+# is an endpoint, not the data).  Functions shipped through the runtime close
+# over store handles; on the worker they must resolve to the *same* store.
+_HANDLE_REGISTRY: "weakref.WeakValueDictionary[str, Any]" = weakref.WeakValueDictionary()
+
+
+def _resolve_handle(uid: str) -> Any:
+    try:
+        return _HANDLE_REGISTRY[uid]
+    except KeyError:
+        raise RuntimeError(
+            f"storage handle {uid} not live in this process; in a real "
+            "deployment this would reconnect to the remote endpoint"
+        ) from None
+
+
+class _Endpoint:
+    """Mixin giving a class by-reference pickling semantics."""
+
+    def _register_endpoint(self) -> None:
+        self._endpoint_uid = f"{type(self).__name__}-{uuid.uuid4().hex}"
+        _HANDLE_REGISTRY[self._endpoint_uid] = self
+
+    def __reduce__(self):
+        return (_resolve_handle, (self._endpoint_uid,))
+
+
+@dataclass
+class OpRecord:
+    worker: str
+    op: str  # "get" | "put" | "list" | "delete" | "head"
+    key: str
+    nbytes: int
+    vtime_s: float  # modeled wire duration
+    wall_t: float  # real monotonic time of issue (ordering/debug only)
+
+
+class Ledger:
+    """Thread-safe per-worker record of storage ops in virtual time."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._records: List[OpRecord] = []
+
+    def record(self, rec: OpRecord) -> None:
+        with self._lock:
+            self._records.append(rec)
+
+    def records(self) -> List[OpRecord]:
+        with self._lock:
+            return list(self._records)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._records.clear()
+
+    # -- aggregation helpers used by benchmarks -------------------------
+    def totals(self) -> Dict[str, Tuple[int, float]]:
+        """op -> (total bytes, total virtual seconds)."""
+        out: Dict[str, Tuple[int, float]] = defaultdict(lambda: (0, 0.0))
+        for r in self.records():
+            b, t = out[r.op]
+            out[r.op] = (b + r.nbytes, t + r.vtime_s)
+        return dict(out)
+
+    def per_worker(self) -> Dict[str, Dict[str, Tuple[int, float]]]:
+        out: Dict[str, Dict[str, Tuple[int, float]]] = defaultdict(
+            lambda: defaultdict(lambda: (0, 0.0))
+        )
+        for r in self.records():
+            b, t = out[r.worker][r.op]
+            out[r.worker][r.op] = (b + r.nbytes, t + r.vtime_s)
+        return {w: dict(ops) for w, ops in out.items()}
+
+
+class KeyExistsError(KeyError):
+    pass
+
+
+class _Backend:
+    def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def list(self, prefix: str) -> List[str]:
+        raise NotImplementedError
+
+
+class InMemoryBackend(_Backend):
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._data: Dict[str, bytes] = {}
+
+    def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
+        with self._lock:
+            if if_absent and key in self._data:
+                return False
+            self._data[key] = blob
+            return True
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            return self._data[key]
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+    def list(self, prefix: str) -> List[str]:
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+
+class FileBackend(_Backend):
+    """Directory-backed store.  Writes are crash-atomic: write temp file,
+    fsync, ``os.replace``.  ``put_if_absent`` uses O_EXCL on the final name's
+    lock sibling so two processes cannot both win."""
+
+    def __init__(self, root: str) -> None:
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self._lock = threading.Lock()
+
+    def _path(self, key: str) -> str:
+        safe = key.replace("/", "%2F")
+        return os.path.join(self.root, safe)
+
+    def _unpath(self, name: str) -> str:
+        return name.replace("%2F", "/")
+
+    def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
+        path = self._path(key)
+        with self._lock:
+            if if_absent and os.path.exists(path):
+                return False
+            tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+            return True
+
+    def get(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            return f.read()
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def list(self, prefix: str) -> List[str]:
+        out = []
+        for name in os.listdir(self.root):
+            if name.endswith((".tmp",)) or ".tmp." in name:
+                continue
+            key = self._unpath(name)
+            if key.startswith(prefix):
+                out.append(key)
+        return sorted(out)
+
+
+class ObjectStore(_Endpoint):
+    """The remote bulk store.  All durable runtime state lives here."""
+
+    def __init__(
+        self,
+        backend: Optional[_Backend] = None,
+        profile: StorageProfile = S3_2017,
+        ledger: Optional[Ledger] = None,
+    ) -> None:
+        self.backend = backend or InMemoryBackend()
+        self.profile = profile
+        self.ledger = ledger or Ledger()
+        self._register_endpoint()
+
+    # ---- raw byte plane ------------------------------------------------
+    def put_bytes(
+        self, key: str, blob: bytes, *, worker: str = "-", if_absent: bool = False
+    ) -> bool:
+        won = self.backend.put(key, blob, if_absent=if_absent)
+        self.ledger.record(
+            OpRecord(worker, "put", key, len(blob), self.profile.write_time(len(blob)), time.monotonic())
+        )
+        return won
+
+    def get_bytes(self, key: str, *, worker: str = "-") -> bytes:
+        blob = self.backend.get(key)
+        self.ledger.record(
+            OpRecord(worker, "get", key, len(blob), self.profile.read_time(len(blob)), time.monotonic())
+        )
+        return blob
+
+    def exists(self, key: str, *, worker: str = "-") -> bool:
+        ok = self.backend.exists(key)
+        self.ledger.record(
+            OpRecord(worker, "head", key, 0, self.profile.read_latency_s, time.monotonic())
+        )
+        return ok
+
+    def delete(self, key: str, *, worker: str = "-") -> None:
+        self.backend.delete(key)
+        self.ledger.record(
+            OpRecord(worker, "delete", key, 0, self.profile.write_latency_s, time.monotonic())
+        )
+
+    def list(self, prefix: str, *, worker: str = "-") -> List[str]:
+        keys = self.backend.list(prefix)
+        self.ledger.record(
+            OpRecord(worker, "list", prefix, 0, self.profile.read_latency_s, time.monotonic())
+        )
+        return keys
+
+    # ---- object plane (serialized values) ------------------------------
+    def put(self, key: str, value: Any, *, worker: str = "-", if_absent: bool = False) -> bool:
+        return self.put_bytes(key, serialization.dumps(value), worker=worker, if_absent=if_absent)
+
+    def get(self, key: str, *, worker: str = "-") -> Any:
+        return serialization.loads(self.get_bytes(key, worker=worker))
+
+    def put_content_addressed(self, prefix: str, value: Any, *, worker: str = "-") -> str:
+        """PyWren's 'globally unique keys': content-hash the blob.  Duplicate
+        puts of identical content are idempotent by construction."""
+        key, blob = serialization.dumps_with_key(prefix, value)
+        self.put_bytes(key, blob, worker=worker, if_absent=True)
+        return key
+
+    # ---- completion signalling (the paper's atomic-result contract) ----
+    def publish_result(self, key: str, value: Any, *, worker: str = "-") -> bool:
+        """Atomic publish: first writer wins; late/speculative duplicates are
+        silently discarded.  Existence of ``key`` == task completion."""
+        return self.put(key, value, worker=worker, if_absent=True)
+
+    def wait_keys(
+        self, keys: List[str], *, poll_s: float = 0.002, timeout_s: float = 60.0
+    ) -> None:
+        """Poll for existence of all keys (PyWren signals completion 'by the
+        existence of this key')."""
+        deadline = time.monotonic() + timeout_s
+        pending = list(keys)
+        while pending:
+            pending = [k for k in pending if not self.backend.exists(k)]
+            if not pending:
+                return
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"{len(pending)} keys still absent, e.g. {pending[:3]}")
+            time.sleep(poll_s)
+
+    def iter_prefix(self, prefix: str, *, worker: str = "-") -> Iterator[Tuple[str, Any]]:
+        for key in self.list(prefix, worker=worker):
+            yield key, self.get(key, worker=worker)

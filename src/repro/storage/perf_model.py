@@ -1,0 +1,152 @@
+"""Storage performance models.
+
+The container this framework is developed in has one CPU core and no real
+S3/Redis, but the paper's claims are quantitative (30–40 MB/s per worker,
+60–80 GB/s aggregate, <1 ms KV ops, Redis request-throughput saturation).
+To reproduce those *relationships* honestly we run every byte of the runtime
+for real (data is actually stored, hashed, listed, shuffled) and model only
+the wire: each storage operation is assigned a *virtual duration* from a
+profile calibrated to the paper's measurements.  Virtual durations are
+recorded in per-worker ledgers; benchmarks aggregate them.
+
+Profiles:
+  * ``S3_2017``        — the paper's measured S3 (Table 1, Fig 3).
+  * ``LOCAL_SSD_C3`` / ``LOCAL_SSD_I2`` — Table 1 instance-local SSDs.
+  * ``REDIS_2017``     — ElastiCache per-shard (Fig 4, Fig 5/6).
+  * ``DISAGG_2026``    — the §4 extrapolation: disaggregated flash with
+                         100 Gb/s NICs and much higher request throughput.
+
+The model is a standard M/D/1-free approximation: per-op virtual time is
+``latency + bytes / per_connection_bw``, and *aggregate* capacity caps are
+applied analytically at the benchmark layer (effective per-worker bandwidth
+= min(per_conn, aggregate / workers)); KV shards additionally cap request
+throughput at ``ops_per_s_per_shard``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MB = 1e6
+GB = 1e9
+
+
+@dataclass(frozen=True)
+class StorageProfile:
+    name: str
+    read_latency_s: float
+    write_latency_s: float
+    read_bw_per_conn: float  # bytes/s one connection can sustain
+    write_bw_per_conn: float
+    aggregate_read_bw: float  # bytes/s across all connections
+    aggregate_write_bw: float
+    ops_per_s_per_shard: float  # request-throughput cap (per shard)
+
+    # ---- per-op virtual durations -------------------------------------
+    def read_time(self, nbytes: int) -> float:
+        return self.read_latency_s + nbytes / self.read_bw_per_conn
+
+    def write_time(self, nbytes: int) -> float:
+        return self.write_latency_s + nbytes / self.write_bw_per_conn
+
+    # ---- aggregate analytics (used by scaling benchmarks) -------------
+    def effective_read_bw(self, workers: int) -> float:
+        """Per-worker read bandwidth under aggregate contention."""
+        return min(self.read_bw_per_conn, self.aggregate_read_bw / max(workers, 1))
+
+    def effective_write_bw(self, workers: int) -> float:
+        return min(self.write_bw_per_conn, self.aggregate_write_bw / max(workers, 1))
+
+    def effective_ops_per_s(self, workers: int, shards: int = 1) -> float:
+        """Per-worker synchronous op rate: bounded by 1/latency per
+        connection and by the shard request-throughput cap."""
+        per_conn = 1.0 / max(self.read_latency_s, 1e-9)
+        cap = self.ops_per_s_per_shard * max(shards, 1) / max(workers, 1)
+        return min(per_conn, cap)
+
+
+# Paper-calibrated constants -------------------------------------------------
+# Fig 3: ~30 MB/s write, ~40 MB/s read per Lambda; aggregate >60 GB/s write,
+# >80 GB/s read at 2800 workers.  Latency: S3 GET/PUT time-to-first-byte.
+S3_2017 = StorageProfile(
+    name="s3-2017",
+    read_latency_s=0.030,
+    write_latency_s=0.045,
+    read_bw_per_conn=40 * MB,
+    write_bw_per_conn=30 * MB,
+    aggregate_read_bw=112 * GB,
+    aggregate_write_bw=84 * GB,
+    ops_per_s_per_shard=6_000.0,  # S3 request throughput: the sort bottleneck
+)
+
+# Table 1: single-machine write bandwidth.
+LOCAL_SSD_C3 = StorageProfile(
+    name="ssd-c3.8xlarge",
+    read_latency_s=0.0001,
+    write_latency_s=0.0001,
+    read_bw_per_conn=400 * MB,
+    write_bw_per_conn=208.73 * MB,
+    aggregate_read_bw=400 * MB,
+    aggregate_write_bw=208.73 * MB,
+    ops_per_s_per_shard=100_000.0,
+)
+LOCAL_SSD_I2 = StorageProfile(
+    name="ssd-i2.8xlarge",
+    read_latency_s=0.0001,
+    write_latency_s=0.0001,
+    read_bw_per_conn=900 * MB,
+    write_bw_per_conn=460.36 * MB,
+    aggregate_read_bw=900 * MB,
+    aggregate_write_bw=460.36 * MB,
+    ops_per_s_per_shard=100_000.0,
+)
+LOCAL_SSD_I2_RAID = StorageProfile(
+    name="4xssd-i2.8xlarge",
+    read_latency_s=0.0001,
+    write_latency_s=0.0001,
+    read_bw_per_conn=3400 * MB,
+    write_bw_per_conn=1768.04 * MB,
+    aggregate_read_bw=3400 * MB,
+    aggregate_write_bw=1768.04 * MB,
+    ops_per_s_per_shard=400_000.0,
+)
+# Table 1 row "S3" is single-machine aggregate: 501.13 MB/s from one instance
+# (many parallel connections on a c3.8xlarge).
+S3_SINGLE_MACHINE_WRITE_BW = 501.13 * MB
+
+# Fig 4: <1 ms synchronous put/get; ~700 txn/s/worker; two c3.8xlarge shards
+# saturate around 1000 workers => per-shard cap ~= 1000*700/2.
+REDIS_2017 = StorageProfile(
+    name="redis-2017",
+    read_latency_s=0.0008,
+    write_latency_s=0.0008,
+    read_bw_per_conn=80 * MB,
+    write_bw_per_conn=80 * MB,
+    aggregate_read_bw=10 * GB,   # per shard; scaled by shard count at use
+    aggregate_write_bw=10 * GB,
+    ops_per_s_per_shard=350_000.0,
+)
+
+# §4 trend extrapolation: disaggregated flash, flat-datacenter storage.
+DISAGG_2026 = StorageProfile(
+    name="disagg-2026",
+    read_latency_s=0.0002,
+    write_latency_s=0.0003,
+    read_bw_per_conn=1.2 * GB,
+    write_bw_per_conn=1.0 * GB,
+    aggregate_read_bw=4000 * GB,
+    aggregate_write_bw=3000 * GB,
+    ops_per_s_per_shard=2_000_000.0,
+)
+
+PROFILES = {
+    p.name: p
+    for p in (
+        S3_2017,
+        LOCAL_SSD_C3,
+        LOCAL_SSD_I2,
+        LOCAL_SSD_I2_RAID,
+        REDIS_2017,
+        DISAGG_2026,
+    )
+}

@@ -1,0 +1,14 @@
+"""Training substrate: optimizer, stateless train step, storage-backed
+checkpoints, elastic driver."""
+
+from . import checkpoint, elastic, optimizer, train_step
+from .elastic import ElasticTrainConfig, train_elastic
+from .optimizer import adamw, apply_updates, clip_by_global_norm, cosine_schedule
+from .train_step import TrainState, init_train_state, make_loss_fn, make_train_step
+
+__all__ = [
+    "checkpoint", "elastic", "optimizer", "train_step",
+    "adamw", "apply_updates", "clip_by_global_norm", "cosine_schedule",
+    "TrainState", "init_train_state", "make_loss_fn", "make_train_step",
+    "ElasticTrainConfig", "train_elastic",
+]

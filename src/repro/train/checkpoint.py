@@ -1,0 +1,144 @@
+"""Storage-backed checkpoints: the durable state plane of stateless training.
+
+PyWren contract applied to training state:
+  * every checkpoint is an immutable *version*: ``ckpt/<run>/v<NNNN>/...``;
+  * leaves are chunked into objects (bounded object size — the paper's
+    Lambda/S3 granularity constraints) and written in parallel-friendly keys;
+  * the version becomes *visible* only when its manifest publishes via
+    atomic ``put_if_absent`` — a speculative/duplicate trainer task racing on
+    the same step writes identical content and loses the publish harmlessly;
+  * ``latest_version`` scans manifests, so any worker can recover the run
+    state from storage alone (scheduler-free restart);
+  * loading accepts a *different mesh* than the writer's: leaves are placed
+    with jax.device_put against the reader's NamedSharding — elastic remesh.
+
+Storage layout:
+  ckpt/<run>/v<step>/manifest      {spec: tree of (key, shape, dtype), ...}
+  ckpt/<run>/v<step>/leaf/<idx>/<chunk>
+"""
+
+from __future__ import annotations
+
+import io
+import math
+import pickle
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.storage import ObjectStore
+
+CHUNK_BYTES = 64 * 1024 * 1024  # bounded object size
+
+
+@dataclass
+class CkptManifest:
+    run: str
+    version: int
+    tree: Any  # treedef-compatible structure of leaf descriptors
+    n_leaves: int
+    meta: Dict[str, Any]
+
+
+def _leaf_key(run: str, version: int, idx: int, chunk: int) -> str:
+    return f"ckpt/{run}/v{version:08d}/leaf/{idx:05d}/{chunk:04d}"
+
+
+def _manifest_key(run: str, version: int) -> str:
+    return f"ckpt/{run}/v{version:08d}/manifest"
+
+
+def save(
+    store: ObjectStore,
+    run: str,
+    version: int,
+    state: Any,
+    *,
+    meta: Optional[Dict[str, Any]] = None,
+    worker: str = "ckpt",
+) -> bool:
+    """Write a checkpoint version; returns True if this call won the publish
+    (False = another writer already published this version — idempotent)."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    descs = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        blob = arr.tobytes()
+        n_chunks = max(1, math.ceil(len(blob) / CHUNK_BYTES))
+        for c in range(n_chunks):
+            store.put_bytes(
+                _leaf_key(run, version, i, c),
+                blob[c * CHUNK_BYTES : (c + 1) * CHUNK_BYTES],
+                worker=worker,
+            )
+        descs.append(
+            {"shape": arr.shape, "dtype": str(arr.dtype), "chunks": n_chunks, "idx": i}
+        )
+    manifest = {
+        "run": run,
+        "version": version,
+        "treedef": pickle.dumps(treedef),
+        "descs": descs,
+        "meta": meta or {},
+    }
+    return store.put(_manifest_key(run, version), manifest, worker=worker, if_absent=True)
+
+
+def latest_version(store: ObjectStore, run: str) -> Optional[int]:
+    keys = store.list(f"ckpt/{run}/")
+    versions = sorted(
+        int(k.split("/v")[1].split("/")[0]) for k in keys if k.endswith("/manifest")
+    )
+    return versions[-1] if versions else None
+
+
+def load(
+    store: ObjectStore,
+    run: str,
+    version: Optional[int] = None,
+    *,
+    shardings: Optional[Any] = None,  # pytree of NamedSharding (reader's mesh)
+    worker: str = "ckpt",
+) -> Tuple[Any, Dict[str, Any], int]:
+    """Returns (state, meta, version).  With `shardings`, leaves are placed
+    per the *reader's* mesh — checkpoint-level resharding for elasticity."""
+    if version is None:
+        version = latest_version(store, run)
+        if version is None:
+            raise FileNotFoundError(f"no checkpoints for run '{run}'")
+    manifest = store.get(_manifest_key(run, version), worker=worker)
+    treedef = pickle.loads(manifest["treedef"])
+    leaves = []
+    for d in manifest["descs"]:
+        blob = b"".join(
+            store.get_bytes(_leaf_key(run, version, d["idx"], c), worker=worker)
+            for c in range(d["chunks"])
+        )
+        arr = np.frombuffer(blob, dtype=np.dtype(d["dtype"])).reshape(d["shape"])
+        leaves.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        state = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(jnp.asarray(x), s), state, shardings
+        )
+    else:
+        state = jax.tree_util.tree_map(jnp.asarray, state)
+    return state, manifest["meta"], version
+
+
+def gc_old_versions(store: ObjectStore, run: str, keep: int = 3) -> int:
+    """Delete all but the newest `keep` versions; returns #objects deleted."""
+    keys = store.list(f"ckpt/{run}/")
+    versions = sorted(
+        {int(k.split("/v")[1].split("/")[0]) for k in keys if "/v" in k}
+    )
+    doomed = versions[:-keep] if keep else versions
+    n = 0
+    for v in doomed:
+        for k in store.list(f"ckpt/{run}/v{v:08d}/"):
+            store.delete(k)
+            n += 1
+    return n

@@ -1,0 +1,136 @@
+"""Elastic, fault-tolerant training on the stateless-function runtime.
+
+This is the paper's model applied to the workload it said didn't fit
+(§4 'Other applications': long-running coordinated processes).  The unit of
+work is a **step chunk**: run K training steps from checkpoint version v,
+publish version v+1.  Properties inherited from the PyWren contract:
+
+  * *stateless*: a chunk task reads (version, K) as input; params/optimizer
+    state come from storage; nothing depends on which worker runs it;
+  * *idempotent*: data batches are a pure function of the step index
+    (deterministic pipeline), so duplicate executions write byte-identical
+    checkpoints; the manifest's atomic publish makes re-execution and
+    speculation safe;
+  * *warm containers*: a worker that just produced v keeps (params, opt) in
+    memory; if it picks up the chunk for v+1 it skips the storage load
+    (cache keyed by version hash) — PyWren's container reuse;
+  * *elastic remesh*: between chunks the driver may change worker count or
+    mesh shape; the checkpoint loader reshards on read.
+
+The driver below runs chunks through the WrenExecutor so scheduling,
+retries, lease recovery and speculation come from repro.core unchanged.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import WrenExecutor, get_all
+from repro.storage import ObjectStore
+
+from . import checkpoint as ckpt
+from .optimizer import Optimizer
+from .train_step import TrainState, init_train_state, make_train_step
+
+
+@dataclass
+class ElasticTrainConfig:
+    run: str = "run0"
+    steps_per_chunk: int = 10
+    total_steps: int = 100
+    keep_checkpoints: int = 3
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    remat: bool = False
+
+
+# per-process warm cache: version -> TrainState (the container-reuse trick).
+# Resolved via runtime import inside the task body: cloudpickle captures
+# referenced globals BY VALUE, which would snapshot (and ship!) the cache —
+# importing the module at call time reaches the live per-process dict, which
+# is exactly a warm container's local scratch.
+WARM_CACHE: Dict[Tuple[str, int], TrainState] = {}
+
+
+def _live_warm_cache() -> Dict[Tuple[str, int], TrainState]:
+    import repro.train.elastic as _el
+
+    return _el.WARM_CACHE
+
+
+def make_chunk_fn(
+    cfg: ModelConfig,
+    opt: Optimizer,
+    store: ObjectStore,
+    tcfg: ElasticTrainConfig,
+    batch_fn: Callable[[int], Dict[str, jnp.ndarray]],
+):
+    """Builds the stateless chunk function shipped through the runtime."""
+    step_fn = jax.jit(
+        make_train_step(
+            cfg, opt,
+            remat=tcfg.remat, grad_clip=tcfg.grad_clip, microbatches=tcfg.microbatches,
+        )
+    )
+
+    def chunk_fn(version: int) -> Dict[str, float]:
+        cache = _live_warm_cache()
+        key = (tcfg.run, version)
+        if key in cache:  # warm container: skip the storage load
+            state = cache.pop(key)
+            warm = True
+        else:
+            state, _, _ = ckpt.load(store, tcfg.run, version)
+            state = TrainState(*state) if not isinstance(state, TrainState) else state
+            warm = False
+        base_step = version * tcfg.steps_per_chunk
+        metrics: Dict[str, float] = {}
+        for i in range(tcfg.steps_per_chunk):
+            batch = batch_fn(base_step + i)
+            state, m = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in m.items()}
+        ckpt.save(
+            store, tcfg.run, version + 1, tuple(state),
+            meta={"step": base_step + tcfg.steps_per_chunk, "metrics": metrics},
+        )
+        cache[(tcfg.run, version + 1)] = state
+        metrics["warm_start"] = 1.0 if warm else 0.0
+        return metrics
+
+    return chunk_fn
+
+
+def train_elastic(
+    wex: WrenExecutor,
+    cfg: ModelConfig,
+    opt: Optimizer,
+    tcfg: ElasticTrainConfig,
+    batch_fn: Callable[[int], Dict[str, jnp.ndarray]],
+    *,
+    seed: int = 0,
+    scale_plan: Optional[Dict[int, int]] = None,  # chunk idx -> worker count
+    timeout_s: float = 600.0,
+) -> List[Dict[str, float]]:
+    """Run total_steps in chunks through the serverless runtime."""
+    store = wex.store
+    if ckpt.latest_version(store, tcfg.run) is None:
+        state = init_train_state(cfg, opt, jax.random.PRNGKey(seed))
+        ckpt.save(store, tcfg.run, 0, tuple(state), meta={"step": 0})
+
+    chunk_fn = make_chunk_fn(cfg, opt, store, tcfg, batch_fn)
+    n_chunks = tcfg.total_steps // tcfg.steps_per_chunk
+    history: List[Dict[str, float]] = []
+    start_v = ckpt.latest_version(store, tcfg.run) or 0
+    for chunk_idx in range(start_v, n_chunks):
+        if scale_plan and chunk_idx in scale_plan:
+            wex.scale_to(scale_plan[chunk_idx])  # elastic resize mid-run
+        [metrics] = get_all(wex.map(chunk_fn, [chunk_idx]), timeout_s=timeout_s)
+        history.append(metrics)
+        ckpt.gc_old_versions(store, tcfg.run, keep=tcfg.keep_checkpoints)
+    return history

@@ -1,0 +1,177 @@
+"""AdamW from scratch (pytree-native) with optional int8-quantized moments.
+
+The int8 moments are a distributed-optimization trick that matters doubly in
+this framework: optimizer state is (a) HBM-resident during a step and (b)
+*storage-resident between stateless tasks* (the PyWren model), so quantizing
+m/v to int8 with per-block scales cuts both the HBM footprint and the
+checkpoint bytes ~4x vs fp32 moments (~2x vs bf16).
+
+API mirrors optax loosely:
+    opt = adamw(lr_schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+
+
+def _q8_encode(x: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc: Dict[str, jnp.ndarray], shape) -> jnp.ndarray:
+    flat = (enc["q"].astype(jnp.float32) * enc["scale"]).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any  # pytree (fp32 or q8-encoded)
+    v: Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], AdamWState]
+    update: Callable[[Any, AdamWState, Any], Tuple[Any, AdamWState]]
+
+
+def adamw(
+    lr: Schedule | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    quantize_moments: bool = False,
+    moment_dtype=jnp.float32,
+) -> Optimizer:
+    sched: Schedule = lr if callable(lr) else constant_schedule(lr)
+
+    def _enc(x):
+        return _q8_encode(x) if quantize_moments else x.astype(moment_dtype)
+
+    def _dec(x, shape):
+        return _q8_decode(x, shape) if quantize_moments else x.astype(jnp.float32)
+
+    # v (second moment) is quantized in sqrt space: linear int8 on v zeroes
+    # small entries within a block (one large |g| dominates the scale), and
+    # sqrt(0)+eps in the denominator then produces huge updates.  sqrt-space
+    # doubles the effective dynamic range for small values.
+    def _enc_v(x):
+        return _q8_encode(jnp.sqrt(x)) if quantize_moments else x.astype(moment_dtype)
+
+    def _dec_v(x, shape):
+        if quantize_moments:
+            r = _q8_decode(x, shape)
+            return r * r
+        return x.astype(jnp.float32)
+
+    def init(params) -> AdamWState:
+        zeros = jax.tree_util.tree_map(lambda p: _enc(jnp.zeros_like(p, jnp.float32)), params)
+        zeros2 = jax.tree_util.tree_map(lambda p: _enc_v(jnp.zeros_like(p, jnp.float32)), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+    def update(grads, state: AdamWState, params) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        is_q8 = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}  # noqa: E731
+
+        def upd(g, m_enc, v_enc, p):
+            g = g.astype(jnp.float32)
+            m = _dec(m_enc, g.shape) if quantize_moments else m_enc.astype(jnp.float32)
+            v = _dec_v(v_enc, g.shape) if quantize_moments else v_enc.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if quantize_moments:
+                # Adafactor-style update clipping guards against residual
+                # quantization noise in near-zero blocks
+                rms = jnp.sqrt(jnp.mean(delta * delta) + 1e-12)
+                delta = delta / jnp.maximum(1.0, rms)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * delta).astype(p.dtype), _enc(m), _enc_v(v)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.m) if not quantize_moments else jax.tree_util.tree_leaves(
+            state.m, is_leaf=is_q8
+        )
+        flat_v = tdef.flatten_up_to(state.v) if not quantize_moments else jax.tree_util.tree_leaves(
+            state.v, is_leaf=is_q8
+        )
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * factor, grads), norm

@@ -1,0 +1,189 @@
+"""The stateless training step: (train_state, batch) -> (train_state', metrics).
+
+This is the unit the serverless runtime schedules.  It is *pure*: given the
+same state and batch it produces the same result, which is what makes
+PyWren-style idempotent re-execution correct for training.
+
+Features: CE loss with ignore index, MoE aux loss, MTP aux loss (DeepSeek),
+grad clipping, microbatch gradient accumulation (scan), remat, metrics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import os
+
+from repro.configs.base import ModelConfig
+from repro.models import forward, forward_hidden, head_weight
+from repro.models.sharding import DP, shard
+
+from .fused_ce import fused_cross_entropy
+
+from .optimizer import AdamWState, Optimizer, apply_updates, clip_by_global_norm
+
+IGNORE = -1
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: AdamWState
+
+
+def cross_entropy(
+    logits: jnp.ndarray,  # (B, S, V) fp32
+    labels: jnp.ndarray,  # (B, S) int32, IGNORE = masked
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (summed nll, token count)."""
+    V = logits.shape[-1]
+    mask = labels != IGNORE
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(mask, logz - gold, 0.0)
+    return jnp.sum(nll), jnp.sum(mask)
+
+
+def make_loss_fn(cfg: ModelConfig, *, remat: bool = False, fused_ce: Optional[bool] = None):
+    """fused_ce=True uses chunked-vocab CE (never materializes (N, V) fp32
+    logits — see train/fused_ce.py); requires the head's vocab dim to be
+    unsharded (fsdp_all axis scheme).  Default: REPRO_FUSED_CE env."""
+    aux_w = cfg.moe.router_aux_weight if cfg.moe else 0.0
+    mtp_w = 0.3 if cfg.mtp_depth else 0.0
+    if fused_ce is None:
+        fused_ce = os.environ.get("REPRO_FUSED_CE", "0") == "1"
+
+    def _labels(batch):
+        labels = batch["labels"]
+        if cfg.frontend == "vision_stub" and "prefix_embed" in batch:
+            # prefix positions carry no LM loss
+            P = batch["prefix_embed"].shape[1]
+            pad = jnp.full((labels.shape[0], P), IGNORE, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return labels
+
+    def loss_fn_fused(params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        h, aux, extras = forward_hidden(params, cfg, batch, remat=remat)
+        labels = _labels(batch)
+        W = head_weight(params, cfg)
+        B, S, D = h.shape
+        nll, count = fused_cross_entropy(
+            h.reshape(B * S, D), W, labels.reshape(-1),
+            final_softcap=cfg.final_softcap,
+        )
+        loss = nll / jnp.maximum(count, 1)
+        metrics = {"nll": loss, "tokens": count}
+        if aux_w:
+            loss = loss + aux_w * aux
+            metrics["router_aux"] = aux
+        if mtp_w and "mtp_hidden" in extras:
+            hm = extras["mtp_hidden"]
+            mtp_labels = labels[:, 2:]
+            hm = hm[:, : mtp_labels.shape[1]]
+            Bm, Sm, _ = hm.shape
+            mtp_nll, mtp_count = fused_cross_entropy(
+                hm.reshape(Bm * Sm, D), W, mtp_labels.reshape(-1),
+                final_softcap=cfg.final_softcap,
+            )
+            mtp_loss = mtp_nll / jnp.maximum(mtp_count, 1)
+            loss = loss + mtp_w * mtp_loss
+            metrics["mtp_nll"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def loss_fn(params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        logits, aux, extras = forward(params, cfg, batch, remat=remat)
+        labels = _labels(batch)
+        nll, count = cross_entropy(logits, labels)
+        loss = nll / jnp.maximum(count, 1)
+        metrics = {"nll": loss, "tokens": count}
+        if aux_w:
+            loss = loss + aux_w * aux
+            metrics["router_aux"] = aux
+        if mtp_w and "mtp_logits" in extras:
+            # MTP predicts token t+2 from position t
+            mtp_labels = labels[:, 2:]
+            mtp_logits = extras["mtp_logits"][:, : mtp_labels.shape[1]]
+            mtp_nll, mtp_count = cross_entropy(mtp_logits, mtp_labels)
+            mtp_loss = mtp_nll / jnp.maximum(mtp_count, 1)
+            loss = loss + mtp_w * mtp_loss
+            metrics["mtp_nll"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn_fused if fused_ce else loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt: Optimizer,
+    *,
+    remat: bool = False,
+    grad_clip: float = 1.0,
+    microbatches: int = 1,
+):
+    """Build the jit-able stateless step.
+
+    With microbatches > 1, the global batch is split on the batch axis and
+    gradients are accumulated with a scan — the standard trick to fit large
+    global batches; accumulation happens in fp32.
+    """
+    loss_fn = make_loss_fn(cfg, remat=remat)
+    grad_fn = jax.grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        params = state.params
+
+        if microbatches == 1:
+            grads, metrics = grad_fn(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                assert B % microbatches == 0, (B, microbatches)
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb_i):
+                g_acc, met_acc = carry
+                g, met = grad_fn(params, mb_i)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                met_acc = jax.tree_util.tree_map(lambda a, b: a + b, met_acc, met)
+                return (g_acc, met_acc), None
+
+            # first microbatch outside the scan fixes the metric structure
+            g_first, met_first = grad_fn(
+                params, jax.tree_util.tree_map(lambda x: x[0], mb)
+            )
+            g_first = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), g_first
+            )
+            (grads, metrics), _ = jax.lax.scan(
+                acc_body,
+                (g_first, met_first),
+                jax.tree_util.tree_map(lambda x: x[1:], mb),
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m / microbatches, metrics)
+
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, new_opt = opt.update(grads, state.opt_state, params)
+        new_params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return TrainState(params=new_params, opt_state=new_opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, opt: Optimizer, key) -> TrainState:
+    from repro.models import init_params
+
+    params = init_params(cfg, key)
+    return TrainState(params=params, opt_state=opt.init(params))

@@ -1,0 +1,213 @@
+"""Sharding rules + a small-device-count lowering of the real model code.
+
+The production 512-device dry-run runs via launch/dryrun.py; here we verify
+the same machinery on an 8-device host mesh in a subprocess (the XLA device
+count must be set before jax initializes, so this cannot run in-process).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_param_pspec_rules():
+    out = run_sub(
+        """
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.configs import CONFIGS
+        from repro.models import init_params
+        from repro.models.sharding import param_pspec
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        cfg = CONFIGS["llama3-8b"].reduced()
+        shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        specs = param_pspec(mesh, shapes)
+        # embeddings vocab-sharded over model (512 % 4 == 0)
+        assert specs["embed"]["tok"] == P("model", ("data",)), specs["embed"]["tok"]
+        # stacked (outer, period, D, H, hd): trailing dims follow the rule
+        wq = specs["decoder"]["attn"]["wq"]
+        assert tuple(wq)[-3:] == (("data",), "model", None) or tuple(wq)[-3:] == ("data", "model", None), wq
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_tiny_mesh_train_lowering_with_collectives():
+    """Lower the real train step on an 8-device mesh with a reduced config;
+    assert it compiles and emits collectives (the FSDP/TP proof at mini
+    scale)."""
+    out = run_sub(
+        """
+        import jax, jax.numpy as jnp, re
+        from jax.sharding import NamedSharding
+        from repro.configs import CONFIGS
+        from repro.launch.shardings import batch_pspec, state_pspec, to_shardings
+        from repro.train import adamw, make_train_step
+        from repro.train.train_step import TrainState
+        from repro.models import init_params
+
+        import dataclasses
+        cfg = dataclasses.replace(
+            CONFIGS["llama3-8b"].reduced(),
+            d_model=256, n_heads=8, n_kv_heads=4, head_dim=32, d_ff=512,
+            vocab_size=512, n_layers=4,
+        )
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        opt = adamw(1e-3)
+        def make():
+            p = init_params(cfg, jax.random.PRNGKey(0))
+            return TrainState(params=p, opt_state=opt.init(p))
+        state_shapes = jax.eval_shape(make)
+        ssh = to_shardings(mesh, state_pspec(mesh, state_shapes))
+        state_structs = jax.tree_util.tree_map(
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+            state_shapes, ssh)
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((8, 64), jnp.int32),
+        }
+        bsh = to_shardings(mesh, batch_pspec(mesh, batch))
+        batch_structs = jax.tree_util.tree_map(
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+            batch, bsh)
+        step = make_train_step(cfg, opt)
+        with mesh:
+            compiled = jax.jit(step, donate_argnums=(0,)).lower(
+                state_structs, batch_structs).compile()
+        txt = compiled.as_text()
+        colls = re.findall(r"(all-reduce|all-gather|reduce-scatter)", txt)
+        mem = compiled.memory_analysis()
+        assert len(colls) > 0, "expected collectives in partitioned HLO"
+        assert mem.argument_size_in_bytes > 0
+        print("OK", len(colls))
+        """
+    )
+    assert "OK" in out
+
+
+def test_tiny_mesh_decode_lowering():
+    out = run_sub(
+        """
+        import jax, jax.numpy as jnp, dataclasses
+        from repro.configs import CONFIGS
+        from repro.launch.shardings import cache_pspec, state_pspec, to_shardings
+        from repro.models import decode_step, init_cache, init_params
+
+        cfg = dataclasses.replace(
+            CONFIGS["qwen3-32b"].reduced(),
+            d_model=256, n_heads=8, n_kv_heads=4, head_dim=32, d_ff=512,
+            vocab_size=512, n_layers=2,
+        )
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+        params_shapes = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        psh = to_shardings(mesh, state_pspec(mesh, params_shapes))
+        params_structs = jax.tree_util.tree_map(
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+            params_shapes, psh)
+        cache_shapes = jax.eval_shape(lambda: init_cache(cfg, 8, 128, cache_dtype=jnp.bfloat16))
+        csh = to_shardings(mesh, cache_pspec(mesh, cfg, cache_shapes))
+        cache_structs = jax.tree_util.tree_map(
+            lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+            cache_shapes, csh)
+        fn = lambda p, t, c, l: decode_step(p, cfg, t, c, l)
+        with mesh:
+            compiled = jax.jit(fn, donate_argnums=(2,)).lower(
+                params_structs,
+                jax.ShapeDtypeStruct((8, 1), jnp.int32),
+                cache_structs,
+                jax.ShapeDtypeStruct((), jnp.int32),
+            ).compile()
+        assert compiled.memory_analysis().argument_size_in_bytes > 0
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_mesh_constructors():
+    out = run_sub(
+        """
+        from repro.launch.mesh import make_mesh, mesh_num_devices
+        m = make_mesh(dp=2, tp=4)
+        assert m.axis_names == ("data", "model")
+        assert mesh_num_devices(m) == 8
+        m2 = make_mesh(dp=2, tp=2, pods=2)
+        assert m2.axis_names == ("pod", "data", "model")
+        print("OK")
+        """
+    )
+    assert "OK" in out
+
+
+def test_checkpoint_reshard_across_meshes():
+    """Elastic remesh: checkpoint under (4,2), resume under (2,4) — losses
+    continue (storage-resident state + stateless steps)."""
+    out = run_sub(
+        """
+        import dataclasses, jax
+        from repro.configs import CONFIGS
+        from repro.data import DataConfig, synthetic_batch
+        from repro.launch.mesh import make_mesh
+        from repro.launch.shardings import state_pspec, to_shardings
+        from repro.storage import ObjectStore
+        from repro.train import TrainState, adamw, init_train_state, make_train_step
+        from repro.train import checkpoint as ck
+
+        cfg = dataclasses.replace(
+            CONFIGS["llama3-8b"].reduced(), n_layers=2, d_model=128, d_ff=256,
+            n_heads=4, n_kv_heads=4, head_dim=32, vocab_size=512,
+        )
+        opt = adamw(3e-3, weight_decay=0.0)
+        dcfg = DataConfig(seq_len=16, global_batch=8, vocab_size=cfg.vocab_size)
+        store = ObjectStore()
+
+        def place(state, mesh):
+            sh = to_shardings(mesh, state_pspec(mesh, state))
+            return jax.tree_util.tree_map(lambda x, s: jax.device_put(x, s), state, sh)
+
+        mesh_a = make_mesh(dp=4, tp=2)
+        state = init_train_state(cfg, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, opt))
+        with mesh_a:
+            state = place(state, mesh_a)
+            first = None
+            for i in range(6):
+                state, m = step(state, synthetic_batch(dcfg, i, cfg))
+                first = float(m["loss"]) if first is None else first
+        ck.save(store, "rt", 1, tuple(state))
+
+        mesh_b = make_mesh(dp=2, tp=4)
+        loaded, _, _ = ck.load(store, "rt")
+        state_b = TrainState(*loaded)
+        with mesh_b:
+            state_b = place(state_b, mesh_b)
+            state_b, m = step(state_b, synthetic_batch(dcfg, 6, cfg))
+        resumed = float(m["loss"])
+        assert resumed < first, (resumed, first)
+        print("OK", round(first, 3), "->", round(resumed, 3))
+        """
+    )
+    assert "OK" in out

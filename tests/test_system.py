@@ -1,0 +1,92 @@
+"""End-to-end behaviour: the paper's full story on one runtime instance —
+featurize (map) -> monolithic reduce -> BSP wordcount -> PS training -> 
+elastic LM training with a mid-run failure."""
+
+import numpy as np
+
+from repro.core import (
+    ParameterServer,
+    PSConfig,
+    WrenExecutor,
+    get_all,
+    hogwild_sgd,
+    run_stage,
+    word_count,
+)
+from repro.data import make_documents, shard_corpus, tokenize_line
+
+
+def test_map_then_monolithic_reduce():
+    """§3.3 'Map + monolithic Reduce': parallel featurization, single-node
+    model fit — the ImageNet-GIST workflow shape on synthetic data."""
+    with WrenExecutor(num_workers=4) as wex:
+        docs = make_documents(8, 5, seed=1)
+        store = wex.store  # close over the store handle (pickles by-ref),
+        keys = shard_corpus(store, "corpus", docs)  # never over the executor
+
+        def featurize(key):
+            doc = store.get(key, worker="feat")
+            feats = np.zeros(64)
+            for line in doc:
+                for tok in tokenize_line(line, 64):
+                    feats[tok] += 1.0
+            out_key = key.replace("corpus/", "feats/")
+            store.put(out_key, feats, worker="feat")
+            return out_key
+
+        feat_keys = run_stage(wex, featurize, keys)
+        # monolithic reduce: fetch all features to 'one machine' and fit
+        X = np.stack([store.get(k) for k in feat_keys])
+        w = np.linalg.lstsq(X, np.ones(len(X)), rcond=None)[0]
+        assert np.isfinite(w).all()
+
+
+def test_full_pipeline_wordcount_and_ps():
+    with WrenExecutor(num_workers=4) as wex:
+        docs = make_documents(6, 4, seed=2)
+        wc = word_count(wex, docs, num_reducers=2)
+        assert sum(wc.values()) == sum(len(l.split()) for d in docs for l in d)
+
+        # parameter server: least squares via HOGWILD
+        rng = np.random.default_rng(0)
+        true_w = rng.normal(size=8)
+        shards = []
+        for _ in range(4):
+            X = rng.normal(size=(16, 8))
+            shards.append((X, X @ true_w))
+        ps = ParameterServer(wex.kv, np.zeros(8), PSConfig(num_blocks=2))
+        w = hogwild_sgd(
+            wex, ps,
+            lambda w, s: 2 * s[0].T @ (s[0] @ w - s[1]) / len(s[1]),
+            shards, steps_per_worker=40, lr=0.02,
+        )
+        assert np.linalg.norm(w - true_w) < 0.2
+
+
+def test_elastic_lm_training_with_failure():
+    import jax
+    from repro.configs import CONFIGS
+    from repro.data import DataConfig, synthetic_batch
+    from repro.train import ElasticTrainConfig, adamw, train_elastic
+    from repro.train import checkpoint as ck
+
+    cfg = CONFIGS["llama3-8b"].reduced()
+    dcfg = DataConfig(seq_len=16, global_batch=2, vocab_size=cfg.vocab_size)
+    opt = adamw(1e-3)
+    wex = WrenExecutor(num_workers=2)
+    try:
+        tcfg = ElasticTrainConfig(run="sys", steps_per_chunk=2, total_steps=4)
+        hist = train_elastic(
+            wex, cfg, opt, tcfg, lambda s: synthetic_batch(dcfg, s, cfg)
+        )
+        assert len(hist) == 2
+        # kill a worker, then keep training — the runtime must still finish
+        wex.pool.kill_worker(0)
+        tcfg2 = ElasticTrainConfig(run="sys", steps_per_chunk=2, total_steps=8)
+        hist2 = train_elastic(
+            wex, cfg, opt, tcfg2, lambda s: synthetic_batch(dcfg, s, cfg)
+        )
+        assert len(hist2) == 2
+        assert ck.latest_version(wex.store, "sys") == 4
+    finally:
+        wex.shutdown()
