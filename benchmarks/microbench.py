@@ -1,0 +1,75 @@
+"""Control-plane microbenchmarks: map throughput + job completion time.
+
+Measures what the event-driven dispatch rework targets: per-task scheduling
+overhead with no-op user functions, so queue/lease/notify traffic dominates.
+Reported rows:
+
+  * ``runtime/map_throughput_w{N}`` — sustained tasks/s for a single map of
+    ``n`` no-op tasks on N warm containers (derived: tasks/s, wall s);
+  * ``runtime/job_completion_w{N}`` — wall time of a small *job* (submit →
+    all futures resolved), the end-to-end latency a driver observes.
+
+Run directly (``python -m benchmarks.microbench``) or via
+``python -m benchmarks.run`` which includes these rows in the CSV.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _throughput(rep, num_workers: int, n_tasks: int) -> None:
+    from repro.core import WrenExecutor, get_all
+
+    with WrenExecutor(num_workers=num_workers) as wex:
+        wex.map_get(lambda x: x, [0], timeout_s=60)  # warm containers
+        t0 = time.perf_counter()
+        futs = wex.map(lambda x: x, list(range(n_tasks)))
+        get_all(futs, timeout_s=120)
+        dt = time.perf_counter() - t0
+        rep.row(
+            f"runtime/map_throughput_w{num_workers}",
+            dt / n_tasks * 1e6,
+            tasks_per_s=round(n_tasks / dt, 1),
+            tasks=n_tasks,
+            wall_s=round(dt, 3),
+        )
+
+
+def _job_completion(rep, num_workers: int, n_tasks: int) -> None:
+    from repro.core import WrenExecutor, get_all
+
+    with WrenExecutor(num_workers=num_workers) as wex:
+        wex.map_get(lambda x: x, [0], timeout_s=60)  # warm containers
+        walls = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            get_all(wex.map(lambda x: x + 1, list(range(n_tasks))), timeout_s=120)
+            walls.append(time.perf_counter() - t0)
+        best = min(walls)
+        rep.row(
+            f"runtime/job_completion_w{num_workers}",
+            best * 1e6,
+            tasks=n_tasks,
+            wall_s=round(best, 4),
+        )
+
+
+def map_throughput(rep) -> None:
+    for num_workers, n_tasks in [(4, 400), (16, 400)]:
+        _throughput(rep, num_workers, n_tasks)
+
+
+def job_completion(rep) -> None:
+    _job_completion(rep, 8, 32)
+
+
+ALL = [map_throughput, job_completion]
+
+
+if __name__ == "__main__":
+    from .common import Reporter
+
+    rep = Reporter()
+    for bench in ALL:
+        bench(rep)

@@ -81,12 +81,15 @@ def roofline_summary(rep) -> None:
 
 def main() -> None:
     from .common import Reporter
+    from .microbench import ALL as MICRO
     from .paper_figures import ALL
 
     rep = Reporter()
     for bench in ALL:
         bench(rep)
     runtime_overheads(rep)
+    for bench in MICRO:
+        bench(rep)
     kernel_microbench(rep)
     roofline_summary(rep)
     print(f"\n{len(rep.rows)} benchmark rows emitted")

@@ -10,8 +10,7 @@ in launch/dryrun.py turns (config, shape) into ShapeDtypeStructs.
 
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Dict, List, Optional, Tuple
 
 

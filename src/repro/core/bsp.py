@@ -26,7 +26,7 @@ import numpy as np
 from repro.storage import KVStore, ObjectStore
 from repro.storage import shuffle as shf
 
-from .futures import get_all, wait
+from .futures import get_all
 from .wren import WrenExecutor
 
 

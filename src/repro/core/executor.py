@@ -17,6 +17,21 @@ Each worker thread emulates one serverless container:
 Workers heartbeat their lease from a side thread while the user function
 runs, so long tasks are not falsely reaped, but a *dead* worker stops
 heartbeating and is.
+
+Event-driven dispatch: workers do not poll the queue.  ``Worker.run``
+blocks in ``Scheduler.lease_batch`` on the scheduler's work condition and
+is woken by ``submit*``/requeue notifications, leasing tasks in small
+batches to amortize queue lock traffic.  ``stop()``/``kill()`` wake any
+blocked lease wait via ``Scheduler.wake_workers()`` so shutdown never
+waits out a poll interval.  On *graceful* stop, leased-but-unstarted batch
+tasks are handed back via ``Scheduler.release``; on hard kill (or injected
+death) their leases are left dangling for the reaper, exactly like a lost
+Lambda instance.
+
+Note the stop flag is named ``_stop_evt``: ``threading.Thread`` has a
+private ``_stop()`` *method* in CPython, and shadowing it with an Event
+makes ``Thread.join()`` raise ``TypeError: 'Event' object is not
+callable``.
 """
 
 from __future__ import annotations
@@ -29,7 +44,7 @@ from typing import Callable, Dict, List, Optional
 
 from repro.storage import ObjectStore
 
-from .functions import TaskResult, TaskSpec, run_task
+from .functions import TaskSpec, run_task
 from .resources import LAMBDA_2017, ResourceLimits
 from .scheduler import Scheduler
 
@@ -37,6 +52,10 @@ from .scheduler import Scheduler
 COLD_START_MEAN_S = 9.7
 COLD_SETUP_MEAN_S = 14.2
 WARM_START_S = 0.1
+
+# How long a blocked lease wait lasts before re-checking the stop flag —
+# a defensive backstop only; stop/kill wake the wait explicitly.
+_LEASE_WAIT_S = 0.25
 
 
 @dataclass
@@ -76,6 +95,7 @@ class Worker(threading.Thread):
         compute_time_fn: Optional[Callable[[float], float]] = None,
         seed: int = 0,
         poll_s: float = 0.002,
+        lease_batch_size: int = 4,
     ) -> None:
         super().__init__(name=name, daemon=True)
         self.worker_id = name
@@ -85,35 +105,62 @@ class Worker(threading.Thread):
         self.fault_plan = fault_plan or FaultPlan()
         self.compute_time_fn = compute_time_fn
         self.rng = random.Random(seed)
-        self.poll_s = poll_s
+        self.poll_s = poll_s  # legacy knob; only scales injected slowdowns now
+        self.lease_batch_size = max(1, lease_batch_size)
         self.stats = WorkerStats()
-        self._stop = threading.Event()
+        self._stop_evt = threading.Event()
+        self._killed = False  # hard kill / injected death: leases dangle
         self._warm = False  # container temperature
 
     # -- lifecycle ---------------------------------------------------------
+    @property
+    def stop_requested(self) -> bool:
+        return self._stop_evt.is_set()
+
     def stop(self) -> None:
-        self._stop.set()
+        """Graceful stop: finish the current task, release unstarted leases."""
+        self._stop_evt.set()
+        self.scheduler.wake_workers()
 
     def kill(self) -> None:
         """Hard kill: stop without completing the current lease (scale-down /
         spot preemption).  The scheduler's reaper picks up the pieces."""
-        self._stop.set()
+        self._killed = True
+        self._stop_evt.set()
+        self.scheduler.wake_workers()
 
     # -- the container loop ---------------------------------------------------
     def run(self) -> None:  # noqa: D102
         tasks_done = 0
-        while not self._stop.is_set():
-            task = self.scheduler.lease_next(self.worker_id)
-            if task is None:
-                time.sleep(self.poll_s)
-                continue
-            self._execute(task)
-            tasks_done += 1
-            cap = self.fault_plan.max_tasks_per_worker
-            if cap is not None and tasks_done >= cap:
-                return
+        while not self._stop_evt.is_set():
+            batch = self.scheduler.lease_batch(
+                self.worker_id,
+                max_n=self.lease_batch_size,
+                timeout_s=_LEASE_WAIT_S,
+                should_stop=self._stop_evt.is_set,
+            )
+            for i, task in enumerate(batch):
+                if self._stop_evt.is_set():
+                    self._drop_leases(batch[i:])
+                    return
+                # heartbeat covers the whole held remainder of the batch, so
+                # queued-behind-current leases don't falsely expire
+                self._execute(task, held=batch[i:])
+                tasks_done += 1
+                cap = self.fault_plan.max_tasks_per_worker
+                if cap is not None and tasks_done >= cap:
+                    self._drop_leases(batch[i + 1:])
+                    return
 
-    def _execute(self, task: TaskSpec) -> None:
+    def _drop_leases(self, unstarted: List[TaskSpec]) -> None:
+        """Hand unstarted leases back — unless this container is 'dead', in
+        which case they dangle until lease expiry, like a real lost instance."""
+        if self._killed:
+            return
+        for task in unstarted:
+            self.scheduler.release(task, self.worker_id)
+
+    def _execute(self, task: TaskSpec, held: Optional[List[TaskSpec]] = None) -> None:
         # cold-start accounting (virtual)
         if self._warm:
             setup_vtime = WARM_START_S
@@ -126,14 +173,18 @@ class Worker(threading.Thread):
             self.stats.cold_starts += 1
             self._warm = True
 
-        # heartbeat while running
+        # heartbeat while running — covers the current task plus any
+        # leased-but-unstarted batch remainder this worker still holds
         hb_stop = threading.Event()
+        hb_tasks = held if held else [task]
 
         def _heartbeat() -> None:
             while not hb_stop.is_set():
-                if self._stop.is_set():
-                    return  # dead workers don't heartbeat
-                self.scheduler.heartbeat(task, self.worker_id)
+                if self._killed:
+                    return  # dead containers don't heartbeat; a *graceful*
+                    # stop keeps the current task's lease alive to the end
+                for t in hb_tasks:
+                    self.scheduler.heartbeat(t, self.worker_id)
                 hb_stop.wait(self.scheduler.config.heartbeat_interval_s)
 
         hb = threading.Thread(target=_heartbeat, daemon=True)
@@ -151,7 +202,8 @@ class Worker(threading.Thread):
                 except KeyError:
                     pass
                 died = True
-                self._stop.set()
+                self._killed = True
+                self._stop_evt.set()
                 return
 
             slow = self.fault_plan.slowdown.get(self.worker_id, 1.0)
@@ -190,7 +242,13 @@ class Worker(threading.Thread):
 
 
 class WorkerPool:
-    """Elastic pool: scale_to() adds/removes containers at any time."""
+    """Elastic pool: scale_to() adds/removes containers at any time.
+
+    Liveness is tracked by a *not-stopped* predicate (``runnable_workers``),
+    not thread aliveness alone: a killed worker may take a moment to exit,
+    and a freshly constructed one may not have started yet — both were
+    previously miscounted, so repeated scale up/down drifted away from the
+    requested count."""
 
     def __init__(
         self,
@@ -201,6 +259,7 @@ class WorkerPool:
         fault_plan: Optional[FaultPlan] = None,
         compute_time_fn: Optional[Callable[[float], float]] = None,
         seed: int = 0,
+        lease_batch_size: int = 4,
     ) -> None:
         self.store = store
         self.scheduler = scheduler
@@ -208,38 +267,53 @@ class WorkerPool:
         self.fault_plan = fault_plan or FaultPlan()
         self.compute_time_fn = compute_time_fn
         self.seed = seed
+        self.lease_batch_size = lease_batch_size
         self.workers: List[Worker] = []
         self._next_id = 0
+        self._lock = threading.Lock()
         self.scale_to(num_workers)
+
+    def runnable_workers(self) -> List[Worker]:
+        """Workers that can still take tasks: not stop-requested, and either
+        running or not yet started (a just-constructed thread is runnable)."""
+        return [
+            w
+            for w in self.workers
+            if not w.stop_requested and (w.ident is None or w.is_alive())
+        ]
 
     def scale_to(self, n: int) -> None:
         """Elasticity: spin containers up or down; safe mid-job because state
-        is storage-resident and tasks are idempotent."""
-        alive = [w for w in self.workers if w.is_alive() or not w.ident]
-        while len(alive) < n:
-            w = Worker(
-                name=f"w{self._next_id:04d}",
-                store=self.store,
-                scheduler=self.scheduler,
-                limits=self.limits,
-                fault_plan=self.fault_plan,
-                compute_time_fn=self.compute_time_fn,
-                seed=self.seed + self._next_id,
-            )
-            self._next_id += 1
-            self.workers.append(w)
-            alive.append(w)
-            w.start()
-        # scale down: kill newest first
-        excess = len(alive) - n
-        for w in reversed(alive):
-            if excess <= 0:
-                break
-            w.kill()
-            excess -= 1
+        is storage-resident and tasks are idempotent.  Converges to exactly
+        ``n`` runnable containers even across repeated up/down calls."""
+        with self._lock:
+            runnable = self.runnable_workers()
+            while len(runnable) < n:
+                w = Worker(
+                    name=f"w{self._next_id:04d}",
+                    store=self.store,
+                    scheduler=self.scheduler,
+                    limits=self.limits,
+                    fault_plan=self.fault_plan,
+                    compute_time_fn=self.compute_time_fn,
+                    seed=self.seed + self._next_id,
+                    lease_batch_size=self.lease_batch_size,
+                )
+                self._next_id += 1
+                self.workers.append(w)
+                runnable.append(w)
+                w.start()
+            # scale down: kill newest runnable first
+            for w in reversed(runnable[n:]):
+                w.kill()
 
     def kill_worker(self, idx: int) -> None:
-        self.workers[idx].kill()
+        """Kill the idx-th *runnable* worker (indexing over already-dead
+        workers would silently no-op the kill)."""
+        with self._lock:
+            runnable = self.runnable_workers()
+            target = runnable[idx] if idx < len(runnable) else self.workers[idx]
+        target.kill()
 
     def stop_all(self) -> None:
         for w in self.workers:

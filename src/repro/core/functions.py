@@ -25,7 +25,7 @@ import pickle
 import time
 import traceback
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import cloudpickle  # the paper's serializer [7]
 

@@ -3,7 +3,14 @@
 A PyWren future is just 'does the result key exist yet?'.  The future does
 not talk to workers or the scheduler — completion is signalled purely by the
 atomic existence of the result object, so futures survive scheduler restarts
-and work across processes (anyone with the store handle can poll).
+and work across processes (anyone with the store handle can wait).
+
+Event-driven waiting: ``result()``/``wait()`` block on the store's key-watch
+condition (see ``ObjectStore.notify_put``) instead of sleep-polling.  A
+publish through the same store handle wakes waiters immediately; publishes
+from other processes are caught by the watch facility's fallback tick.  The
+``poll_s`` parameters are retained for backward compatibility and now set
+that fallback tick rather than a busy-wait period.
 """
 
 from __future__ import annotations
@@ -12,6 +19,7 @@ import time
 from typing import Any, List, Optional, Sequence, Tuple
 
 from repro.storage import ObjectStore
+from repro.storage.object_store import WATCH_FALLBACK_TICK_S
 
 from .functions import TaskResult, TaskSpec
 
@@ -40,12 +48,15 @@ class ResultFuture:
             self._cached = self.store.get(self.task.result_key)
         return self._cached
 
-    def result(self, timeout_s: float = 120.0, poll_s: float = 0.001) -> Any:
-        deadline = time.monotonic() + timeout_s
-        while not self.done():
-            if time.monotonic() > deadline:
-                raise TimeoutError(f"task {self.task.task_id} not done in {timeout_s}s")
-            time.sleep(poll_s)
+    def result(self, timeout_s: float = 120.0, poll_s: Optional[float] = None) -> Any:
+        try:
+            self.store.wait_keys(
+                [self.task.result_key], timeout_s=timeout_s, poll_s=poll_s
+            )
+        except TimeoutError:
+            raise TimeoutError(
+                f"task {self.task.task_id} not done in {timeout_s}s"
+            ) from None
         res = self.peek()
         assert res is not None
         if not res.success:
@@ -66,11 +77,16 @@ def wait(
     futures: Sequence[ResultFuture],
     return_when: str = ALL_COMPLETED,
     timeout_s: float = 120.0,
-    poll_s: float = 0.001,
+    poll_s: Optional[float] = None,
 ) -> Tuple[List[ResultFuture], List[ResultFuture]]:
-    """PyWren-style wait: returns (done, not_done)."""
+    """PyWren-style wait: returns (done, not_done).  Blocks on the store's
+    put notifications, so a completing task re-evaluates the condition
+    immediately instead of after a poll interval."""
     deadline = time.monotonic() + timeout_s
+    tick = WATCH_FALLBACK_TICK_S if poll_s is None else poll_s
+    store = futures[0].store if futures else None
     while True:
+        seq = store.put_seq() if store is not None else 0
         done = [f for f in futures if f.done()]
         not_done = [f for f in futures if not f.done()]
         if return_when == ALWAYS:
@@ -79,11 +95,15 @@ def wait(
             return done, not_done
         if return_when == ALL_COMPLETED and not not_done:
             return done, not_done
-        if time.monotonic() > deadline:
+        now = time.monotonic()
+        if now > deadline:
             raise TimeoutError(
                 f"wait timed out with {len(not_done)}/{len(futures)} pending"
             )
-        time.sleep(poll_s)
+        if store is not None:
+            store.wait_put(seq, min(tick, deadline - now))
+        else:
+            time.sleep(min(tick, deadline - now))
 
 
 def get_all(futures: Sequence[ResultFuture], timeout_s: float = 120.0) -> List[Any]:

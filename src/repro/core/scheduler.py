@@ -14,14 +14,34 @@ Fault tolerance model (paper §3.1):
   * *speculation*: tasks running much longer than the completed-task median
     get a duplicate enqueued (the paper observed S3 stragglers in its word
     count; speculative copies are PyWren-safe because of first-writer-wins).
+
+Notification contract (event-driven control plane):
+  * **work condition** — every producer that makes the queue non-empty
+    (``submit``/``submit_many``, ``reap`` requeues, ``speculate``
+    duplicates, ``release``) notifies ``_work_cv``; workers block in
+    ``lease_batch`` on that condition instead of sleeping between polls.
+    The queue length is re-checked under the condition lock before every
+    wait, so an in-process producer can never be missed.  A worker being
+    stopped is woken via ``wake_workers()`` and re-checks its stop
+    predicate.
+  * **activity event** — ``submit*``/``complete``/``release`` (and any
+    requeue) set ``_activity_evt`` so the executor's control loop wakes
+    immediately on job progress.  Between events the control loop sleeps
+    until ``next_wakeup_s()``: a deadline-based fallback tick derived from
+    the heartbeat interval / lease timeout while leases are outstanding
+    (so reaping and straggler detection still run on time), and a long
+    idle tick when nothing is queued or leased.
+  * wakeup guarantee: notifications are in-process only.  A scheduler
+    restarted against the same KV store recovers from storage as before —
+    the fallback tick, not the condition, is the cross-process safety net.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 from repro.storage import KVStore, ObjectStore
 
@@ -41,6 +61,7 @@ class SchedulerConfig:
     speculation_factor: float = 3.0  # duplicate tasks slower than f * median
     min_completed_for_speculation: int = 5
     heartbeat_interval_s: float = 0.2
+    idle_tick_s: float = 0.5  # control-loop fallback when no work in flight
 
 
 class Scheduler:
@@ -58,22 +79,69 @@ class Scheduler:
         # payloads live behind input/func keys in the object store).
         self._specs: Dict[str, TaskSpec] = {}
         self._speculated: set = set()
+        # Event plane (in-process; see module docstring for the contract).
+        self._work_cv = threading.Condition()
+        self._activity_evt = threading.Event()
+        # Advisory count of outstanding leases — drives the control loop's
+        # fallback tick only, never correctness (kv lease records stay the
+        # source of truth and survive a scheduler restart).
+        self._active_leases = 0
+
+    # ---- event plane ----------------------------------------------------
+    def _signal_work(self, n: int = 1) -> None:
+        """Wake workers blocked in ``lease_batch``: n new queue entries."""
+        with self._work_cv:
+            if n == 1:
+                self._work_cv.notify()
+            else:
+                self._work_cv.notify_all()
+        self._activity_evt.set()
+
+    def wake_workers(self) -> None:
+        """Broadcast to blocked workers so they re-check stop predicates."""
+        with self._work_cv:
+            self._work_cv.notify_all()
+
+    def signal_activity(self) -> None:
+        """Wake the control loop (used by executor shutdown too)."""
+        self._activity_evt.set()
+
+    def clear_activity(self) -> None:
+        self._activity_evt.clear()
+
+    def wait_activity(self, timeout_s: float) -> bool:
+        return self._activity_evt.wait(timeout_s)
+
+    def next_wakeup_s(self) -> float:
+        """Deadline-based fallback tick for the control loop: while leases
+        are outstanding (reap/speculation deadlines pending) or work is
+        queued, wake at heartbeat granularity; otherwise idle long."""
+        with self._lock:
+            busy = self._active_leases > 0
+        if busy or self.queue_depth() > 0:
+            return min(
+                self.config.heartbeat_interval_s,
+                max(self.config.lease_timeout_s / 4.0, 0.01),
+            )
+        return self.config.idle_tick_s
 
     # ---- submission -----------------------------------------------------
     def submit(self, task: TaskSpec) -> None:
         with self._lock:
             self._specs[task.task_id] = task
         self.kv.rpush(_Q, task, worker="scheduler")
+        self._signal_work()
 
     def submit_many(self, tasks: List[TaskSpec]) -> None:
         with self._lock:
             for t in tasks:
                 self._specs[t.task_id] = t
         self.kv.rpush(_Q, *tasks, worker="scheduler")
+        self._signal_work(n=len(tasks))
 
     # ---- worker protocol --------------------------------------------------
-    def lease_next(self, worker: str) -> Optional[TaskSpec]:
-        """Atomically pop a task and take its lease."""
+    def _try_lease(self, worker: str) -> Optional[TaskSpec]:
+        """Non-blocking: pop a task and take its lease, or None if empty."""
         while True:
             task: Optional[TaskSpec] = self.kv.lpop(_Q, worker=worker)
             if task is None:
@@ -90,7 +158,63 @@ class Scheduler:
                  "started": now, "attempt": int(attempts) - 1},
                 worker=worker,
             )
+            with self._lock:
+                self._active_leases += 1
             return task.retry() if attempts > 1 else task
+
+    def lease_next(self, worker: str) -> Optional[TaskSpec]:
+        """Atomically pop a task and take its lease (non-blocking)."""
+        return self._try_lease(worker)
+
+    def lease_batch(
+        self,
+        worker: str,
+        max_n: int = 1,
+        timeout_s: Optional[float] = None,
+        should_stop: Optional[Callable[[], bool]] = None,
+    ) -> List[TaskSpec]:
+        """Lease up to ``max_n`` tasks, blocking on the work condition until
+        at least one is available (or ``timeout_s`` elapses / ``should_stop``
+        returns True).  Batching amortizes queue lock traffic; returning an
+        empty list means "no work" — the caller re-checks its own state and
+        may call again."""
+        deadline = None if timeout_s is None else time.monotonic() + timeout_s
+        while True:
+            batch: List[TaskSpec] = []
+            while len(batch) < max_n:
+                task = self._try_lease(worker)
+                if task is None:
+                    break
+                batch.append(task)
+            if batch:
+                return batch
+            with self._work_cv:
+                if should_stop is not None and should_stop():
+                    return []
+                # Re-check under the condition lock: a producer notifies
+                # while holding this lock, so either we see its push here or
+                # our wait() is already registered and gets the notify.
+                if self.kv.llen(_Q, worker=worker) == 0:
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            return []
+                        self._work_cv.wait(remaining)
+                    else:
+                        self._work_cv.wait()
+            if should_stop is not None and should_stop():
+                return []
+
+    def release(self, task: TaskSpec, worker: str) -> None:
+        """Cleanly return a leased-but-unstarted task to the queue (graceful
+        worker shutdown).  Undoes the attempt charge so a preempted task is
+        not penalized toward ``max_attempts``."""
+        self._drop_lease_record(task.task_id, worker)
+        self.kv.incr(_ATTEMPTS + task.task_id, -1, worker=worker)
+        with self._lock:
+            spec = self._specs.get(task.task_id)
+        self.kv.rpush(_Q, spec if spec is not None else task, worker=worker)
+        self._signal_work()
 
     def heartbeat(self, task: TaskSpec, worker: str) -> None:
         def _extend(cur):
@@ -102,9 +226,20 @@ class Scheduler:
 
         self.kv.eval(_LEASE + task.task_id, _extend, worker=worker)
 
+    def _drop_lease_record(self, task_id: str, worker: str) -> None:
+        """Delete a lease record, decrementing the advisory count only if a
+        record actually existed — a reaped lease may already be gone by the
+        time its (still running) worker completes, and double-decrementing
+        would make ``next_wakeup_s`` fall back to the idle tick too early."""
+        if self.kv.get(_LEASE + task_id, worker=worker) is not None:
+            self.kv.delete(_LEASE + task_id, worker=worker)
+            with self._lock:
+                self._active_leases = max(0, self._active_leases - 1)
+
     def complete(self, task: TaskSpec, worker: str, duration_s: float) -> None:
-        self.kv.delete(_LEASE + task.task_id, worker=worker)
+        self._drop_lease_record(task.task_id, worker)
         self.kv.rpush(_DURATION, duration_s, worker=worker)
+        self._activity_evt.set()
 
     # ---- control loop -----------------------------------------------------
     def reap(self) -> int:
@@ -118,8 +253,9 @@ class Scheduler:
                 continue
             lease = self.kv.get(_LEASE + task_id, worker="scheduler")
             if lease is not None and lease["expires"] < now:
-                self.kv.delete(_LEASE + task_id, worker="scheduler")
+                self._drop_lease_record(task_id, "scheduler")
                 self.kv.rpush(_Q, spec, worker="scheduler")
+                self._signal_work()
                 n += 1
         return n
 
@@ -145,6 +281,7 @@ class Scheduler:
             if now - lease["started"] > threshold:
                 self._speculated.add(task_id)
                 self.kv.rpush(_Q, spec, worker="scheduler")
+                self._signal_work()
                 n += 1
         return n
 

@@ -8,20 +8,27 @@
 as many stateless functions as there are elements in the list") and mirrors
 Python's native map API.  The executor owns a control loop that reaps dead
 workers' leases and speculates on stragglers until the job drains.
+
+The control loop is wakeup-driven: it blocks on the scheduler's activity
+event (set by ``submit*``/``complete``/requeues) and otherwise sleeps until
+``Scheduler.next_wakeup_s()`` — a deadline-based fallback tick sized to the
+heartbeat interval while leases are outstanding (so lease expiry and
+straggler detection are still noticed without any event) and a long idle
+tick when nothing is in flight.  ``shutdown()`` signals the same event so
+the loop exits without waiting out a tick.
 """
 
 from __future__ import annotations
 
 import threading
-import time
 import uuid
-from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence
+from typing import Any, Callable, Iterable, List, Optional
 
 from repro.storage import KVStore, ObjectStore
 
 from .executor import FaultPlan, WorkerPool
 from .functions import FunctionSpec, TaskSpec, stage_input
-from .futures import ALL_COMPLETED, ResultFuture, get_all, wait
+from .futures import ResultFuture, get_all
 from .resources import LAMBDA_2017, ResourceLimits
 from .scheduler import Scheduler, SchedulerConfig
 
@@ -57,12 +64,18 @@ class WrenExecutor:
     # ---- control loop: reap + speculate --------------------------------
     def _control_loop(self) -> None:
         while not self._control_stop.is_set():
+            # Clear *before* reaping: activity that lands mid-pass re-arms
+            # the event and the next wait returns immediately.
+            self.scheduler.clear_activity()
             try:
                 self.scheduler.reap()
                 self.scheduler.speculate()
             except Exception:  # noqa: BLE001 — control loop must survive
                 pass
-            self._control_stop.wait(0.05)
+            if self.scheduler.wait_activity(self.scheduler.next_wakeup_s()):
+                # Coalesce activity bursts (e.g. many completions) so the
+                # O(tasks) reap scan runs at a bounded rate, not per event.
+                self._control_stop.wait(0.02)
 
     # ---- the paper's API -------------------------------------------------
     def map(
@@ -97,7 +110,9 @@ class WrenExecutor:
     # ---- lifecycle ------------------------------------------------------
     def shutdown(self) -> None:
         self._control_stop.set()
+        self.scheduler.signal_activity()  # wake the control loop to exit
         self.pool.stop_all()
+        self._control.join(timeout=2.0)
 
     def __enter__(self) -> "WrenExecutor":
         return self

@@ -16,7 +16,6 @@ exercises interpret-mode Pallas end-to-end inside models (slow; CI only).
 
 from __future__ import annotations
 
-import functools
 import math
 import os
 from typing import Optional, Tuple
@@ -24,7 +23,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.util import inner_unroll, scan_unroll
+from repro.util import inner_unroll
 
 from . import ref
 from .decode_attention import decode_attention_pallas

@@ -7,7 +7,7 @@ calls.
 from __future__ import annotations
 
 import re
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import numpy as np
 import jax

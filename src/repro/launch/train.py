@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 
 from repro.configs import CONFIGS
 from repro.core import WrenExecutor

@@ -12,7 +12,7 @@ sharding constraints, see `cache_logical_spec`.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ Caches are family-specific pytrees with a shared scalar "len".
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

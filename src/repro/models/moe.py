@@ -21,7 +21,7 @@ dropped tokens fall through on the residual path.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops  # noqa: F401  (kept for parity with other blocks)
 
 from .layers import Params, dense_init
-from .sharding import DP, TP, residual_shard, shard
+from .sharding import DP, TP, shard
 
 
 def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:

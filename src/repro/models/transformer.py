@@ -14,8 +14,7 @@ where cache is the stage's stacked cache pytree (or None in train mode).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +27,7 @@ from . import mla as mla_mod
 from . import moe as moe_mod
 from . import xlstm as xl
 from .layers import Params, mlp_apply, mlp_init, rmsnorm, rmsnorm_init, scan_unroll
-from .sharding import DP, TP, residual_shard, shard
+from .sharding import residual_shard, shard
 
 
 def _stack_init(key, n: int, init_fn):

@@ -24,7 +24,7 @@ import threading
 import time
 import zlib
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
 from .object_store import Ledger, OpRecord, _Endpoint
 from .perf_model import REDIS_2017, StorageProfile

@@ -13,6 +13,19 @@ Semantics reproduced from the paper's use of S3:
 Backends: in-memory (tests, benchmarks) and file-backed (crash-safe via
 ``os.replace``; used by checkpointing so restarts survive process death).
 
+Key-watch facility (event-driven completion signalling):
+  * every successful ``put_bytes`` through this store handle calls
+    ``notify_put`` — a broadcast on the store's watch condition plus a
+    monotonically increasing put sequence number;
+  * waiters (``wait_keys``, futures) snapshot ``put_seq()``, check key
+    existence, then block in ``wait_put`` until the sequence advances —
+    the snapshot-then-wait ordering means an in-process publish can never
+    be missed between the existence check and the wait;
+  * wakeup guarantee is **per store handle**: a publish through a
+    different handle or process (e.g. another process sharing a
+    ``FileBackend`` directory) does not notify, so waiters also re-check
+    existence on a short fallback tick (``WATCH_FALLBACK_TICK_S``).
+
 Every operation is charged virtual wire time from a
 :class:`~repro.storage.perf_model.StorageProfile` and recorded in a
 :class:`Ledger` keyed by the calling worker, which the paper-figure
@@ -27,7 +40,7 @@ import time
 import uuid
 import weakref
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
 from . import serialization
@@ -110,6 +123,11 @@ class Ledger:
 
 class KeyExistsError(KeyError):
     pass
+
+
+# Fallback re-check interval for key watchers: covers publishes that bypass
+# this store handle's notifications (other processes on a FileBackend).
+WATCH_FALLBACK_TICK_S = 0.25
 
 
 class _Backend:
@@ -224,7 +242,31 @@ class ObjectStore(_Endpoint):
         self.backend = backend or InMemoryBackend()
         self.profile = profile
         self.ledger = ledger or Ledger()
+        self._watch_cv = threading.Condition()
+        self._put_seq = 0
         self._register_endpoint()
+
+    # ---- key watch (notification plane) --------------------------------
+    def notify_put(self, key: str) -> None:
+        """Wake every watcher: ``key`` just became visible.  Called by
+        ``put_bytes`` on each successful write; external backends fed out of
+        band may call it too."""
+        with self._watch_cv:
+            self._put_seq += 1
+            self._watch_cv.notify_all()
+
+    def put_seq(self) -> int:
+        """Snapshot of the put counter; pass to :meth:`wait_put`."""
+        with self._watch_cv:
+            return self._put_seq
+
+    def wait_put(self, last_seq: int, timeout_s: float) -> int:
+        """Block until any put lands after the ``last_seq`` snapshot (or the
+        timeout elapses); returns the current sequence."""
+        with self._watch_cv:
+            if self._put_seq == last_seq:
+                self._watch_cv.wait(timeout_s)
+            return self._put_seq
 
     # ---- raw byte plane ------------------------------------------------
     def put_bytes(
@@ -234,6 +276,8 @@ class ObjectStore(_Endpoint):
         self.ledger.record(
             OpRecord(worker, "put", key, len(blob), self.profile.write_time(len(blob)), time.monotonic())
         )
+        if won:
+            self.notify_put(key)
         return won
 
     def get_bytes(self, key: str, *, worker: str = "-") -> bytes:
@@ -284,19 +328,25 @@ class ObjectStore(_Endpoint):
         return self.put(key, value, worker=worker, if_absent=True)
 
     def wait_keys(
-        self, keys: List[str], *, poll_s: float = 0.002, timeout_s: float = 60.0
+        self, keys: List[str], *, poll_s: Optional[float] = None, timeout_s: float = 60.0
     ) -> None:
-        """Poll for existence of all keys (PyWren signals completion 'by the
-        existence of this key')."""
+        """Block until all keys exist (PyWren signals completion 'by the
+        existence of this key').  Event-driven: woken by ``notify_put`` the
+        moment a publisher on this handle lands a key; re-checks on a short
+        fallback tick only to cover out-of-band writers.  ``poll_s`` is kept
+        for backward compatibility and overrides the fallback tick."""
         deadline = time.monotonic() + timeout_s
+        tick = WATCH_FALLBACK_TICK_S if poll_s is None else poll_s
         pending = list(keys)
-        while pending:
+        while True:
+            seq = self.put_seq()
             pending = [k for k in pending if not self.backend.exists(k)]
             if not pending:
                 return
-            if time.monotonic() > deadline:
+            now = time.monotonic()
+            if now > deadline:
                 raise TimeoutError(f"{len(pending)} keys still absent, e.g. {pending[:3]}")
-            time.sleep(poll_s)
+            self.wait_put(seq, min(tick, deadline - now))
 
     def iter_prefix(self, prefix: str, *, worker: str = "-") -> Iterator[Tuple[str, Any]]:
         for key in self.list(prefix, worker=worker):

@@ -10,7 +10,6 @@ grad clipping, microbatch gradient accumulation (scan), remat, metrics.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -20,7 +19,7 @@ import os
 
 from repro.configs.base import ModelConfig
 from repro.models import forward, forward_hidden, head_weight
-from repro.models.sharding import DP, shard
+from repro.models.sharding import shard
 
 from .fused_ce import fused_cross_entropy
 

@@ -1,0 +1,110 @@
+"""Regression tests for the thread-shutdown bug cascade and the
+event-driven control plane.
+
+Pins:
+  * ``Worker`` must not shadow ``threading.Thread._stop`` (CPython private
+    method) — ``join()`` after ``kill()``/``stop()`` returns cleanly;
+  * ``WorkerPool.stop_all()`` terminates promptly (workers are woken out of
+    blocked lease waits, not left to time out);
+  * repeated ``scale_to`` up/down converges to exactly ``n`` runnable
+    containers (liveness tracked by a not-stopped predicate, not thread
+    aliveness alone);
+  * scale-down mid-job loses no tasks;
+  * ``wait_keys`` / futures return promptly (well under the heartbeat
+    interval) once a result is published — the event-driven contract.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.core import WrenExecutor, get_all
+from repro.storage import ObjectStore
+
+HEARTBEAT_S = 0.2  # SchedulerConfig.heartbeat_interval_s default
+
+
+def test_join_after_kill_returns_cleanly():
+    wex = WrenExecutor(num_workers=2)
+    try:
+        assert wex.map_get(lambda x: x, [1, 2], timeout_s=30) == [1, 2]
+        w = wex.pool.workers[0]
+        w.kill()
+        w.join(timeout=5.0)  # seed bug: raised TypeError ('Event' not callable)
+        assert not w.is_alive()
+    finally:
+        wex.shutdown()
+
+
+def test_stop_all_terminates_within_timeout():
+    wex = WrenExecutor(num_workers=4)
+    assert wex.map_get(lambda x: x + 1, list(range(8)), timeout_s=30) == list(range(1, 9))
+    t0 = time.monotonic()
+    wex.shutdown()
+    assert time.monotonic() - t0 < 5.0
+    assert wex.pool.alive_count() == 0
+
+
+def test_scale_converges_to_exact_runnable_count():
+    wex = WrenExecutor(num_workers=4)
+    try:
+        for n in [1, 5, 2, 6, 3, 0, 3]:
+            wex.scale_to(n)
+            assert len(wex.pool.runnable_workers()) == n, f"scale_to({n})"
+        # killed workers actually exit (they are woken, not stuck polling)
+        deadline = time.monotonic() + 5.0
+        while wex.pool.alive_count() > 3 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert wex.pool.alive_count() == 3
+    finally:
+        wex.shutdown()
+
+
+def test_scale_down_mid_job_loses_no_tasks():
+    wex = WrenExecutor(num_workers=8, seed=7)
+    try:
+        futs = wex.map(lambda x: x * 3, list(range(60)))
+        wex.scale_to(3)
+        wex.scale_to(1)  # thrash down while the queue drains
+        wex.scale_to(4)
+        assert get_all(futs, timeout_s=60) == [x * 3 for x in range(60)]
+        assert len(wex.pool.runnable_workers()) == 4
+    finally:
+        wex.shutdown()
+
+
+def test_wait_keys_returns_promptly_after_publish():
+    """Event-driven pin: a publish through the store handle must wake
+    ``wait_keys`` immediately — not after a poll interval or fallback tick."""
+    store = ObjectStore()
+    publish_delay = 0.15
+
+    def _publish():
+        time.sleep(publish_delay)
+        store.publish_result("evt/r0", 42, worker="w")
+
+    t = threading.Thread(target=_publish)
+    t.start()
+    t0 = time.monotonic()
+    store.wait_keys(["evt/r0"], timeout_s=5.0)
+    elapsed = time.monotonic() - t0
+    t.join()
+    assert elapsed < publish_delay + HEARTBEAT_S, (
+        f"wait_keys took {elapsed:.3f}s; expected < {publish_delay + HEARTBEAT_S:.3f}s"
+    )
+
+
+def test_future_result_wakes_on_publish():
+    with WrenExecutor(num_workers=2) as wex:
+        [fut] = wex.map(lambda x: x ** 2, [9])
+        t0 = time.monotonic()
+        assert fut.result(timeout_s=30) == 81
+        # sanity: no pathological stall (seed polled; events should be fast)
+        assert time.monotonic() - t0 < 10.0
+
+
+def test_wait_keys_timeout_still_raises():
+    store = ObjectStore()
+    with pytest.raises(TimeoutError):
+        store.wait_keys(["never/exists"], timeout_s=0.3)
