@@ -1,16 +1,30 @@
-"""Control-plane microbenchmarks: map throughput + job completion time.
+"""Control-plane microbenchmarks: map throughput, job completion time,
+and a speculation-factor sweep against an injected straggler distribution.
 
-Measures what the event-driven dispatch rework targets: per-task scheduling
-overhead with no-op user functions, so queue/lease/notify traffic dominates.
-Reported rows:
+Measures what the event-driven dispatch + batched data plane target:
+per-task scheduling overhead with no-op user functions, so queue/lease/
+notify/multi-get traffic dominates.  Reported rows:
 
   * ``runtime/map_throughput_w{N}`` — sustained tasks/s for a single map of
     ``n`` no-op tasks on N warm containers (derived: tasks/s, wall s);
   * ``runtime/job_completion_w{N}`` — wall time of a small *job* (submit →
-    all futures resolved), the end-to-end latency a driver observes.
+    all futures resolved), the end-to-end latency a driver observes;
+  * ``runtime/speculation_f{F}`` — completion wall time of a map with one
+    injected straggler worker, across ``speculation_factor`` values: the
+    tuning curve for ``SchedulerConfig.speculation_factor`` (low = eager
+    duplicates hide stragglers sooner at the cost of wasted work).
 
 Run directly (``python -m benchmarks.microbench``) or via
 ``python -m benchmarks.run`` which includes these rows in the CSV.
+
+CLI (the CI bench-smoke job uses all three):
+
+  python -m benchmarks.microbench --quick --json bench.json --floor-tasks-per-s 150
+
+``--quick`` shrinks budgets for CI, ``--json`` writes the rows as a JSON
+artifact, and ``--floor-tasks-per-s`` exits non-zero if the 4-worker map
+throughput regresses below the floor (guarding the batched data plane's
+speedup; PR 1 baseline was ~282 tasks/s on 4 warm workers).
 """
 
 from __future__ import annotations
@@ -36,13 +50,13 @@ def _throughput(rep, num_workers: int, n_tasks: int) -> None:
         )
 
 
-def _job_completion(rep, num_workers: int, n_tasks: int) -> None:
+def _job_completion(rep, num_workers: int, n_tasks: int, reps: int = 3) -> None:
     from repro.core import WrenExecutor, get_all
 
     with WrenExecutor(num_workers=num_workers) as wex:
         wex.map_get(lambda x: x, [0], timeout_s=60)  # warm containers
         walls = []
-        for _ in range(3):
+        for _ in range(reps):
             t0 = time.perf_counter()
             get_all(wex.map(lambda x: x + 1, list(range(n_tasks))), timeout_s=120)
             walls.append(time.perf_counter() - t0)
@@ -55,21 +69,98 @@ def _job_completion(rep, num_workers: int, n_tasks: int) -> None:
         )
 
 
-def map_throughput(rep) -> None:
-    for num_workers, n_tasks in [(4, 400), (16, 400)]:
+def _speculation(rep, factor: float, n_tasks: int) -> None:
+    """One straggler worker (heavy injected slowdown) against a map; lower
+    ``speculation_factor`` duplicates it sooner.  Reports wall time and how
+    many duplicates were enqueued."""
+    from repro.core import FaultPlan, SchedulerConfig, WrenExecutor, get_all
+
+    cfg = SchedulerConfig(
+        lease_timeout_s=5.0,
+        speculation_factor=factor,
+        min_completed_for_speculation=3,
+        # The sweep tunes the *factor*: drop the straggler-age floor so the
+        # factor (× a no-op median) is what decides, not the safety clamp.
+        min_speculation_age_s=0.005,
+    )
+    fp = FaultPlan(slowdown={"w0000": 400.0})
+    wex = WrenExecutor(num_workers=4, scheduler_config=cfg, fault_plan=fp, seed=0)
+    try:
+        wex.map_get(lambda x: x, [0], timeout_s=60)  # warm (cold start excluded)
+        t0 = time.perf_counter()
+        get_all(wex.map(lambda x: x, list(range(n_tasks))), timeout_s=120)
+        dt = time.perf_counter() - t0
+        rep.row(
+            f"runtime/speculation_f{factor:g}",
+            dt * 1e6,
+            wall_s=round(dt, 4),
+            duplicates=len(wex.scheduler._speculated),
+            tasks=n_tasks,
+        )
+    finally:
+        wex.shutdown()
+
+
+def map_throughput(rep, quick: bool = False) -> None:
+    plan = [(4, 200)] if quick else [(4, 400), (16, 400)]
+    for num_workers, n_tasks in plan:
         _throughput(rep, num_workers, n_tasks)
 
 
-def job_completion(rep) -> None:
-    _job_completion(rep, 8, 32)
+def job_completion(rep, quick: bool = False) -> None:
+    _job_completion(rep, 8, 32, reps=1 if quick else 3)
 
 
-ALL = [map_throughput, job_completion]
+def speculation_sweep(rep, quick: bool = False) -> None:
+    factors = [3.0] if quick else [1.5, 3.0, 6.0]
+    for f in factors:
+        _speculation(rep, f, n_tasks=24)
 
 
-if __name__ == "__main__":
+ALL = [map_throughput, job_completion, speculation_sweep]
+
+
+def main(argv=None) -> int:
+    import argparse
+    import json
+
     from .common import Reporter
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small CI budget")
+    ap.add_argument("--json", metavar="PATH", help="write rows as JSON")
+    ap.add_argument(
+        "--floor-tasks-per-s",
+        type=float,
+        default=None,
+        help="fail (exit 1) if 4-worker map throughput is below this",
+    )
+    args = ap.parse_args(argv)
 
     rep = Reporter()
     for bench in ALL:
-        bench(rep)
+        bench(rep, quick=args.quick)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rep.rows, f, indent=2)
+        print(f"wrote {len(rep.rows)} rows to {args.json}")
+
+    if args.floor_tasks_per_s is not None:
+        tput = [
+            r["tasks_per_s"]
+            for r in rep.rows
+            if r["name"] == "runtime/map_throughput_w4"
+        ]
+        if not tput or max(tput) < args.floor_tasks_per_s:
+            print(
+                f"FAIL: map throughput {max(tput or [0.0])} tasks/s below "
+                f"floor {args.floor_tasks_per_s}"
+            )
+            return 1
+        print(f"throughput floor ok: {max(tput)} >= {args.floor_tasks_per_s} tasks/s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import time
 from collections import Counter
-from typing import Dict, List
 
 import numpy as np
 

@@ -37,10 +37,19 @@ def run_stage(
     *,
     timeout_s: float = 300.0,
     job_id: Optional[str] = None,
+    gc: bool = False,
 ) -> List[Any]:
-    """One BSP superstep: map + barrier."""
-    futures = wex.map(fn, items, job_id=job_id)
-    return get_all(futures, timeout_s=timeout_s)
+    """One BSP superstep: map + barrier.  The barrier's result fan-in rides
+    ``get_all``'s single multi-get.  ``gc=True`` frees the superstep's
+    scheduler/storage state once its results are in hand — multi-stage
+    pipelines (mapreduce, terasort) use it so scheduler state stays bounded
+    by the *current* stage, not the whole pipeline history."""
+    job = job_id or f"stage-{uuid.uuid4().hex[:8]}"
+    futures = wex.map(fn, items, job_id=job)
+    out = get_all(futures, timeout_s=timeout_s)
+    if gc:
+        wex.finish_job(job)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -78,8 +87,10 @@ def mapreduce(
             grouped[k].append(v)
         return {k: reduce_fn(k, vs) for k, vs in grouped.items()}
 
-    run_stage(wex, _map_task, list(enumerate(partitions)), timeout_s=timeout_s)
-    red_out = run_stage(wex, _reduce_task, list(range(num_reducers)), timeout_s=timeout_s)
+    run_stage(wex, _map_task, list(enumerate(partitions)), timeout_s=timeout_s, gc=True)
+    red_out = run_stage(
+        wex, _reduce_task, list(range(num_reducers)), timeout_s=timeout_s, gc=True
+    )
     merged: Dict[Any, Any] = {}
     for d in red_out:
         merged.update(d)
@@ -146,7 +157,7 @@ def terasort(
         idx = np.linspace(0, len(recs) - 1, min(sample_per_task, len(recs))).astype(int)
         return [shf.record_sort_key(recs[i]) for i in idx]
 
-    samples = run_stage(wex, _sample_task, input_keys, timeout_s=timeout_s)
+    samples = run_stage(wex, _sample_task, input_keys, timeout_s=timeout_s, gc=True)
     flat = [s for chunk in samples for s in chunk]
     splitters = shf.sample_splitters(flat, num_partitions)
     report.splitters = len(splitters)
@@ -161,7 +172,9 @@ def terasort(
         )
         return {"records": len(recs), "objects": n_objs}
 
-    part_out = run_stage(wex, _partition_task, list(enumerate(input_keys)), timeout_s=timeout_s)
+    part_out = run_stage(
+        wex, _partition_task, list(enumerate(input_keys)), timeout_s=timeout_s, gc=True
+    )
     report.n_records = int(sum(o["records"] for o in part_out))
     report.n_intermediate_objects = int(sum(o["objects"] for o in part_out))
 
@@ -175,7 +188,9 @@ def terasort(
         store.put(f"{output_prefix}/part{part_id:06d}", out, worker=f"merge{part_id}")
         return len(chunk)
 
-    merged_counts = run_stage(wex, _merge_task, list(range(num_partitions)), timeout_s=timeout_s)
+    merged_counts = run_stage(
+        wex, _merge_task, list(range(num_partitions)), timeout_s=timeout_s, gc=True
+    )
     assert sum(merged_counts) == report.n_records, "sort lost records"
 
     # --- phase accounting (Fig 6) -------------------------------------------

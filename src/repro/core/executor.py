@@ -19,11 +19,12 @@ runs, so long tasks are not falsely reaped, but a *dead* worker stops
 heartbeating and is.
 
 Event-driven dispatch: workers do not poll the queue.  ``Worker.run``
-blocks in ``Scheduler.lease_batch`` on the scheduler's work condition and
-is woken by ``submit*``/requeue notifications, leasing tasks in small
-batches to amortize queue lock traffic.  ``stop()``/``kill()`` wake any
-blocked lease wait via ``Scheduler.wake_workers()`` so shutdown never
-waits out a poll interval.  On *graceful* stop, leased-but-unstarted batch
+blocks in ``Scheduler.lease_batch`` on the *queue shard's* KV watch
+condition and is woken by any producer's ``rpush`` (submit, reap requeue,
+speculation duplicate) — including producers on other scheduler handles
+sharing the KV — leasing tasks in small batches to amortize queue lock
+traffic.  ``stop()``/``kill()`` wake any blocked lease wait via
+``Scheduler.wake_workers()`` so shutdown never waits out a poll interval.  On *graceful* stop, leased-but-unstarted batch
 tasks are handed back via ``Scheduler.release``; on hard kill (or injected
 death) their leases are left dangling for the reaper, exactly like a lost
 Lambda instance.

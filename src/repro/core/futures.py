@@ -7,10 +7,14 @@ and work across processes (anyone with the store handle can wait).
 
 Event-driven waiting: ``result()``/``wait()`` block on the store's key-watch
 condition (see ``ObjectStore.notify_put``) instead of sleep-polling.  A
-publish through the same store handle wakes waiters immediately; publishes
-from other processes are caught by the watch facility's fallback tick.  The
-``poll_s`` parameters are retained for backward compatibility and now set
-that fallback tick rather than a busy-wait period.
+publish through the same store handle wakes waiters immediately; only
+cross-process backends (``FileBackend``) keep a fallback re-check tick,
+since an external writer never notifies this process.  The ``poll_s``
+parameters are retained for backward compatibility and override that tick.
+
+Batched resolution: ``get_all`` waits for every result key, then fetches
+all uncached results in a *single* ``ObjectStore.get_many`` — one amortized
+round-trip for the whole fan-in instead of one modeled request per future.
 """
 
 from __future__ import annotations
@@ -48,6 +52,13 @@ class ResultFuture:
             self._cached = self.store.get(self.task.result_key)
         return self._cached
 
+    def _unwrap(self, res: TaskResult) -> Any:
+        if not res.success:
+            raise RuntimeError(
+                f"task {self.task.task_id} failed after attempt {res.attempt}:\n{res.error}"
+            )
+        return res.value
+
     def result(self, timeout_s: float = 120.0, poll_s: Optional[float] = None) -> Any:
         try:
             self.store.wait_keys(
@@ -59,11 +70,7 @@ class ResultFuture:
             ) from None
         res = self.peek()
         assert res is not None
-        if not res.success:
-            raise RuntimeError(
-                f"task {self.task.task_id} failed after attempt {res.attempt}:\n{res.error}"
-            )
-        return res.value
+        return self._unwrap(res)
 
     def errors(self) -> List[TaskResult]:
         """All published failed attempts (for diagnostics)."""
@@ -81,10 +88,20 @@ def wait(
 ) -> Tuple[List[ResultFuture], List[ResultFuture]]:
     """PyWren-style wait: returns (done, not_done).  Blocks on the store's
     put notifications, so a completing task re-evaluates the condition
-    immediately instead of after a poll interval."""
+    immediately instead of after a poll interval.  Purely event-driven for
+    in-process backends; cross-process backends re-check on the store's
+    fallback tick (see ``ObjectStore.watch_tick_s``)."""
     deadline = time.monotonic() + timeout_s
-    tick = WATCH_FALLBACK_TICK_S if poll_s is None else poll_s
     store = futures[0].store if futures else None
+    backends = {id(f.store.backend) for f in futures}
+    if len(backends) > 1:
+        # Watch state is per *backend*; we can only block on one backend's
+        # condition, and completions landing in the others never advance
+        # its sequence — a fallback re-check tick is required for liveness.
+        # (Distinct store handles over one shared backend stay event-driven.)
+        tick = WATCH_FALLBACK_TICK_S if poll_s is None else poll_s
+    else:
+        tick = store.watch_tick_s(poll_s) if store is not None else poll_s
     while True:
         seq = store.put_seq() if store is not None else 0
         done = [f for f in futures if f.done()]
@@ -100,12 +117,29 @@ def wait(
             raise TimeoutError(
                 f"wait timed out with {len(not_done)}/{len(futures)} pending"
             )
+        remaining = deadline - now
         if store is not None:
-            store.wait_put(seq, min(tick, deadline - now))
+            store.wait_put(seq, remaining if tick is None else min(tick, remaining))
         else:
-            time.sleep(min(tick, deadline - now))
+            time.sleep(min(tick or 0.05, remaining))
 
 
 def get_all(futures: Sequence[ResultFuture], timeout_s: float = 120.0) -> List[Any]:
+    """Resolve every future; results in submission order.
+
+    Batched: after the barrier, all uncached results are fetched in one
+    ``get_many`` per store handle — the whole fan-in costs one amortized
+    round-trip instead of one modeled request per future (the numpywren
+    multi-get lesson; dominant for large maps)."""
     wait(futures, ALL_COMPLETED, timeout_s=timeout_s)
-    return [f.result(timeout_s=timeout_s) for f in futures]
+    by_store: dict = {}
+    for f in futures:
+        if f._cached is None:
+            by_store.setdefault(id(f.store), (f.store, []))[1].append(f)
+    for store, group in by_store.values():
+        fetched = store.get_many(
+            [f.result_key for f in group], worker="driver", missing="error"
+        )
+        for f in group:
+            f._cached = fetched[f.result_key]
+    return [f._unwrap(f._cached) for f in futures]

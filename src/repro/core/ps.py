@@ -16,11 +16,17 @@ Design:
     versions are rejected and the worker re-pulls;
   * optional int8 **gradient compression** with stochastic rounding — a
     beyond-paper distributed-optimization trick (bytes through the KV store
-    are the PS bottleneck, as Fig 4 quantifies).
+    are the PS bottleneck, as Fig 4 quantifies);
+  * **batched pulls** — ``pull()`` fetches every block and version counter
+    in one ``KVStore.mget`` (one amortized round-trip per KV shard touched,
+    not one per block), and ``wait_fresh()`` lets a staleness-rejected
+    worker block on the version key's *shard condition* until another
+    worker's push advances it — no re-pull spinning.
 """
 
 from __future__ import annotations
 
+import time
 import uuid
 from dataclasses import dataclass
 from typing import Any, Callable, List, Optional, Sequence, Tuple
@@ -81,11 +87,35 @@ class ParameterServer:
 
     # ---- client ops ------------------------------------------------------
     def pull(self, worker: str = "-") -> Tuple[np.ndarray, List[int]]:
-        parts, vers = [], []
-        for b in range(len(self.block_slices)):
-            parts.append(self.kv.get(self._bkey(b), worker=worker))
-            vers.append(int(self.kv.get(self._vkey(b), 0, worker=worker)))
+        """Fetch all blocks + version counters in one batched ``mget`` —
+        one amortized round-trip per KV shard instead of 2·num_blocks
+        synchronous gets (the Fig 4 latency, paid once per shard)."""
+        n = len(self.block_slices)
+        keys = [self._bkey(b) for b in range(n)] + [self._vkey(b) for b in range(n)]
+        vals = self.kv.mget(keys, worker=worker)
+        parts = vals[:n]
+        vers = [int(v) if v is not None else 0 for v in vals[n:]]
         return np.concatenate(parts), vers
+
+    def wait_fresh(
+        self, block: int, seen_version: int, timeout_s: float = 5.0, worker: str = "-"
+    ) -> int:
+        """Block until ``block``'s version advances past ``seen_version``
+        (another worker pushed), waiting on the version key's shard
+        condition — woken by the push itself, no polling.  Returns the
+        current version (which may still equal ``seen_version`` on
+        timeout)."""
+        vkey = self._vkey(block)
+        deadline = time.monotonic() + timeout_s
+        while True:
+            seq = self.kv.shard_seq(vkey)
+            ver = int(self.kv.get(vkey, 0, worker=worker))
+            if ver > seen_version:
+                return ver
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return ver
+            self.kv.wait_key(vkey, seq, remaining)
 
     def push_delta(
         self,

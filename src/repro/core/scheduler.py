@@ -16,32 +16,53 @@ Fault tolerance model (paper §3.1):
     count; speculative copies are PyWren-safe because of first-writer-wins).
 
 Notification contract (event-driven control plane):
-  * **work condition** — every producer that makes the queue non-empty
-    (``submit``/``submit_many``, ``reap`` requeues, ``speculate``
-    duplicates, ``release``) notifies ``_work_cv``; workers block in
-    ``lease_batch`` on that condition instead of sleeping between polls.
-    The queue length is re-checked under the condition lock before every
-    wait, so an in-process producer can never be missed.  A worker being
-    stopped is woken via ``wake_workers()`` and re-checks its stop
+  * **per-shard queue watch** — workers block in ``lease_batch`` on the
+    watch condition of the KV shard holding the queue key
+    (``KVStore.wait_key``): every producer's ``rpush`` (``submit``/
+    ``submit_many``, ``reap`` requeues, ``speculate`` duplicates,
+    ``release``) notifies that shard as part of the write itself, so *any*
+    producer sharing the KV — including a second scheduler handle — wakes
+    waiting workers, not just this object.  Queue length is re-checked
+    between the shard-sequence snapshot and the wait, so an in-process
+    push can never be missed.  A worker being stopped is woken via
+    ``wake_workers()`` (a virtual shard touch) and re-checks its stop
     predicate.
   * **activity event** — ``submit*``/``complete``/``release`` (and any
     requeue) set ``_activity_evt`` so the executor's control loop wakes
     immediately on job progress.  Between events the control loop sleeps
-    until ``next_wakeup_s()``: a deadline-based fallback tick derived from
-    the heartbeat interval / lease timeout while leases are outstanding
-    (so reaping and straggler detection still run on time), and a long
-    idle tick when nothing is queued or leased.
+    until ``next_wakeup_s()``, which reads the *lease-expiry heap*: the
+    earliest outstanding expiry bounds the sleep (capped at heartbeat
+    granularity so straggler detection still runs), and a long idle tick
+    applies when nothing is queued or leased.
   * wakeup guarantee: notifications are in-process only.  A scheduler
     restarted against the same KV store recovers from storage as before —
     the fallback tick, not the condition, is the cross-process safety net.
+
+Lease indexing (heap, lazy deletion):
+  * ``_try_lease`` pushes ``(expires, task_id)`` on the expiry heap and
+    ``(started, task_id)`` on the per-job start heap.  The KV lease record
+    stays the *source of truth*; heap entries are hints.  ``reap`` pops
+    only entries whose hinted expiry has passed, re-validates against the
+    record (a heartbeat may have extended it — re-push with the real
+    expiry; the task may have completed — drop), and requeues genuinely
+    expired leases: O(log n) per expiry instead of an O(n) scan of every
+    spec per control pass.  ``speculate`` pops per-job start-heap entries
+    older than the straggler threshold the same way.
+
+Per-job GC: completed jobs' specs, attempt counters, lease records,
+duration samples, and result/input objects otherwise accumulate for the
+life of the executor.  ``finish_job(job_id)`` frees all of them; stale
+heap entries for the job are discarded lazily on their next pop.
 """
 
 from __future__ import annotations
 
+import heapq
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
 from repro.storage import KVStore, ObjectStore
 
@@ -50,16 +71,34 @@ from .functions import TaskSpec
 _Q = "sched/queue"
 _LEASE = "sched/lease/"
 _ATTEMPTS = "sched/attempts/"
-_RUNNING = "sched/running"
-_DURATION = "sched/durations"
+_DURATION = "sched/durations/"  # per-job list: sched/durations/<job_id>
+
+# Cap for an untimed lease wait; workers are woken by writes/wake_workers,
+# so this only bounds how long a fully idle, never-notified wait can hold.
+_UNBOUNDED_WAIT_S = 3600.0
+
+# Finished-job tombstones kept before FIFO eviction (see Scheduler.__init__).
+_MAX_TOMBSTONES = 1024
 
 
 @dataclass
 class SchedulerConfig:
     lease_timeout_s: float = 1.0
     max_attempts: int = 4
-    speculation_factor: float = 3.0  # duplicate tasks slower than f * median
+    # Straggler knob (paper §3.1 / our microbench sweep): duplicate tasks
+    # running longer than ``speculation_factor * median completed duration``.
+    # Lower = more aggressive duplicates (costs work, hides stragglers
+    # sooner); higher = near-zero duplicate work but long tails survive.
+    # ``benchmarks/microbench.py speculation_sweep`` measures completion
+    # time across factors against an injected straggler distribution.
+    speculation_factor: float = 3.0
     min_completed_for_speculation: int = 5
+    # Floor on the straggler threshold: with no-op tasks the median duration
+    # is microseconds, and a 1 ms-scale floor speculates on any task that
+    # merely hit a scheduler blip (flaky duplicates under CI load).  A task
+    # must run at least this long before it can be called a straggler;
+    # duplicating anything quicker costs more than it hides.
+    min_speculation_age_s: float = 0.05
     heartbeat_interval_s: float = 0.2
     idle_tick_s: float = 0.5  # control-loop fallback when no work in flight
 
@@ -79,8 +118,24 @@ class Scheduler:
         # payloads live behind input/func keys in the object store).
         self._specs: Dict[str, TaskSpec] = {}
         self._speculated: set = set()
+        # job_id -> task_ids, so finish_job frees a job without scanning.
+        self._jobs: Dict[str, Set[str]] = {}
+        # Tombstones: jobs already GC'd.  A speculative duplicate or reaped
+        # retry of a finished job may still sit in the queue; leasing it
+        # would resurrect attempts/lease/duration state finish_job just
+        # freed (and fail on the deleted input anyway), so _try_lease drops
+        # tasks of tombstoned jobs instead.  Kept in-memory only: a *fresh*
+        # scheduler over the same KV must still recover queued work.
+        # Bounded (FIFO eviction at _MAX_TOMBSTONES): a duplicate outliving
+        # that many subsequent jobs has long since drained from the queue,
+        # and an unbounded set would just re-create per-job accumulation.
+        self._finished_jobs: Set[str] = set()
+        self._finished_order: Deque[str] = deque()
+        # Lease indexes (lazy heaps; see module docstring).  Guarded by
+        # self._lock.  KV lease records remain the source of truth.
+        self._lease_heap: List[Tuple[float, str]] = []  # (expires, task_id)
+        self._start_heaps: Dict[str, List[Tuple[float, str]]] = {}  # job -> (started, task_id)
         # Event plane (in-process; see module docstring for the contract).
-        self._work_cv = threading.Condition()
         self._activity_evt = threading.Event()
         # Advisory count of outstanding leases — drives the control loop's
         # fallback tick only, never correctness (kv lease records stay the
@@ -88,19 +143,16 @@ class Scheduler:
         self._active_leases = 0
 
     # ---- event plane ----------------------------------------------------
-    def _signal_work(self, n: int = 1) -> None:
-        """Wake workers blocked in ``lease_batch``: n new queue entries."""
-        with self._work_cv:
-            if n == 1:
-                self._work_cv.notify()
-            else:
-                self._work_cv.notify_all()
+    def _signal_work(self) -> None:
+        """Producers made the queue non-empty.  Worker wakeups already
+        happened inside the queue ``rpush`` (per-shard notify); this only
+        arms the control-loop activity event."""
         self._activity_evt.set()
 
     def wake_workers(self) -> None:
-        """Broadcast to blocked workers so they re-check stop predicates."""
-        with self._work_cv:
-            self._work_cv.notify_all()
+        """Wake workers blocked on the queue shard (virtual touch) so they
+        re-check stop predicates."""
+        self.kv.notify_key(_Q)
 
     def signal_activity(self) -> None:
         """Wake the control loop (used by executor shutdown too)."""
@@ -113,31 +165,41 @@ class Scheduler:
         return self._activity_evt.wait(timeout_s)
 
     def next_wakeup_s(self) -> float:
-        """Deadline-based fallback tick for the control loop: while leases
-        are outstanding (reap/speculation deadlines pending) or work is
-        queued, wake at heartbeat granularity; otherwise idle long."""
+        """Deadline-based fallback tick for the control loop.  While leases
+        are outstanding, sleep until the earliest hinted expiry on the lease
+        heap (capped at heartbeat granularity so straggler detection still
+        runs); while work is merely queued, heartbeat granularity; otherwise
+        idle long.  O(1): the heap top is the earliest deadline."""
+        now = time.monotonic()
         with self._lock:
             busy = self._active_leases > 0
+            next_expiry = self._lease_heap[0][0] if self._lease_heap else None
         if busy or self.queue_depth() > 0:
-            return min(
+            tick = min(
                 self.config.heartbeat_interval_s,
                 max(self.config.lease_timeout_s / 4.0, 0.01),
             )
+            if busy and next_expiry is not None:
+                tick = min(tick, max(next_expiry - now, 0.01))
+            return tick
         return self.config.idle_tick_s
 
     # ---- submission -----------------------------------------------------
-    def submit(self, task: TaskSpec) -> None:
+    def _index_tasks(self, tasks: List[TaskSpec]) -> None:
         with self._lock:
-            self._specs[task.task_id] = task
+            for t in tasks:
+                self._specs[t.task_id] = t
+                self._jobs.setdefault(t.job_id, set()).add(t.task_id)
+
+    def submit(self, task: TaskSpec) -> None:
+        self._index_tasks([task])
         self.kv.rpush(_Q, task, worker="scheduler")
         self._signal_work()
 
     def submit_many(self, tasks: List[TaskSpec]) -> None:
-        with self._lock:
-            for t in tasks:
-                self._specs[t.task_id] = t
+        self._index_tasks(tasks)
         self.kv.rpush(_Q, *tasks, worker="scheduler")
-        self._signal_work(n=len(tasks))
+        self._signal_work()
 
     # ---- worker protocol --------------------------------------------------
     def _try_lease(self, worker: str) -> Optional[TaskSpec]:
@@ -146,20 +208,29 @@ class Scheduler:
             task: Optional[TaskSpec] = self.kv.lpop(_Q, worker=worker)
             if task is None:
                 return None
+            with self._lock:
+                if task.job_id in self._finished_jobs:
+                    continue  # stale duplicate of a GC'd job: drop, don't resurrect
             if self.store.backend.exists(task.result_key):
                 continue  # already done (speculative duplicate became moot)
             attempts = self.kv.incr(_ATTEMPTS + task.task_id, 1, worker=worker)
             if attempts > self.config.max_attempts:
                 continue  # dropped; driver will surface missing-result error
             now = time.monotonic()
+            expires = now + self.config.lease_timeout_s
             self.kv.set(
                 _LEASE + task.task_id,
-                {"worker": worker, "expires": now + self.config.lease_timeout_s,
+                {"worker": worker, "expires": expires,
                  "started": now, "attempt": int(attempts) - 1},
                 worker=worker,
             )
             with self._lock:
                 self._active_leases += 1
+                heapq.heappush(self._lease_heap, (expires, task.task_id))
+                heapq.heappush(
+                    self._start_heaps.setdefault(task.job_id, []),
+                    (now, task.task_id),
+                )
             return task.retry() if attempts > 1 else task
 
     def lease_next(self, worker: str) -> Optional[TaskSpec]:
@@ -173,11 +244,12 @@ class Scheduler:
         timeout_s: Optional[float] = None,
         should_stop: Optional[Callable[[], bool]] = None,
     ) -> List[TaskSpec]:
-        """Lease up to ``max_n`` tasks, blocking on the work condition until
-        at least one is available (or ``timeout_s`` elapses / ``should_stop``
-        returns True).  Batching amortizes queue lock traffic; returning an
-        empty list means "no work" — the caller re-checks its own state and
-        may call again."""
+        """Lease up to ``max_n`` tasks, blocking on the *queue shard's* watch
+        condition until at least one is available (or ``timeout_s`` elapses /
+        ``should_stop`` returns True).  Any producer's ``rpush`` through the
+        shared KV wakes this — not just producers on this scheduler object.
+        Batching amortizes queue lock traffic; returning an empty list means
+        "no work" — the caller re-checks its own state and may call again."""
         deadline = None if timeout_s is None else time.monotonic() + timeout_s
         while True:
             batch: List[TaskSpec] = []
@@ -188,20 +260,22 @@ class Scheduler:
                 batch.append(task)
             if batch:
                 return batch
-            with self._work_cv:
-                if should_stop is not None and should_stop():
-                    return []
-                # Re-check under the condition lock: a producer notifies
-                # while holding this lock, so either we see its push here or
-                # our wait() is already registered and gets the notify.
-                if self.kv.llen(_Q, worker=worker) == 0:
-                    if deadline is not None:
-                        remaining = deadline - time.monotonic()
-                        if remaining <= 0:
-                            return []
-                        self._work_cv.wait(remaining)
-                    else:
-                        self._work_cv.wait()
+            # Snapshot the shard sequence *before* checking should_stop and
+            # queue emptiness: a push — or a wake_workers() stop signal,
+            # which sets the stop flag *then* touches the shard — landing
+            # after the snapshot advances the sequence, so the wait below
+            # returns immediately instead of missing it.
+            seq = self.kv.shard_seq(_Q)
+            if should_stop is not None and should_stop():
+                return []
+            if self.kv.llen(_Q, worker=worker) == 0:
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return []
+                    self.kv.wait_key(_Q, seq, remaining)
+                else:
+                    self.kv.wait_key(_Q, seq, _UNBOUNDED_WAIT_S)
             if should_stop is not None and should_stop():
                 return []
 
@@ -210,9 +284,12 @@ class Scheduler:
         worker shutdown).  Undoes the attempt charge so a preempted task is
         not penalized toward ``max_attempts``."""
         self._drop_lease_record(task.task_id, worker)
-        self.kv.incr(_ATTEMPTS + task.task_id, -1, worker=worker)
         with self._lock:
+            finished = task.job_id in self._finished_jobs
             spec = self._specs.get(task.task_id)
+        if finished:
+            return  # job GC'd while leased: don't re-create attempts/queue state
+        self.kv.incr(_ATTEMPTS + task.task_id, -1, worker=worker)
         self.kv.rpush(_Q, spec if spec is not None else task, worker=worker)
         self._signal_work()
 
@@ -238,52 +315,142 @@ class Scheduler:
 
     def complete(self, task: TaskSpec, worker: str, duration_s: float) -> None:
         self._drop_lease_record(task.task_id, worker)
-        self.kv.rpush(_DURATION, duration_s, worker=worker)
+        # Durations are kept per job: stragglers are judged against their
+        # own job's distribution, and finish_job can free the samples.  An
+        # in-flight duplicate finishing after its job was GC'd must not
+        # re-create state finish_job just deleted: skip the duration push
+        # and scrub the result/.err objects its publish re-created (the
+        # result key was absent again, so its if_absent publish won).
+        with self._lock:
+            finished = task.job_id in self._finished_jobs
+        if finished:
+            self.store.delete_prefix(task.result_key, worker=worker)
+        else:
+            self.kv.rpush(_DURATION + task.job_id, duration_s, worker=worker)
         self._activity_evt.set()
 
     # ---- control loop -----------------------------------------------------
     def reap(self) -> int:
-        """Re-enqueue tasks whose lease expired (worker death). Returns count."""
+        """Re-enqueue tasks whose lease expired (worker death). Returns count.
+
+        Heap-indexed: pops only entries whose *hinted* expiry has passed,
+        then re-validates against the KV lease record — extended leases are
+        re-pushed with their real expiry, completed/GC'd ones are dropped.
+        O(expired · log n), not an O(n) scan of every outstanding spec."""
+        n = 0
+        now = time.monotonic()
+        while True:
+            with self._lock:
+                if not self._lease_heap or self._lease_heap[0][0] > now:
+                    break
+                _, task_id = heapq.heappop(self._lease_heap)
+                spec = self._specs.get(task_id)
+            lease = self.kv.get(_LEASE + task_id, worker="scheduler")
+            if lease is None:
+                continue  # completed, released, or job GC'd — stale hint
+            if lease["expires"] > now:
+                # Heartbeat extended the lease after our hint was pushed.
+                with self._lock:
+                    heapq.heappush(self._lease_heap, (lease["expires"], task_id))
+                continue
+            self._drop_lease_record(task_id, "scheduler")
+            if spec is None or self.store.backend.exists(spec.result_key):
+                continue
+            self.kv.rpush(_Q, spec, worker="scheduler")
+            self._signal_work()
+            n += 1
+        return n
+
+    def speculate(self) -> int:
+        """Enqueue duplicates of straggling tasks. Returns count.
+
+        Per-job start heaps: a task becomes a speculation candidate only
+        when its start time falls behind ``now - factor·median`` for its
+        job, so each control pass pops exactly the candidates instead of
+        scanning all running specs against every job's threshold."""
         n = 0
         now = time.monotonic()
         with self._lock:
-            specs = dict(self._specs)
-        for task_id, spec in specs.items():
-            if self.store.backend.exists(spec.result_key):
+            job_ids = list(self._start_heaps.keys())
+        for job_id in job_ids:
+            with self._lock:
+                # Empty heap = nothing leased for this job; prune it so a
+                # long-lived executor doesn't pay an lrange+sort per *ever
+                # submitted* job on every control tick (_try_lease re-creates
+                # the heap on the next lease).
+                if not self._start_heaps.get(job_id):
+                    self._start_heaps.pop(job_id, None)
+                    continue
+            durations: List[float] = self.kv.lrange(_DURATION + job_id, worker="scheduler")
+            if len(durations) < self.config.min_completed_for_speculation:
                 continue
-            lease = self.kv.get(_LEASE + task_id, worker="scheduler")
-            if lease is not None and lease["expires"] < now:
-                self._drop_lease_record(task_id, "scheduler")
+            med = sorted(durations)[len(durations) // 2]
+            threshold = max(
+                self.config.speculation_factor * med,
+                self.config.min_speculation_age_s,
+            )
+            cutoff = now - threshold
+            while True:
+                with self._lock:
+                    heap = self._start_heaps.get(job_id)
+                    if not heap or heap[0][0] > cutoff:
+                        break
+                    started, task_id = heapq.heappop(heap)
+                    spec = self._specs.get(task_id)
+                    already = task_id in self._speculated
+                if spec is None or already:
+                    continue  # job GC'd / duplicate already queued
+                lease = self.kv.get(_LEASE + task_id, worker="scheduler")
+                if lease is None:
+                    continue  # finished or reaped; a re-lease pushes a fresh hint
+                if lease["started"] > started:
+                    with self._lock:
+                        heapq.heappush(heap, (lease["started"], task_id))
+                    continue  # stale hint from an earlier attempt
+                if self.store.backend.exists(spec.result_key):
+                    continue
+                with self._lock:
+                    self._speculated.add(task_id)
                 self.kv.rpush(_Q, spec, worker="scheduler")
                 self._signal_work()
                 n += 1
         return n
 
-    def speculate(self) -> int:
-        """Enqueue duplicates of straggling tasks. Returns count."""
-        durations: List[float] = self.kv.lrange(_DURATION, worker="scheduler")
-        if len(durations) < self.config.min_completed_for_speculation:
-            return 0
-        med = sorted(durations)[len(durations) // 2]
-        threshold = max(self.config.speculation_factor * med, 1e-3)
-        n = 0
-        now = time.monotonic()
+    # ---- per-job GC -------------------------------------------------------
+    def finish_job(self, job_id: str) -> int:
+        """Free everything a completed job left behind: in-memory specs and
+        speculation marks, per-job start heap, KV attempt counters / lease
+        records / duration samples, and the job's result + staged-input
+        objects.  Returns the number of tasks freed.  Futures for the job
+        become unresolvable (their result keys are deleted) — call only
+        after results have been retrieved.  Stale lease-heap hints are
+        discarded lazily on their next pop, and queued duplicates of the
+        job are dropped at lease time via the job tombstone."""
         with self._lock:
-            specs = dict(self._specs)
-        for task_id, spec in specs.items():
-            if task_id in self._speculated:
-                continue
-            if self.store.backend.exists(spec.result_key):
-                continue
-            lease = self.kv.get(_LEASE + task_id, worker="scheduler")
-            if lease is None:
-                continue
-            if now - lease["started"] > threshold:
-                self._speculated.add(task_id)
-                self.kv.rpush(_Q, spec, worker="scheduler")
-                self._signal_work()
-                n += 1
-        return n
+            task_ids = self._jobs.pop(job_id, set())
+            for tid in task_ids:
+                self._specs.pop(tid, None)
+                self._speculated.discard(tid)
+            self._start_heaps.pop(job_id, None)
+            if job_id not in self._finished_jobs:
+                self._finished_jobs.add(job_id)
+                self._finished_order.append(job_id)
+                while len(self._finished_order) > _MAX_TOMBSTONES:
+                    self._finished_jobs.discard(self._finished_order.popleft())
+        # Batched KV cleanup: one amortized round-trip per shard, and the
+        # removed-lease count settles the advisory lease accounting that
+        # _drop_lease_record would otherwise pay a get+delete per task for.
+        removed = self.kv.mdel([_LEASE + tid for tid in task_ids], worker="scheduler")
+        with self._lock:
+            self._active_leases = max(0, self._active_leases - removed)
+        self.kv.mdel(
+            [_ATTEMPTS + tid for tid in task_ids] + [_DURATION + job_id],
+            worker="scheduler",
+        )
+        self.store.delete_prefix(f"result/{job_id}/", worker="scheduler")
+        # Trailing slash: 'input/train' must not also match job 'train2'.
+        self.store.delete_prefix(f"input/{job_id}/", worker="scheduler")
+        return len(task_ids)
 
     def pending(self) -> int:
         with self._lock:

@@ -99,13 +99,33 @@ class WrenExecutor:
         return self.map(fn, [arg])[0]
 
     def map_get(
-        self, fn: Callable[[Any], Any], items: Iterable[Any], timeout_s: float = 120.0
+        self,
+        fn: Callable[[Any], Any],
+        items: Iterable[Any],
+        timeout_s: float = 120.0,
+        *,
+        gc: bool = False,
     ) -> List[Any]:
-        return get_all(self.map(fn, items), timeout_s=timeout_s)
+        """map + resolve all results (one batched multi-get).  With
+        ``gc=True`` the job's scheduler bookkeeping and result/input objects
+        are freed after resolution — the right default for fire-and-forget
+        supersteps where nothing re-reads the result keys."""
+        job = f"job-{uuid.uuid4().hex[:8]}"
+        out = get_all(self.map(fn, items, job_id=job), timeout_s=timeout_s)
+        if gc:
+            self.finish_job(job)
+        return out
 
     # ---- elasticity -----------------------------------------------------
     def scale_to(self, n: int) -> None:
         self.pool.scale_to(n)
+
+    # ---- per-job GC -----------------------------------------------------
+    def finish_job(self, job_id: str) -> int:
+        """Free a completed job's scheduler state and storage keys (see
+        ``Scheduler.finish_job``).  Futures of the job become unresolvable —
+        call only after their results have been retrieved."""
+        return self.scheduler.finish_job(job_id)
 
     # ---- lifecycle ------------------------------------------------------
     def shutdown(self) -> None:

@@ -12,7 +12,27 @@ Reproduced semantics:
   * ``eval`` — server-side scripting analogue: apply a Python callable to a
     key's value *atomically under the shard lock* (Redis EVAL), used by the
     parameter server for in-place range updates (HOGWILD!);
-  * lists (rpush/lrange) for queues.
+  * lists (rpush/lrange) for queues, plus blocking ``blpop`` (Redis BLPOP).
+
+Data plane (batching + per-shard notification):
+  * **batched reads** — ``mget`` groups its keys by shard and serves each
+    shard's group in one locked pass, charged as one amortized round-trip
+    per *shard touched* (one request latency + summed transfer time) rather
+    than one per key.  The Cloudburst/numpywren lesson applied to the
+    coordination plane: parameter-server pulls and shuffle column reads
+    cost O(shards) requests, not O(keys).
+  * **per-shard watch conditions** — every mutating op (``set``/``setnx``/
+    ``incr``/``cas``/``eval``/``rpush``/``delete``) bumps its shard's write
+    sequence and broadcasts on the shard's condition.  Consumers snapshot
+    ``shard_seq(key)``, check state, then block in ``wait_key`` until the
+    shard's sequence advances (snapshot-then-wait: an in-process write can
+    never be missed between the check and the wait).  ``blpop`` builds the
+    Redis blocking-pop on top.  Scheduler queue waits and parameter-server
+    pullers block here — per shard, woken only by writes that could matter
+    to them — instead of riding a global poll tick.
+  * wakeups are in-process only (this KV is an in-memory model); a client
+    in another process would need its own fallback re-check, exactly as
+    the object store documents for ``FileBackend``.
 
 Each op is charged virtual wire time and recorded per shard so benchmarks
 can detect shard saturation exactly like the paper's sort experiment.
@@ -44,8 +64,18 @@ class _Shard:
     def __init__(self, idx: int) -> None:
         self.idx = idx
         self.lock = threading.RLock()
+        # Watch condition shares the shard lock: writers notify while
+        # already holding it, so notification adds no extra locking.
+        self.cond = threading.Condition(self.lock)
+        self.seq = 0  # monotonically increasing write sequence
         self.data: Dict[str, Any] = {}
         self.stats = ShardStats()
+
+    def touch(self) -> None:
+        """Record a write: bump the sequence, wake every shard watcher.
+        Must be called with the shard lock held."""
+        self.seq += 1
+        self.cond.notify_all()
 
 
 def _sizeof(value: Any) -> int:
@@ -100,12 +130,40 @@ class KVStore(_Endpoint):
             shard.stats.bytes_out += nbytes
         self.ledger.record(OpRecord(worker, op, key, nbytes, vt, time.monotonic()))
 
+    # ---- per-shard watch (notification plane) ---------------------------
+    def shard_seq(self, key: str) -> int:
+        """Snapshot the write sequence of ``key``'s shard; pass to
+        :meth:`wait_key`.  Snapshot-then-check-then-wait makes an in-process
+        write impossible to miss."""
+        sh = self._shard(key)
+        with sh.lock:
+            return sh.seq
+
+    def wait_key(self, key: str, last_seq: int, timeout_s: float) -> int:
+        """Block until a write lands on ``key``'s *shard* after the
+        ``last_seq`` snapshot (or the timeout elapses); returns the current
+        sequence.  A single wakeup — callers loop and re-check their own
+        predicate, exactly like ``ObjectStore.wait_put``."""
+        sh = self._shard(key)
+        with sh.lock:
+            if sh.seq == last_seq:
+                sh.cond.wait(timeout_s)
+            return sh.seq
+
+    def notify_key(self, key: str) -> None:
+        """Virtual touch: wake every watcher of ``key``'s shard without
+        writing (used by e.g. scheduler shutdown to unblock queue waiters)."""
+        sh = self._shard(key)
+        with sh.lock:
+            sh.touch()
+
     # ---- atomic single-key ops ------------------------------------------
     def set(self, key: str, value: Any, *, worker: str = "-") -> None:
         sh = self._shard(key)
         with sh.lock:
             sh.data[key] = value
             self._charge(sh, worker, "set", key, _sizeof(value), write=True)
+            sh.touch()
 
     def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
         sh = self._shard(key)
@@ -114,6 +172,33 @@ class KVStore(_Endpoint):
             self._charge(sh, worker, "get", key, _sizeof(value), write=False)
             return value
 
+    def mget(
+        self, keys: List[str], default: Any = None, *, worker: str = "-"
+    ) -> List[Any]:
+        """Batched get (Redis MGET): values in ``keys`` order, ``default``
+        for missing entries.  Keys are grouped by shard and each shard's
+        group is served in one locked pass, charged as one amortized
+        round-trip per shard touched (request latency + summed transfer) —
+        not one per key."""
+        by_shard: Dict[int, List[int]] = {}
+        for i, key in enumerate(keys):
+            by_shard.setdefault(self.shard_of(key), []).append(i)
+        out: List[Any] = [default] * len(keys)
+        for sidx, positions in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = 0
+                for i in positions:
+                    value = sh.data.get(keys[i], default)
+                    out[i] = value
+                    nbytes += _sizeof(value)
+                # one amortized round-trip for the whole shard group
+                self._charge(
+                    sh, worker, "mget", f"[{len(positions)} keys@s{sidx}]",
+                    nbytes, write=False,
+                )
+        return out
+
     def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
         sh = self._shard(key)
         with sh.lock:
@@ -121,6 +206,7 @@ class KVStore(_Endpoint):
             if key in sh.data:
                 return False
             sh.data[key] = value
+            sh.touch()
             return True
 
     def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
@@ -129,6 +215,7 @@ class KVStore(_Endpoint):
             new = sh.data.get(key, 0) + amount
             sh.data[key] = new
             self._charge(sh, worker, "incr", key, 8, write=True)
+            sh.touch()
             return new
 
     def cas(self, key: str, expect: Any, value: Any, *, worker: str = "-") -> bool:
@@ -141,6 +228,7 @@ class KVStore(_Endpoint):
             )
             if matched:
                 sh.data[key] = value
+                sh.touch()
                 return True
             return False
 
@@ -149,6 +237,27 @@ class KVStore(_Endpoint):
         with sh.lock:
             sh.data.pop(key, None)
             self._charge(sh, worker, "del", key, 0, write=True)
+            sh.touch()
+
+    def mdel(self, keys: List[str], *, worker: str = "-") -> int:
+        """Batched delete: one amortized round-trip per shard touched (cf.
+        :meth:`mget`).  Returns how many of the keys actually existed —
+        job GC uses the count to settle advisory lease accounting."""
+        by_shard: Dict[int, List[str]] = {}
+        for key in keys:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        removed = 0
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                for key in group:
+                    if sh.data.pop(key, _TOMBSTONE) is not _TOMBSTONE:
+                        removed += 1
+                self._charge(
+                    sh, worker, "mdel", f"[{len(group)} keys@s{sidx}]", 0, write=True
+                )
+                sh.touch()
+        return removed
 
     def exists(self, key: str, *, worker: str = "-") -> bool:
         sh = self._shard(key)
@@ -175,6 +284,7 @@ class KVStore(_Endpoint):
             new = fn(cur)
             sh.data[key] = new
             self._charge(sh, worker, "eval", key, _sizeof(new), write=True)
+            sh.touch()
             return new
 
     # ---- lists (queues) ---------------------------------------------------
@@ -184,6 +294,7 @@ class KVStore(_Endpoint):
             lst = sh.data.setdefault(key, [])
             lst.extend(values)
             self._charge(sh, worker, "rpush", key, sum(_sizeof(v) for v in values), write=True)
+            sh.touch()
             return len(lst)
 
     def lpop(self, key: str, *, worker: str = "-") -> Any:
@@ -193,6 +304,25 @@ class KVStore(_Endpoint):
             value = lst.pop(0) if lst else None
             self._charge(sh, worker, "lpop", key, _sizeof(value), write=True)
             return value
+
+    def blpop(self, key: str, timeout_s: float, *, worker: str = "-") -> Any:
+        """Blocking left pop (Redis BLPOP): pop the head of ``key``'s list,
+        waiting on the shard's watch condition until an element arrives or
+        the timeout elapses (then ``None``).  No polling: a producer's
+        ``rpush`` on the same shard wakes this directly."""
+        deadline = time.monotonic() + timeout_s
+        sh = self._shard(key)
+        with sh.lock:
+            while True:
+                lst = sh.data.get(key)
+                if lst:
+                    value = lst.pop(0)
+                    self._charge(sh, worker, "blpop", key, _sizeof(value), write=True)
+                    return value
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                sh.cond.wait(remaining)
 
     def lrange(self, key: str, start: int = 0, stop: int = -1, *, worker: str = "-") -> List[Any]:
         sh = self._shard(key)

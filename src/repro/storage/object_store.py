@@ -13,18 +13,31 @@ Semantics reproduced from the paper's use of S3:
 Backends: in-memory (tests, benchmarks) and file-backed (crash-safe via
 ``os.replace``; used by checkpointing so restarts survive process death).
 
-Key-watch facility (event-driven completion signalling):
-  * every successful ``put_bytes`` through this store handle calls
-    ``notify_put`` — a broadcast on the store's watch condition plus a
-    monotonically increasing put sequence number;
-  * waiters (``wait_keys``, futures) snapshot ``put_seq()``, check key
-    existence, then block in ``wait_put`` until the sequence advances —
-    the snapshot-then-wait ordering means an in-process publish can never
-    be missed between the existence check and the wait;
-  * wakeup guarantee is **per store handle**: a publish through a
-    different handle or process (e.g. another process sharing a
-    ``FileBackend`` directory) does not notify, so waiters also re-check
-    existence on a short fallback tick (``WATCH_FALLBACK_TICK_S``).
+Data plane (batching + notification):
+  * **batched reads** — ``get_many``/``get_many_bytes`` (alias
+    ``multi_get``) coalesce N key fetches into one backend call and charge
+    *one* amortized round-trip: a single request latency plus the summed
+    transfer time, instead of N× latency.  This is the numpywren lesson —
+    object-store cost is dominated by per-request latency, so every
+    driver-side fan-in (future resolution, shuffle column reads, parameter
+    pulls) should ride a multi-get.  Missing keys are omitted from the
+    result dict (callers that need all keys pass ``missing="error"``).
+  * **key watch** (event-driven completion signalling) — every successful
+    ``put_bytes`` through this store handle calls ``notify_put``: a
+    broadcast on the store's watch condition plus a monotonically
+    increasing put sequence number.  Waiters (``wait_keys``, futures)
+    snapshot ``put_seq()``, check key existence, then block in
+    ``wait_put`` until the sequence advances — the snapshot-then-wait
+    ordering means an in-process publish can never be missed between the
+    existence check and the wait.
+  * wakeup guarantee is **per backend**: the watch condition and sequence
+    live on the backend, so a publish through *any* store handle sharing
+    that backend wakes every waiter in this process.  Only a *different
+    process* sharing a ``FileBackend`` directory publishes without
+    notifying, so waiters use a short fallback re-check tick
+    (``WATCH_FALLBACK_TICK_S``) **only** when the backend is
+    cross-process (``_Backend.cross_process``); purely in-process
+    backends wait on the condition alone, with no polling.
 
 Every operation is charged virtual wire time from a
 :class:`~repro.storage.perf_model.StorageProfile` and recorded in a
@@ -131,11 +144,50 @@ WATCH_FALLBACK_TICK_S = 0.25
 
 
 class _Backend:
+    # True when writers in *other processes* can mutate the backing state
+    # without going through an in-process store handle (and therefore
+    # without firing ``notify_put``).  Key watchers only need a fallback
+    # re-check tick against such backends.
+    cross_process = False
+
+    def _init_watch(self) -> None:
+        """Watch state lives on the *backend*, not the store handle: two
+        ``ObjectStore`` handles sharing one backend must wake each other's
+        waiters (subclass ``__init__`` calls this)."""
+        self._watch_cv = threading.Condition()
+        self._watch_seq = 0
+
+    def notify_put(self) -> None:
+        with self._watch_cv:
+            self._watch_seq += 1
+            self._watch_cv.notify_all()
+
+    def put_seq(self) -> int:
+        with self._watch_cv:
+            return self._watch_seq
+
+    def wait_put(self, last_seq: int, timeout_s: float) -> int:
+        with self._watch_cv:
+            if self._watch_seq == last_seq:
+                self._watch_cv.wait(timeout_s)
+            return self._watch_seq
+
     def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
         raise NotImplementedError
 
     def get(self, key: str) -> bytes:
         raise NotImplementedError
+
+    def get_many(self, keys: List[str]) -> Dict[str, bytes]:
+        """Batched fetch: returns present keys only (missing keys omitted).
+        Backends override to serve the whole batch in one locked pass."""
+        out: Dict[str, bytes] = {}
+        for key in keys:
+            try:
+                out[key] = self.get(key)
+            except (KeyError, FileNotFoundError):
+                continue
+        return out
 
     def exists(self, key: str) -> bool:
         raise NotImplementedError
@@ -151,6 +203,7 @@ class InMemoryBackend(_Backend):
     def __init__(self) -> None:
         self._lock = threading.Lock()
         self._data: Dict[str, bytes] = {}
+        self._init_watch()
 
     def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
         with self._lock:
@@ -158,6 +211,10 @@ class InMemoryBackend(_Backend):
                 return False
             self._data[key] = blob
             return True
+
+    def get_many(self, keys: List[str]) -> Dict[str, bytes]:
+        with self._lock:
+            return {k: self._data[k] for k in keys if k in self._data}
 
     def get(self, key: str) -> bytes:
         with self._lock:
@@ -179,12 +236,21 @@ class InMemoryBackend(_Backend):
 class FileBackend(_Backend):
     """Directory-backed store.  Writes are crash-atomic: write temp file,
     fsync, ``os.replace``.  ``put_if_absent`` uses O_EXCL on the final name's
-    lock sibling so two processes cannot both win."""
+    lock sibling so two processes cannot both win.
+
+    Cross-process: another process sharing the directory writes files this
+    process's store handles never see a ``notify_put`` for, so key watchers
+    keep the fallback re-check tick against this backend (in-memory backends
+    drop it).  Event-driven cross-process wakeups (inotify or lease files)
+    remain a ROADMAP item."""
+
+    cross_process = True
 
     def __init__(self, root: str) -> None:
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
         self._lock = threading.Lock()
+        self._init_watch()
 
     def _path(self, key: str) -> str:
         safe = key.replace("/", "%2F")
@@ -242,31 +308,26 @@ class ObjectStore(_Endpoint):
         self.backend = backend or InMemoryBackend()
         self.profile = profile
         self.ledger = ledger or Ledger()
-        self._watch_cv = threading.Condition()
-        self._put_seq = 0
         self._register_endpoint()
 
     # ---- key watch (notification plane) --------------------------------
+    # Watch state lives on the backend so that two store handles sharing
+    # one backend (e.g. two ObjectStores over the same InMemoryBackend)
+    # wake each other's waiters; these methods delegate.
     def notify_put(self, key: str) -> None:
-        """Wake every watcher: ``key`` just became visible.  Called by
-        ``put_bytes`` on each successful write; external backends fed out of
-        band may call it too."""
-        with self._watch_cv:
-            self._put_seq += 1
-            self._watch_cv.notify_all()
+        """Wake every watcher of this store's backend: ``key`` just became
+        visible.  Called by ``put_bytes`` on each successful write; external
+        feeders writing to the backend out of band may call it too."""
+        self.backend.notify_put()
 
     def put_seq(self) -> int:
-        """Snapshot of the put counter; pass to :meth:`wait_put`."""
-        with self._watch_cv:
-            return self._put_seq
+        """Snapshot of the backend's put counter; pass to :meth:`wait_put`."""
+        return self.backend.put_seq()
 
     def wait_put(self, last_seq: int, timeout_s: float) -> int:
-        """Block until any put lands after the ``last_seq`` snapshot (or the
-        timeout elapses); returns the current sequence."""
-        with self._watch_cv:
-            if self._put_seq == last_seq:
-                self._watch_cv.wait(timeout_s)
-            return self._put_seq
+        """Block until any put lands on the backend after the ``last_seq``
+        snapshot (or the timeout elapses); returns the current sequence."""
+        return self.backend.wait_put(last_seq, timeout_s)
 
     # ---- raw byte plane ------------------------------------------------
     def put_bytes(
@@ -287,6 +348,20 @@ class ObjectStore(_Endpoint):
         )
         return blob
 
+    def get_many_bytes(self, keys: List[str], *, worker: str = "-") -> Dict[str, bytes]:
+        """Batched fetch: one backend call, one amortized round-trip.
+
+        Charged as a single request latency plus the summed transfer time —
+        N keys cost ``latency + Σbytes/bw`` instead of ``N·latency + …``.
+        Missing keys are omitted from the returned dict."""
+        blobs = self.backend.get_many(list(keys))
+        total = sum(len(b) for b in blobs.values())
+        vt = self.profile.read_latency_s + total / self.profile.read_bw_per_conn
+        self.ledger.record(
+            OpRecord(worker, "mget", f"[{len(keys)} keys]", total, vt, time.monotonic())
+        )
+        return blobs
+
     def exists(self, key: str, *, worker: str = "-") -> bool:
         ok = self.backend.exists(key)
         self.ledger.record(
@@ -299,6 +374,27 @@ class ObjectStore(_Endpoint):
         self.ledger.record(
             OpRecord(worker, "delete", key, 0, self.profile.write_latency_s, time.monotonic())
         )
+
+    def delete_many(self, keys: List[str], *, worker: str = "-") -> None:
+        """Batched delete: one amortized round-trip for the whole batch
+        (cf. :meth:`get_many_bytes` — per-request latency, not bytes,
+        dominates deletes)."""
+        for k in keys:
+            self.backend.delete(k)
+        self.ledger.record(
+            OpRecord(
+                worker, "mdel", f"[{len(keys)} keys]", 0,
+                self.profile.write_latency_s, time.monotonic(),
+            )
+        )
+
+    def delete_prefix(self, prefix: str, *, worker: str = "-") -> int:
+        """Delete every key under ``prefix`` (job GC); one list + one
+        batched delete round-trip.  Returns the count."""
+        keys = self.list(prefix, worker=worker)
+        if keys:
+            self.delete_many(keys, worker=worker)
+        return len(keys)
 
     def list(self, prefix: str, *, worker: str = "-") -> List[str]:
         keys = self.backend.list(prefix)
@@ -314,6 +410,21 @@ class ObjectStore(_Endpoint):
     def get(self, key: str, *, worker: str = "-") -> Any:
         return serialization.loads(self.get_bytes(key, worker=worker))
 
+    def get_many(
+        self, keys: List[str], *, worker: str = "-", missing: str = "omit"
+    ) -> Dict[str, Any]:
+        """Batched object fetch (see :meth:`get_many_bytes` for the cost
+        model).  ``missing="omit"`` drops absent keys from the result;
+        ``missing="error"`` raises ``KeyError`` naming them."""
+        blobs = self.get_many_bytes(keys, worker=worker)
+        if missing == "error" and len(blobs) < len(set(keys)):
+            absent = [k for k in keys if k not in blobs]
+            raise KeyError(f"{len(absent)} keys absent, e.g. {absent[:3]}")
+        return {k: serialization.loads(b) for k, b in blobs.items()}
+
+    # Redis-style alias; some call sites read better as multi_get.
+    multi_get = get_many
+
     def put_content_addressed(self, prefix: str, value: Any, *, worker: str = "-") -> str:
         """PyWren's 'globally unique keys': content-hash the blob.  Duplicate
         puts of identical content are idempotent by construction."""
@@ -327,16 +438,31 @@ class ObjectStore(_Endpoint):
         silently discarded.  Existence of ``key`` == task completion."""
         return self.put(key, value, worker=worker, if_absent=True)
 
+    def watch_tick_s(self, poll_s: Optional[float] = None) -> Optional[float]:
+        """Fallback re-check interval for key watchers on this store.
+
+        ``None`` means purely event-driven: every writer goes through an
+        in-process handle and fires ``notify_put``, so waiters never need to
+        poll.  Cross-process backends (``FileBackend``) return the fallback
+        tick because a writer in another process bypasses notification.  An
+        explicit ``poll_s`` always wins (backward-compatible knob)."""
+        if poll_s is not None:
+            return poll_s
+        return WATCH_FALLBACK_TICK_S if self.backend.cross_process else None
+
     def wait_keys(
         self, keys: List[str], *, poll_s: Optional[float] = None, timeout_s: float = 60.0
     ) -> None:
         """Block until all keys exist (PyWren signals completion 'by the
         existence of this key').  Event-driven: woken by ``notify_put`` the
-        moment a publisher on this handle lands a key; re-checks on a short
-        fallback tick only to cover out-of-band writers.  ``poll_s`` is kept
-        for backward compatibility and overrides the fallback tick."""
+        moment a publisher on this handle lands a key.  For in-process
+        backends that is the *only* wake source — there is no polling.  For
+        cross-process backends (``FileBackend`` shared between processes)
+        existence is re-checked on a short fallback tick, since an external
+        writer never notifies this handle.  ``poll_s`` is kept for backward
+        compatibility and overrides the fallback tick."""
         deadline = time.monotonic() + timeout_s
-        tick = WATCH_FALLBACK_TICK_S if poll_s is None else poll_s
+        tick = self.watch_tick_s(poll_s)
         pending = list(keys)
         while True:
             seq = self.put_seq()
@@ -346,7 +472,8 @@ class ObjectStore(_Endpoint):
             now = time.monotonic()
             if now > deadline:
                 raise TimeoutError(f"{len(pending)} keys still absent, e.g. {pending[:3]}")
-            self.wait_put(seq, min(tick, deadline - now))
+            remaining = deadline - now
+            self.wait_put(seq, remaining if tick is None else min(tick, remaining))
 
     def iter_prefix(self, prefix: str, *, worker: str = "-") -> Iterator[Tuple[str, Any]]:
         for key in self.list(prefix, worker=worker):

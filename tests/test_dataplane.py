@@ -1,0 +1,416 @@
+"""Data-plane regressions: batched multi-get, per-shard KV notification,
+heap-indexed lease expiry, and per-job GC.
+
+Pins the PR-2 contract:
+  * ``ObjectStore.get_many`` — missing keys omitted (or error), interleaved
+    puts stay whole-object atomic, and the whole batch is charged one
+    amortized round-trip (a single ``mget`` ledger record);
+  * ``KVStore.mget`` — order-preserving, defaults for missing keys, one
+    charged op per shard touched rather than one per key;
+  * per-shard watch conditions — ``blpop`` consumers wake on a producer's
+    ``rpush`` promptly and concurrently, ``wait_key`` cannot miss a write
+    landing between the sequence snapshot and the wait;
+  * heap-indexed leases — ``reap`` requeues expired leases in expiry order
+    without scanning live ones, heartbeat-extended leases survive;
+  * ``finish_job`` — scheduler maps, KV attempt/duration keys, and
+    result/input objects are all freed;
+  * ``wait_keys`` fallback tick — dropped for in-process backends (purely
+    event-driven), kept for the cross-process ``FileBackend``.
+"""
+
+import threading
+import time
+
+from repro.core import (
+    FunctionSpec,
+    ParameterServer,
+    PSConfig,
+    ResultFuture,
+    Scheduler,
+    SchedulerConfig,
+    TaskSpec,
+    WrenExecutor,
+    stage_input,
+)
+from repro.storage import FileBackend, KVStore, ObjectStore
+
+import numpy as np
+import pytest
+
+
+# ---------------------------------------------------------------------------
+# ObjectStore.get_many
+# ---------------------------------------------------------------------------
+
+def test_get_many_missing_keys_omitted_or_error():
+    store = ObjectStore()
+    store.put("a", 1)
+    store.put("b", [2, 3])
+    got = store.get_many(["a", "b", "nope"])
+    assert got == {"a": 1, "b": [2, 3]}
+    with pytest.raises(KeyError):
+        store.get_many(["a", "nope"], missing="error")
+    # multi_get is the same call
+    assert store.multi_get(["a"]) == {"a": 1}
+
+
+def test_get_many_single_amortized_round_trip():
+    """N keys must cost one request latency + transfer, not N latencies."""
+    store = ObjectStore()
+    n = 32
+    for i in range(n):
+        store.put(f"k/{i}", i, worker="w")
+    store.ledger.clear()
+    got = store.get_many([f"k/{i}" for i in range(n)], worker="w")
+    assert len(got) == n
+    recs = [r for r in store.ledger.records() if r.op == "mget"]
+    assert len(recs) == 1
+    # amortized: far cheaper than n independent gets would have been
+    per_get_latency = store.profile.read_latency_s
+    assert recs[0].vtime_s < n * per_get_latency / 2
+
+
+def test_get_many_interleaved_puts_are_atomic():
+    """A reader batching over keys while a writer lands them sees only
+    whole objects — never partial state — and converges to all present."""
+    store = ObjectStore()
+    keys = [f"iv/{i}" for i in range(50)]
+    stop = threading.Event()
+
+    def writer():
+        for i, k in enumerate(keys):
+            store.put(k, {"i": i, "payload": "x" * 64})
+        stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    seen = {}
+    deadline = time.monotonic() + 10
+    while len(seen) < len(keys) and time.monotonic() < deadline:
+        got = store.get_many(keys)
+        for k, v in got.items():
+            # every observed value is a complete object
+            assert v == {"i": int(k.split("/")[1]), "payload": "x" * 64}
+        seen.update(got)
+    t.join()
+    assert len(seen) == len(keys)
+
+
+# ---------------------------------------------------------------------------
+# KVStore.mget + per-shard notification
+# ---------------------------------------------------------------------------
+
+def test_kv_mget_order_defaults_and_per_shard_charging():
+    kv = KVStore(num_shards=4)
+    kv.set("a", 1)
+    kv.set("b", 2)
+    before = kv.total_ops()
+    out = kv.mget(["b", "missing", "a"], default="absent")
+    assert out == [2, "absent", 1]
+    # one charged op per shard touched, not one per key
+    shards_touched = len({kv.shard_of(k) for k in ["b", "missing", "a"]})
+    assert kv.total_ops() - before == shards_touched <= 3
+
+
+def test_blpop_wakes_on_rpush():
+    kv = KVStore(num_shards=2)
+    got = []
+
+    def consumer():
+        got.append(kv.blpop("q", timeout_s=5.0))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    kv.rpush("q", "payload")
+    t.join(timeout=5.0)
+    assert got == ["payload"]
+    # woken by the push, not by a poll tick
+    assert time.monotonic() - t0 < 0.2
+
+
+def test_blpop_concurrent_pullers_each_get_one():
+    kv = KVStore(num_shards=4)
+    results = []
+    lock = threading.Lock()
+
+    def consumer():
+        v = kv.blpop("jobs", timeout_s=5.0)
+        with lock:
+            results.append(v)
+
+    threads = [threading.Thread(target=consumer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for i in range(8):
+        kv.rpush("jobs", i)
+    for t in threads:
+        t.join(timeout=5.0)
+    assert sorted(results) == list(range(8))
+
+
+def test_wait_key_snapshot_cannot_miss_write():
+    """A write landing after the snapshot makes the wait return immediately."""
+    kv = KVStore(num_shards=2)
+    seq = kv.shard_seq("k")
+    kv.set("k", 1)  # lands before the wait
+    t0 = time.monotonic()
+    new_seq = kv.wait_key("k", seq, timeout_s=2.0)
+    assert time.monotonic() - t0 < 0.1
+    assert new_seq > seq
+
+
+def test_blpop_timeout_returns_none():
+    kv = KVStore()
+    t0 = time.monotonic()
+    assert kv.blpop("empty", timeout_s=0.1) is None
+    assert 0.05 < time.monotonic() - t0 < 1.0
+
+
+# ---------------------------------------------------------------------------
+# heap-indexed lease expiry
+# ---------------------------------------------------------------------------
+
+def _mk_sched(**cfg):
+    store = ObjectStore()
+    kv = KVStore(num_shards=2)
+    sched = Scheduler(kv, store, SchedulerConfig(**cfg))
+    func = FunctionSpec.register(store, lambda x: x)
+    return store, kv, sched, func
+
+
+def test_reap_requeues_expired_in_expiry_order():
+    store, kv, sched, func = _mk_sched(lease_timeout_s=0.05)
+    tasks = [
+        TaskSpec.make("job", func, stage_input(store, "job", i), i) for i in range(2)
+    ]
+    sched.submit_many(tasks)
+    first = sched.lease_next("w0")
+    time.sleep(0.03)  # stagger the expiries
+    second = sched.lease_next("w1")
+    assert first is not None and second is not None
+    time.sleep(0.1)  # both leases expire, in lease order
+    assert sched.reap() == 2
+    requeued = kv.lrange("sched/queue")
+    assert [t.task_id for t in requeued] == [first.task_id, second.task_id]
+
+
+def test_reap_spares_heartbeat_extended_lease():
+    store, kv, sched, func = _mk_sched(lease_timeout_s=0.1)
+    task = TaskSpec.make("hb", func, stage_input(store, "hb", 0), 0)
+    sched.submit(task)
+    leased = sched.lease_next("w0")
+    assert leased is not None
+    # keep the lease alive past its original expiry
+    for _ in range(4):
+        time.sleep(0.05)
+        sched.heartbeat(leased, "w0")
+    assert sched.reap() == 0  # hint re-validated against the extended record
+    assert kv.get("sched/lease/" + task.task_id) is not None
+    # stop heartbeating: now it really expires and is reaped
+    time.sleep(0.15)
+    assert sched.reap() == 1
+
+
+def test_next_wakeup_tracks_earliest_lease_expiry():
+    store, kv, sched, func = _mk_sched(lease_timeout_s=5.0, heartbeat_interval_s=10.0)
+    task = TaskSpec.make("nw", func, stage_input(store, "nw", 0), 0)
+    sched.submit(task)
+    assert sched.lease_next("w0") is not None
+    # earliest expiry (~5 s out) bounds the tick; heartbeat would allow 10 s
+    assert sched.next_wakeup_s() <= 5.0 + 0.01
+
+
+def test_speculation_uses_per_job_durations():
+    """A straggler is judged against its own job's median, and the
+    speculative duplicate still resolves correctly (first writer wins)."""
+    from repro.core import FaultPlan, get_all
+
+    cfg = SchedulerConfig(
+        lease_timeout_s=5.0, speculation_factor=3.0, min_completed_for_speculation=3
+    )
+    fp = FaultPlan(slowdown={"w0000": 400.0})
+    wex = WrenExecutor(num_workers=4, scheduler_config=cfg, fault_plan=fp, seed=0)
+    try:
+        futs = wex.map(lambda x: x, list(range(12)), job_id="specjob")
+        assert get_all(futs, timeout_s=60) == list(range(12))
+        assert wex.kv.llen("sched/durations/specjob") > 0
+    finally:
+        wex.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# per-job GC
+# ---------------------------------------------------------------------------
+
+def test_finish_job_frees_scheduler_and_storage_state():
+    with WrenExecutor(num_workers=4) as wex:
+        job = "gcjob"
+        futs = wex.map(lambda x: x * 2, list(range(8)), job_id=job)
+        from repro.core import get_all
+
+        assert get_all(futs, timeout_s=30) == [x * 2 for x in range(8)]
+        task_ids = [f.task.task_id for f in futs]
+        assert len(wex.store.list(f"result/{job}/")) == 8
+        assert any(
+            wex.kv.get("sched/attempts/" + tid) is not None for tid in task_ids
+        )
+        freed = wex.finish_job(job)
+        assert freed == 8
+        # scheduler maps emptied
+        assert all(tid not in wex.scheduler._specs for tid in task_ids)
+        assert job not in wex.scheduler._jobs
+        # KV bookkeeping gone
+        assert all(wex.kv.get("sched/attempts/" + tid) is None for tid in task_ids)
+        assert wex.kv.get("sched/durations/" + job) is None
+        # result + staged input objects gone
+        assert wex.store.list(f"result/{job}/") == []
+        assert wex.store.list(f"input/{job}") == []
+        # double-finish is a no-op
+        assert wex.finish_job(job) == 0
+
+
+def test_finish_job_keeps_other_jobs_intact():
+    with WrenExecutor(num_workers=2) as wex:
+        a = wex.map(lambda x: x, [1, 2], job_id="job-a")
+        b = wex.map(lambda x: x, [3, 4], job_id="job-b")
+        from repro.core import get_all
+
+        assert get_all(a, timeout_s=30) == [1, 2]
+        assert get_all(b, timeout_s=30) == [3, 4]
+        wex.finish_job("job-a")
+        # job-b futures still resolve from storage
+        fresh = [ResultFuture(wex.store, f.task) for f in b]
+        assert [f.result(timeout_s=5) for f in fresh] == [3, 4]
+
+
+# ---------------------------------------------------------------------------
+# parameter-server batching + per-shard wait
+# ---------------------------------------------------------------------------
+
+def test_ps_pull_is_batched_mget():
+    kv = KVStore(num_shards=4)
+    ps = ParameterServer(kv, np.zeros(64, np.float32), PSConfig(num_blocks=8))
+    kv.ledger.clear()
+    params, vers = ps.pull(worker="puller")
+    assert params.shape == (64,)
+    assert vers == [0] * 8
+    ops = [r.op for r in kv.ledger.records() if r.worker == "puller"]
+    assert set(ops) == {"mget"}
+    assert len(ops) <= 4  # at most one round-trip per shard, never per key
+
+
+def test_ps_wait_fresh_wakes_on_push():
+    kv = KVStore(num_shards=2)
+    ps = ParameterServer(kv, np.zeros(8, np.float32), PSConfig(num_blocks=2))
+
+    def pusher():
+        time.sleep(0.05)
+        ps.push_delta(np.ones(8, np.float32))
+
+    t = threading.Thread(target=pusher)
+    t.start()
+    t0 = time.monotonic()
+    ver = ps.wait_fresh(0, seen_version=0, timeout_s=5.0)
+    elapsed = time.monotonic() - t0
+    t.join()
+    assert ver >= 1
+    assert elapsed < 1.0  # woken by the push, not the timeout
+
+
+# ---------------------------------------------------------------------------
+# wait_keys fallback tick: event-driven in-process, tick only cross-process
+# ---------------------------------------------------------------------------
+
+def test_watch_tick_only_for_cross_process_backends(tmp_path):
+    assert ObjectStore().watch_tick_s() is None
+    assert ObjectStore(backend=FileBackend(str(tmp_path))).watch_tick_s() == 0.25
+    assert ObjectStore().watch_tick_s(poll_s=0.01) == 0.01
+
+
+def test_shared_backend_cross_handle_wakeup():
+    """Watch state lives on the backend: a put through one store handle must
+    wake a waiter on a *different* handle sharing the same in-memory backend
+    — with no fallback tick to paper over a miss."""
+    from repro.storage import InMemoryBackend
+
+    be = InMemoryBackend()
+    waiter = ObjectStore(backend=be)
+    writer = ObjectStore(backend=be)
+    assert waiter.watch_tick_s() is None  # purely event-driven
+
+    def publish():
+        time.sleep(0.1)
+        writer.put("xh/key", 3)
+
+    t = threading.Thread(target=publish)
+    t.start()
+    t0 = time.monotonic()
+    waiter.wait_keys(["xh/key"], timeout_s=5.0)
+    elapsed = time.monotonic() - t0
+    t.join()
+    assert elapsed < 0.5  # woken by the other handle's notify, not timeout
+
+
+def test_finish_job_drops_stale_queued_duplicates():
+    """A duplicate of a finished job still sitting in the queue must be
+    dropped at lease time, not resurrect attempts/lease state the GC freed."""
+    store, kv, sched, func = _mk_sched()
+    task = TaskSpec.make("donejob", func, stage_input(store, "donejob", 1), 0)
+    sched.submit(task)
+    leased = sched.lease_next("w0")
+    assert leased is not None
+    store.publish_result(task.result_key, "v")
+    sched.complete(leased, "w0", 0.01)
+    # a speculative duplicate is still queued when the job gets GC'd
+    kv.rpush("sched/queue", task)
+    sched.finish_job("donejob")
+    assert sched.lease_next("w1") is None  # dropped, not leased
+    assert kv.get("sched/attempts/" + task.task_id) is None  # not resurrected
+    assert kv.get("sched/lease/" + task.task_id) is None
+    # completions of in-flight duplicates don't re-create the duration key
+    sched.complete(task, "w1", 0.01)
+    assert kv.get("sched/durations/donejob") is None
+    # a late duplicate that re-publishes after GC (key was absent again, so
+    # its if_absent publish wins) is scrubbed when it completes
+    store.publish_result(task.result_key, "late-dup")
+    sched.complete(task, "w2", 0.01)
+    assert store.list(task.result_key) == []
+    # a graceful release of a still-leased duplicate doesn't re-create
+    # attempts or requeue the GC'd task either
+    sched.release(task, "w3")
+    assert kv.get("sched/attempts/" + task.task_id) is None
+    assert sched.lease_next("w4") is None
+
+
+def test_finish_job_prefix_does_not_eat_sibling_jobs():
+    """GC of job 'train' must not delete job 'train2's staged inputs or
+    results (prefix must be slash-terminated)."""
+    with WrenExecutor(num_workers=2) as wex:
+        from repro.core import get_all
+
+        a = wex.map(lambda x: x, [1], job_id="train")
+        b = wex.map(lambda x: x + 1, [1], job_id="train2")
+        assert get_all(a, timeout_s=30) == [1]
+        assert get_all(b, timeout_s=30) == [2]
+        wex.finish_job("train")
+        assert wex.store.list("input/train2/") != []
+        assert wex.store.list("result/train2/") != []
+
+
+def test_file_backend_wait_keys_sees_out_of_band_writer(tmp_path):
+    """A second store handle over the same directory publishes without
+    notifying the first handle — only the fallback tick can catch it."""
+    waiter = ObjectStore(backend=FileBackend(str(tmp_path)))
+    writer = ObjectStore(backend=FileBackend(str(tmp_path)))
+
+    def publish():
+        time.sleep(0.1)
+        writer.put("oob/key", 7)
+
+    t = threading.Thread(target=publish)
+    t.start()
+    waiter.wait_keys(["oob/key"], timeout_s=5.0)  # must not hang
+    t.join()
+    assert waiter.get("oob/key") == 7

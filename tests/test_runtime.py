@@ -3,7 +3,6 @@ idempotency, elasticity."""
 
 import time
 
-import numpy as np
 import pytest
 
 from repro.core import (

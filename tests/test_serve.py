@@ -1,7 +1,6 @@
 """Serving engine + storage-mediated request plane."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import CONFIGS

@@ -5,13 +5,10 @@ the same machinery on an 8-device host mesh in a subprocess (the XLA device
 count must be set before jax initializes, so this cannot run in-process).
 """
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

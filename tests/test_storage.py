@@ -12,7 +12,6 @@ from repro.storage import (
     FileBackend,
     KVStore,
     ObjectStore,
-    digest,
     dumps,
     loads,
 )

@@ -8,7 +8,6 @@ from repro.core import (
     ParameterServer,
     PSConfig,
     WrenExecutor,
-    get_all,
     hogwild_sgd,
     run_stage,
     word_count,

@@ -11,7 +11,6 @@ from repro.data import DataConfig, synthetic_batch
 from repro.storage import FileBackend, ObjectStore
 from repro.train import (
     ElasticTrainConfig,
-    TrainState,
     adamw,
     cosine_schedule,
     init_train_state,
@@ -19,7 +18,7 @@ from repro.train import (
     train_elastic,
 )
 from repro.train import checkpoint as ck
-from repro.train.optimizer import _q8_decode, _q8_encode, apply_updates, global_norm
+from repro.train.optimizer import _q8_decode, _q8_encode, global_norm
 
 
 CFG = CONFIGS["llama3-8b"].reduced()
