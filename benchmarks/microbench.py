@@ -1,5 +1,5 @@
 """Control-plane microbenchmarks: map throughput, job completion time,
-and a speculation-factor sweep against an injected straggler distribution.
+a speculation-factor sweep, and shuffle request-count accounting.
 
 Measures what the event-driven dispatch + batched data plane target:
 per-task scheduling overhead with no-op user functions, so queue/lease/
@@ -12,19 +12,29 @@ notify/multi-get traffic dominates.  Reported rows:
   * ``runtime/speculation_f{F}`` — completion wall time of a map with one
     injected straggler worker, across ``speculation_factor`` values: the
     tuning curve for ``SchedulerConfig.speculation_factor`` (low = eager
-    duplicates hide stragglers sooner at the cost of wasted work).
+    duplicates hide stragglers sooner at the cost of wasted work);
+  * ``runtime/shuffle_requests_{obj,kv}`` — modeled storage *requests* per
+    shuffle stage on the batched write plane vs. the looped (pre-batching,
+    PR 2) write path: every ledger record is one modeled request, so the
+    row counts exactly the Fig 5/6 bottleneck.  ``write_ratio`` is the
+    map-stage request-count drop (looped ÷ batched; the acceptance floor
+    is ≥ 2×), ``stage_requests``/``legacy_stage_requests`` cover the whole
+    write → read → GC shuffle lifecycle.
 
 Run directly (``python -m benchmarks.microbench``) or via
 ``python -m benchmarks.run`` which includes these rows in the CSV.
 
-CLI (the CI bench-smoke job uses all three):
+CLI (the CI bench-smoke job uses all of these):
 
-  python -m benchmarks.microbench --quick --json bench.json --floor-tasks-per-s 150
+  python -m benchmarks.microbench --quick --json bench.json \\
+      --floor-tasks-per-s 150 --floor-shuffle-ratio 2.0
 
 ``--quick`` shrinks budgets for CI, ``--json`` writes the rows as a JSON
-artifact, and ``--floor-tasks-per-s`` exits non-zero if the 4-worker map
+artifact, ``--floor-tasks-per-s`` exits non-zero if the 4-worker map
 throughput regresses below the floor (guarding the batched data plane's
-speedup; PR 1 baseline was ~282 tasks/s on 4 warm workers).
+speedup; PR 1 baseline was ~282 tasks/s on 4 warm workers), and
+``--floor-shuffle-ratio`` exits non-zero if the batched write plane stops
+beating the looped path by the given request-count factor.
 """
 
 from __future__ import annotations
@@ -101,6 +111,75 @@ def _speculation(rep, factor: float, n_tasks: int) -> None:
         wex.shutdown()
 
 
+def _shuffle_requests_for(rep, store_kind: str, n_maps: int, n_parts: int) -> None:
+    """Count modeled storage requests for one shuffle on the batched write
+    plane vs. the looped write path (one request per intermediate object —
+    the pre-``put_many`` behavior).  One ledger record == one modeled
+    request, so the counts are exact, not timed."""
+    from repro.storage import KVStore, ObjectStore
+    from repro.storage import shuffle as shf
+
+    def fresh():
+        return KVStore(num_shards=2) if store_kind == "kv" else ObjectStore()
+
+    def requests_since(store, mark: int) -> int:
+        return len(store.ledger.records()) - mark
+
+    parts = [[(p, i) for i in range(4)] for p in range(n_parts)]
+
+    # --- batched plane: write_partitions / read_partition_column / GC ----
+    store = fresh()
+    mark = len(store.ledger.records())
+    for m in range(n_maps):
+        shf.write_partitions(store, "bench", m, parts, worker=f"m{m}")
+    write_reqs = requests_since(store, mark)
+    mark = len(store.ledger.records())
+    for p in range(n_parts):
+        shf.read_partition_column(store, "bench", n_maps, p, worker=f"r{p}")
+    read_reqs = requests_since(store, mark)
+    mark = len(store.ledger.records())
+    shf.delete_intermediates(store, "bench", n_maps, n_parts, worker="driver")
+    gc_reqs = requests_since(store, mark)
+
+    # --- looped write path (PR 2 and earlier): one request per object ----
+    legacy = fresh()
+    mark = len(legacy.ledger.records())
+    for m in range(n_maps):
+        for p, part in enumerate(parts):
+            key = shf.intermediate_key("bench", m, p)
+            if isinstance(legacy, KVStore):
+                legacy.set(key, list(part), worker=f"m{m}")
+            else:
+                legacy.put(key, list(part), worker=f"m{m}")
+    legacy_write_reqs = requests_since(legacy, mark)
+
+    write_ratio = legacy_write_reqs / max(write_reqs, 1)
+    rep.row(
+        f"runtime/shuffle_requests_{store_kind}",
+        float(write_reqs + read_reqs + gc_reqs),
+        n_maps=n_maps,
+        n_parts=n_parts,
+        write_requests=write_reqs,
+        legacy_write_requests=legacy_write_reqs,
+        # raw, not rounded: the CI floor gates on this value, and rounding
+        # 1.95 up to 2.0 would let a breached floor pass silently
+        write_ratio=write_ratio,
+        read_requests=read_reqs,
+        gc_requests=gc_reqs,
+        stage_requests=write_reqs + read_reqs + gc_reqs,
+        legacy_stage_requests=legacy_write_reqs + read_reqs,
+    )
+
+
+def shuffle_requests(rep, quick: bool = False) -> None:
+    # Partition width stays at 8 even in quick mode: the batched write path
+    # pays a fixed GC-tombstone existence check per map task, so narrow
+    # fan-outs would sit right on the 2x CI floor instead of clearing it.
+    n_maps, n_parts = (4, 8) if quick else (8, 8)
+    for store_kind in ("obj", "kv"):
+        _shuffle_requests_for(rep, store_kind, n_maps, n_parts)
+
+
 def map_throughput(rep, quick: bool = False) -> None:
     plan = [(4, 200)] if quick else [(4, 400), (16, 400)]
     for num_workers, n_tasks in plan:
@@ -117,7 +196,7 @@ def speculation_sweep(rep, quick: bool = False) -> None:
         _speculation(rep, f, n_tasks=24)
 
 
-ALL = [map_throughput, job_completion, speculation_sweep]
+ALL = [map_throughput, job_completion, speculation_sweep, shuffle_requests]
 
 
 def main(argv=None) -> int:
@@ -134,6 +213,13 @@ def main(argv=None) -> int:
         type=float,
         default=None,
         help="fail (exit 1) if 4-worker map throughput is below this",
+    )
+    ap.add_argument(
+        "--floor-shuffle-ratio",
+        type=float,
+        default=None,
+        help="fail (exit 1) if the batched shuffle write plane's "
+        "request-count drop vs. the looped path is below this factor",
     )
     args = ap.parse_args(argv)
 
@@ -159,6 +245,23 @@ def main(argv=None) -> int:
             )
             return 1
         print(f"throughput floor ok: {max(tput)} >= {args.floor_tasks_per_s} tasks/s")
+
+    if args.floor_shuffle_ratio is not None:
+        ratios = [
+            r["write_ratio"]
+            for r in rep.rows
+            if r["name"].startswith("runtime/shuffle_requests_")
+        ]
+        if not ratios or min(ratios) < args.floor_shuffle_ratio:
+            print(
+                f"FAIL: shuffle write request ratio {min(ratios or [0.0])}x below "
+                f"floor {args.floor_shuffle_ratio}x"
+            )
+            return 1
+        print(
+            f"shuffle request floor ok: {min(ratios)}x >= "
+            f"{args.floor_shuffle_ratio}x fewer write requests"
+        )
     return 0
 
 

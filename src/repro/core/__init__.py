@@ -3,11 +3,26 @@
 Layers: functions (serialization/idempotency) → scheduler (leases, retries,
 speculation) → executor (elastic container pool) → wren (map API) → bsp /
 ps (higher-level abstractions built on the single primitive).
+
+Every layer rides the storage plane's batched contract: a map stages all
+inputs in one ``put_many`` and submits all tasks in one pipelined push,
+future fan-in resolves via one ``get_many``, shuffle fan-out/fan-in are
+single batched calls per task (with intermediates GC'd after merge), and
+parameter-server pulls are one round-trip per KV shard (pushes at most two:
+block data, then version bumps).  The driver pays O(1) modeled requests per
+bulk operation, not O(N).
 """
 
 from .bsp import mapreduce, run_stage, terasort, verify_sorted, word_count
 from .executor import FaultPlan, Worker, WorkerPool, WorkerStats
-from .functions import FunctionSpec, TaskResult, TaskSpec, run_task, stage_input
+from .functions import (
+    FunctionSpec,
+    TaskResult,
+    TaskSpec,
+    run_task,
+    stage_input,
+    stage_inputs,
+)
 from .futures import ALL_COMPLETED, ANY_COMPLETED, ALWAYS, ResultFuture, get_all, wait
 from .ps import ParameterServer, PSConfig, hogwild_sgd
 from .resources import LAMBDA_2017, TPU_TASK_2026, ResourceLimits, io_compute_balance
@@ -27,6 +42,7 @@ __all__ = [
     "TaskResult",
     "run_task",
     "stage_input",
+    "stage_inputs",
     "ResultFuture",
     "wait",
     "get_all",

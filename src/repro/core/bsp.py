@@ -12,6 +12,12 @@ Provides:
                       two-stage algorithm of §3.3 with selectable
                       intermediate store (ObjectStore=S3 or KVStore=Redis);
   * phase accounting per task so benchmarks reproduce Fig 6's breakdown.
+
+Lifecycle: each stage runs with ``gc=True`` (scheduler/result/input state is
+freed at the stage barrier), and both ``mapreduce`` and ``terasort`` retire
+their ``shuffle/{job}`` intermediates via ``shuffle.delete_intermediates``
+once the consuming stage has merged — storage holds only live data between
+stages, not the pipeline's history.
 """
 
 from __future__ import annotations
@@ -91,6 +97,10 @@ def mapreduce(
     red_out = run_stage(
         wex, _reduce_task, list(range(num_reducers)), timeout_s=timeout_s, gc=True
     )
+    # Shuffle-intermediate GC: the reduce barrier has consumed every
+    # shuffle/{job} object, so retire the whole column space in one batched
+    # delete — intermediates must not outlive the job (ROADMAP item).
+    shf.delete_intermediates(store, job, n_maps, num_reducers, worker="driver")
     merged: Dict[Any, Any] = {}
     for d in red_out:
         merged.update(d)
@@ -192,6 +202,11 @@ def terasort(
         wex, _merge_task, list(range(num_partitions)), timeout_s=timeout_s, gc=True
     )
     assert sum(merged_counts) == report.n_records, "sort lost records"
+    # Shuffle-intermediate GC: merge consumed every intermediate column;
+    # drop shuffle/{job} in one batched delete before reporting.
+    shf.delete_intermediates(
+        intermediate, job, n_maps, num_partitions, worker="driver"
+    )
 
     # --- phase accounting (Fig 6) -------------------------------------------
     per_worker = store.ledger.per_worker()

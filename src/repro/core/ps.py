@@ -21,7 +21,16 @@ Design:
     in one ``KVStore.mget`` (one amortized round-trip per KV shard touched,
     not one per block), and ``wait_fresh()`` lets a staleness-rejected
     worker block on the version key's *shard condition* until another
-    worker's push advances it — no re-pull spinning.
+    worker's push advances it — no re-pull spinning;
+  * **batched pushes** — ``push_delta()`` is the write-side mirror: the
+    staleness check reads all version counters in one ``mget``, then all
+    block updates ride one ``KVStore.eval_many`` and all version bumps a
+    second (at most two round-trips per KV shard touched, instead of
+    2·num_blocks synchronous writes; data lands strictly before versions
+    so a ``wait_fresh`` reader can never observe a version ahead of its
+    block).  Per-block atomicity is preserved — each update still applies
+    under its shard lock — so HOGWILD! semantics are unchanged; only the
+    wire cost collapses.
 """
 
 from __future__ import annotations
@@ -70,9 +79,13 @@ class ParameterServer:
         self.name = f"{name}-{uuid.uuid4().hex[:6]}"
         self.dim = int(params.size)
         self.block_slices = self._make_blocks(self.dim, config.num_blocks)
+        # One batched write seeds all blocks + version counters (one
+        # round-trip per shard, not 2·num_blocks sets).
+        init: "dict" = {}
         for b, sl in enumerate(self.block_slices):
-            self.kv.set(self._bkey(b), params[sl].copy(), worker="ps-init")
-            self.kv.set(self._vkey(b), 0, worker="ps-init")
+            init[self._bkey(b)] = params[sl].copy()
+            init[self._vkey(b)] = 0
+        self.kv.mset(init, worker="ps-init")
 
     @staticmethod
     def _make_blocks(dim: int, n: int) -> List[slice]:
@@ -125,22 +138,46 @@ class ParameterServer:
         rng: Optional[np.random.Generator] = None,
     ) -> int:
         """Apply delta block-wise.  Returns number of blocks applied (blocks
-        rejected for staleness are skipped — caller may re-pull)."""
-        applied = 0
+        rejected for staleness are skipped — caller may re-pull).
+
+        Batched: one ``mget`` covers the staleness check for every block,
+        then all accepted block updates land in one ``eval_many`` and all
+        version bumps in a second — at most two round-trips per KV shard
+        instead of 2·num_blocks synchronous writes.  The two-phase order
+        matters: version keys may live on different shards than their
+        blocks, and publishing them together in one per-shard pass could
+        bump a version *before* its block data lands — a ``wait_fresh``
+        reader would then pull stale data believing it fresh.  Data first,
+        versions second preserves the old eval-then-incr guarantee.  Each
+        block's range update still applies atomically under its shard lock
+        (HOGWILD!); batching changes the wire cost only."""
         rng = rng or np.random.default_rng(0)
+        n = len(self.block_slices)
+        stale: set = set()
+        if self.config.max_staleness is not None and pulled_versions is not None:
+            vers = self.kv.mget(
+                [self._vkey(b) for b in range(n)], default=0, worker=worker
+            )
+            for b, cur_ver in enumerate(vers):
+                if int(cur_ver or 0) - pulled_versions[b] > self.config.max_staleness:
+                    stale.add(b)
+        block_updates: "dict" = {}
+        version_bumps: "dict" = {}
+        applied = 0
         for b, sl in enumerate(self.block_slices):
-            if self.config.max_staleness is not None and pulled_versions is not None:
-                cur_ver = int(self.kv.get(self._vkey(b), 0, worker=worker))
-                if cur_ver - pulled_versions[b] > self.config.max_staleness:
-                    continue
+            if b in stale:
+                continue
             chunk = delta[sl]
             if self.config.compress_int8:
                 q, scale = _quantize_int8(chunk, rng)
                 chunk = _dequantize_int8(q, scale)
             # server-side range update (Redis EVAL analogue): atomic per block
-            self.kv.eval(self._bkey(b), lambda cur, c=chunk: cur + c, worker=worker)
-            self.kv.incr(self._vkey(b), 1, worker=worker)
+            block_updates[self._bkey(b)] = lambda cur, c=chunk: cur + c
+            version_bumps[self._vkey(b)] = lambda v: int(v or 0) + 1
             applied += 1
+        if block_updates:
+            self.kv.eval_many(block_updates, worker=worker)
+            self.kv.eval_many(version_bumps, worker=worker)
         return applied
 
     def current(self, worker: str = "-") -> np.ndarray:

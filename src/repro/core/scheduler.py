@@ -18,11 +18,13 @@ Fault tolerance model (paper §3.1):
 Notification contract (event-driven control plane):
   * **per-shard queue watch** — workers block in ``lease_batch`` on the
     watch condition of the KV shard holding the queue key
-    (``KVStore.wait_key``): every producer's ``rpush`` (``submit``/
+    (``KVStore.wait_key``): every producer's push (``submit``/
     ``submit_many``, ``reap`` requeues, ``speculate`` duplicates,
     ``release``) notifies that shard as part of the write itself, so *any*
     producer sharing the KV — including a second scheduler handle — wakes
-    waiting workers, not just this object.  Queue length is re-checked
+    waiting workers, not just this object.  ``submit_many`` is pipelined
+    (``KVStore.rpush_many``): an N-task submit is one round-trip and one
+    coalesced wakeup on the queue's shard, not N.  Queue length is re-checked
     between the shard-sequence snapshot and the wait, so an in-process
     push can never be missed.  A worker being stopped is woken via
     ``wake_workers()`` (a virtual shard touch) and re-checks its stop
@@ -197,8 +199,14 @@ class Scheduler:
         self._signal_work()
 
     def submit_many(self, tasks: List[TaskSpec]) -> None:
+        """Batch-submit: the whole task list lands on the queue in one
+        pipelined push (one round-trip, one wakeup on the queue's shard —
+        ``KVStore.rpush_many`` coalesces the shard notify, so an N-task
+        submit wakes blocked workers once, not N times)."""
+        if not tasks:
+            return
         self._index_tasks(tasks)
-        self.kv.rpush(_Q, *tasks, worker="scheduler")
+        self.kv.rpush_many({_Q: list(tasks)}, worker="scheduler")
         self._signal_work()
 
     # ---- worker protocol --------------------------------------------------

@@ -27,7 +27,7 @@ from typing import Any, Callable, Iterable, List, Optional
 from repro.storage import KVStore, ObjectStore
 
 from .executor import FaultPlan, WorkerPool
-from .functions import FunctionSpec, TaskSpec, stage_input
+from .functions import FunctionSpec, TaskSpec, stage_inputs
 from .futures import ResultFuture, get_all
 from .resources import LAMBDA_2017, ResourceLimits
 from .scheduler import Scheduler, SchedulerConfig
@@ -85,13 +85,20 @@ class WrenExecutor:
         *,
         job_id: Optional[str] = None,
     ) -> List[ResultFuture]:
-        """One stateless function invocation per item."""
+        """One stateless function invocation per item.
+
+        Submission is fully batched: all inputs are staged in a single
+        ``put_many`` round-trip (``stage_inputs``) and all task records hit
+        the scheduler queue in one pipelined push (``submit_many``) — the
+        driver pays O(1) modeled requests to launch an N-task map, not
+        O(N)."""
         job = job_id or f"job-{uuid.uuid4().hex[:8]}"
         func = FunctionSpec.register(self.store, fn, worker="driver")
-        tasks: List[TaskSpec] = []
-        for i, item in enumerate(items):
-            input_key = stage_input(self.store, job, item, worker="driver")
-            tasks.append(TaskSpec.make(job, func, input_key, i))
+        input_keys = stage_inputs(self.store, job, list(items), worker="driver")
+        tasks = [
+            TaskSpec.make(job, func, input_key, i)
+            for i, input_key in enumerate(input_keys)
+        ]
         self.scheduler.submit_many(tasks)
         return [ResultFuture(self.store, t) for t in tasks]
 

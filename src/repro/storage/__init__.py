@@ -1,5 +1,21 @@
 """Disaggregated storage plane: object store (S3 semantics), KV store
-(Redis semantics), shuffle, serialization, and paper-calibrated perf models."""
+(Redis semantics), shuffle, serialization, and paper-calibrated perf models.
+
+Batched data-plane contract (both directions, the Fig 5/6 request-count
+fix — see each module's docstring for details):
+
+  * reads  — ``ObjectStore.get_many`` / ``KVStore.mget``: N keys cost one
+    amortized round-trip (request latency + summed transfer; the KV charges
+    one per *shard touched*), never one per key;
+  * writes — ``ObjectStore.put_many`` / ``KVStore.mset`` / ``rpush_many`` /
+    ``eval_many``: the symmetric mirror, with notification coalesced — a
+    batch fires one ``notify_put`` (object store) or exactly one sequence
+    bump per touched shard (KV), so waiters wake once per batch;
+  * deletes — ``delete_many`` / ``mdel`` ride the same accounting for
+    lifecycle teardown (shuffle-intermediate GC, per-job GC).
+
+Every operation is recorded in a :class:`~repro.storage.object_store.Ledger`
+(one record == one modeled request), which is what benchmarks count."""
 
 from .kv_store import KVStore
 from .object_store import FileBackend, InMemoryBackend, Ledger, ObjectStore, OpRecord

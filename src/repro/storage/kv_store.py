@@ -21,6 +21,15 @@ Data plane (batching + per-shard notification):
     than one per key.  The Cloudburst/numpywren lesson applied to the
     coordination plane: parameter-server pulls and shuffle column reads
     cost O(shards) requests, not O(keys).
+  * **batched writes** — ``mset`` (Redis MSET), pipelined ``rpush_many``,
+    and ``eval_many`` (pipelined EVAL) mirror ``mget`` on the write side:
+    keys are grouped by shard, each shard's group lands in one locked pass
+    charged as one amortized round-trip (request latency + summed
+    transfer), and each touched shard's sequence is bumped **exactly
+    once** — a batch of N writes wakes each shard's watchers once, not N
+    times.  Shuffle map-side fan-out, parameter-server pushes, and
+    scheduler batch-submits ride these; ``mdel`` closes the lifecycle with
+    the same per-shard accounting.
   * **per-shard watch conditions** — every mutating op (``set``/``setnx``/
     ``incr``/``cas``/``eval``/``rpush``/``delete``) bumps its shard's write
     sequence and broadcasts on the shard's condition.  Consumers snapshot
@@ -199,6 +208,29 @@ class KVStore(_Endpoint):
                 )
         return out
 
+    def mset(self, mapping: Dict[str, Any], *, worker: str = "-") -> None:
+        """Batched set (Redis MSET): the write-side mirror of :meth:`mget`.
+        Keys are grouped by shard; each shard's group lands in one locked
+        pass charged as one amortized round-trip (request latency + summed
+        transfer), and the shard sequence is bumped exactly once — watchers
+        wake once per touched shard, not once per key."""
+        by_shard: Dict[int, List[str]] = {}
+        for key in mapping:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = 0
+                for key in group:
+                    value = mapping[key]
+                    sh.data[key] = value
+                    nbytes += _sizeof(value)
+                self._charge(
+                    sh, worker, "mset", f"[{len(group)} keys@s{sidx}]",
+                    nbytes, write=True,
+                )
+                sh.touch()  # one wakeup per touched shard for the whole batch
+
     def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
         sh = self._shard(key)
         with sh.lock:
@@ -287,6 +319,39 @@ class KVStore(_Endpoint):
             sh.touch()
             return new
 
+    def eval_many(
+        self,
+        updates: Dict[str, Callable[[Any], Any]],
+        *,
+        default: Any = None,
+        worker: str = "-",
+    ) -> Dict[str, Any]:
+        """Pipelined EVAL: apply ``updates[key]`` to each key atomically
+        under its shard lock, grouped by shard — one amortized round-trip
+        and **one** watcher wakeup per touched shard for the whole batch.
+        Each update still runs atomically per key (HOGWILD! range-update
+        semantics are unchanged); what's batched is the wire, not the
+        locking.  Returns the new value per key."""
+        by_shard: Dict[int, List[str]] = {}
+        for key in updates:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        out: Dict[str, Any] = {}
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = 0
+                for key in group:
+                    new = updates[key](sh.data.get(key, default))
+                    sh.data[key] = new
+                    out[key] = new
+                    nbytes += _sizeof(new)
+                self._charge(
+                    sh, worker, "meval", f"[{len(group)} keys@s{sidx}]",
+                    nbytes, write=True,
+                )
+                sh.touch()
+        return out
+
     # ---- lists (queues) ---------------------------------------------------
     def rpush(self, key: str, *values: Any, worker: str = "-") -> int:
         sh = self._shard(key)
@@ -296,6 +361,35 @@ class KVStore(_Endpoint):
             self._charge(sh, worker, "rpush", key, sum(_sizeof(v) for v in values), write=True)
             sh.touch()
             return len(lst)
+
+    def rpush_many(
+        self, pushes: Dict[str, List[Any]], *, worker: str = "-"
+    ) -> Dict[str, int]:
+        """Pipelined RPUSH across keys: group by shard, extend every list in
+        one locked pass per shard, charge one amortized round-trip per shard
+        and bump each touched shard's sequence exactly once — N queue
+        appends wake each shard's blocked ``blpop``/``wait_key`` consumers
+        once.  Returns the new length per key."""
+        by_shard: Dict[int, List[str]] = {}
+        for key in pushes:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        lengths: Dict[str, int] = {}
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = 0
+                for key in group:
+                    values = pushes[key]
+                    lst = sh.data.setdefault(key, [])
+                    lst.extend(values)
+                    lengths[key] = len(lst)
+                    nbytes += sum(_sizeof(v) for v in values)
+                self._charge(
+                    sh, worker, "mrpush", f"[{len(group)} keys@s{sidx}]",
+                    nbytes, write=True,
+                )
+                sh.touch()
+        return lengths
 
     def lpop(self, key: str, *, worker: str = "-") -> Any:
         sh = self._shard(key)

@@ -22,6 +22,17 @@ Data plane (batching + notification):
     driver-side fan-in (future resolution, shuffle column reads, parameter
     pulls) should ride a multi-get.  Missing keys are omitted from the
     result dict (callers that need all keys pass ``missing="error"``).
+  * **batched writes** — ``put_many``/``put_many_bytes`` are the write-side
+    mirror: N objects land in one backend call charged as a single request
+    latency plus the summed transfer time (``write_latency + Σbytes/bw``),
+    and the whole batch fires **one** ``notify_put`` — waiters wake once
+    per batch, not once per object.  ``delete_many`` rides the same
+    accounting for teardown (shuffle-intermediate GC, per-job GC).  This is
+    the other half of the Fig 5/6 request-count bottleneck: map-side
+    fan-outs (``shuffle.write_partitions``, input staging) are request-
+    bound, not byte-bound, so pipelining the batch amortizes exactly the
+    term that saturates first.  ``if_absent`` batches keep per-key
+    first-writer-wins semantics; the return value counts keys won.
   * **key watch** (event-driven completion signalling) — every successful
     ``put_bytes`` through this store handle calls ``notify_put``: a
     broadcast on the store's watch condition plus a monotonically
@@ -189,6 +200,16 @@ class _Backend:
                 continue
         return out
 
+    def put_many(self, items: Dict[str, bytes], *, if_absent: bool) -> int:
+        """Batched write: land every item, returning how many were written
+        (``if_absent`` keeps per-key first-writer-wins; losers don't count).
+        Backends override to serve the whole batch in one locked pass."""
+        won = 0
+        for key, blob in items.items():
+            if self.put(key, blob, if_absent=if_absent):
+                won += 1
+        return won
+
     def exists(self, key: str) -> bool:
         raise NotImplementedError
 
@@ -215,6 +236,16 @@ class InMemoryBackend(_Backend):
     def get_many(self, keys: List[str]) -> Dict[str, bytes]:
         with self._lock:
             return {k: self._data[k] for k in keys if k in self._data}
+
+    def put_many(self, items: Dict[str, bytes], *, if_absent: bool) -> int:
+        with self._lock:
+            won = 0
+            for key, blob in items.items():
+                if if_absent and key in self._data:
+                    continue
+                self._data[key] = blob
+                won += 1
+            return won
 
     def get(self, key: str) -> bytes:
         with self._lock:
@@ -341,6 +372,29 @@ class ObjectStore(_Endpoint):
             self.notify_put(key)
         return won
 
+    def put_many_bytes(
+        self, items: Dict[str, bytes], *, worker: str = "-", if_absent: bool = False
+    ) -> int:
+        """Batched write: one backend call, one amortized round-trip.
+
+        Mirrors :meth:`get_many_bytes` on the write side — N objects cost
+        ``write_latency + Σbytes/bw`` instead of ``N·latency + …``, the
+        pipelined-PUT amortization.  The whole batch fires exactly one
+        ``notify_put`` (waiters re-check their predicate once per batch).
+        Returns the number of keys written; with ``if_absent=True`` each key
+        keeps first-writer-wins semantics and losers are not counted."""
+        if not items:
+            return 0
+        won = self.backend.put_many(dict(items), if_absent=if_absent)
+        total = sum(len(b) for b in items.values())
+        vt = self.profile.write_latency_s + total / self.profile.write_bw_per_conn
+        self.ledger.record(
+            OpRecord(worker, "mput", f"[{len(items)} keys]", total, vt, time.monotonic())
+        )
+        if won:
+            self.backend.notify_put()
+        return won
+
     def get_bytes(self, key: str, *, worker: str = "-") -> bytes:
         blob = self.backend.get(key)
         self.ledger.record(
@@ -424,6 +478,19 @@ class ObjectStore(_Endpoint):
 
     # Redis-style alias; some call sites read better as multi_get.
     multi_get = get_many
+
+    def put_many(
+        self, items: Dict[str, Any], *, worker: str = "-", if_absent: bool = False
+    ) -> int:
+        """Batched object write (see :meth:`put_many_bytes` for the cost
+        model): serialize every value, land the batch in one amortized
+        round-trip, wake watchers once.  Returns the number of keys
+        written."""
+        return self.put_many_bytes(
+            {k: serialization.dumps(v) for k, v in items.items()},
+            worker=worker,
+            if_absent=if_absent,
+        )
 
     def put_content_addressed(self, prefix: str, value: Any, *, worker: str = "-") -> str:
         """PyWren's 'globally unique keys': content-hash the blob.  Duplicate

@@ -21,6 +21,13 @@ The model is a standard M/D/1-free approximation: per-op virtual time is
 applied analytically at the benchmark layer (effective per-worker bandwidth
 = min(per_conn, aggregate / workers)); KV shards additionally cap request
 throughput at ``ops_per_s_per_shard``.
+
+Batched operations (``get_many``/``put_many``/``mget``/``mset``/…) charge
+the *same formula once for the whole batch*: one request latency plus the
+summed transfer time (the KV applies it per shard touched).  That makes
+request count — the paper's Fig 5/6 bottleneck — a first-class modeled
+quantity: one ledger record is one request, so batching N ops into one
+record is exactly an N× request-count reduction at equal bytes.
 """
 
 from __future__ import annotations

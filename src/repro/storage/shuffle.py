@@ -11,6 +11,17 @@ Terasort-style two-stage shuffle (§3.3):
 Two intermediate backends, as in the paper: the ObjectStore (S3; abundant
 bandwidth, low request throughput) and the KVStore (Redis; provisioned
 shards).  Range partitioning uses sampled splitters (TeraSort's sampler).
+
+Request-count accounting (the Fig 5/6 bottleneck), both directions batched:
+  * ``write_partitions`` lands a map task's entire fan-out in one batched
+    write — ``ObjectStore.put_many`` (one amortized round-trip) or
+    ``KVStore.mset`` (one per shard touched) — instead of one modeled
+    request per (map, partition) object;
+  * ``read_partition_column`` reads a reduce task's entire fan-in in one
+    ``get_many``/``mget`` the same way;
+  * ``delete_intermediates`` retires the whole ``shuffle/{job}`` column
+    space after merge in one batched delete (``delete_many``/``mdel``), so
+    intermediates don't outlive the job (ROADMAP shuffle-GC item).
 """
 
 from __future__ import annotations
@@ -69,6 +80,32 @@ def intermediate_key(job: str, map_id: int, part_id: int) -> str:
     return f"shuffle/{job}/m{map_id:06d}/p{part_id:06d}"
 
 
+def gc_tombstone_key(job: str) -> str:
+    """Marker that ``job``'s shuffle intermediates were GC'd.  Lives outside
+    the ``shuffle/{job}/`` column space so deleting the columns can't race
+    with reading the marker.  A straggler map attempt finishing after the
+    merge barrier (its speculative duplicate satisfied the stage) would
+    otherwise re-create just-deleted intermediates that nothing ever
+    deletes again; ``write_partitions`` re-checks this marker after its
+    batch lands and un-writes it.  One O(1) key per shuffle job outlives
+    the GC — vs. the O(maps × partitions) leak it prevents.
+
+    Consequence: **job ids are single-use per store** — a GC'd job name
+    stays dead, and writes under it are dropped (mirroring the
+    scheduler's ``finish_job`` tombstones, which drop queued duplicates
+    of finished jobs the same way).  ``mapreduce``/``terasort`` mint
+    uuid-suffixed ids, so this only concerns callers naming jobs by
+    hand; :func:`clear_gc_tombstone` is the explicit escape hatch."""
+    return f"shuffle-gc/{job}"
+
+
+def clear_gc_tombstone(store: Store, job: str, *, worker: str = "-") -> None:
+    """Explicitly revive a GC'd shuffle job name (job ids are single-use
+    per store otherwise — see :func:`gc_tombstone_key`).  Only safe once
+    no zombie attempt of the *old* job instance can still be running."""
+    store.delete(gc_tombstone_key(job), worker=worker)
+
+
 def write_partitions(
     store: Store,
     job: str,
@@ -78,16 +115,45 @@ def write_partitions(
     worker: str = "-",
 ) -> int:
     """Write one intermediate object per partition; returns #objects.
-    This is where the paper's quadratic request count comes from."""
-    n = 0
-    for part_id, part in enumerate(parts):
-        key = intermediate_key(job, map_id, part_id)
-        if isinstance(store, KVStore):
-            store.set(key, list(part), worker=worker)
-        else:
-            store.put(key, list(part), worker=worker)
-        n += 1
-    return n
+
+    This is where the paper's quadratic request count comes from — and
+    where batching attacks it: the whole map-side fan-out lands in one
+    ``mset`` (KV: one round-trip per shard touched) or one ``put_many``
+    (object store: one amortized round-trip), instead of one modeled
+    request per partition.  The object *count* is unchanged (reducers
+    still address per-(map, partition) keys); only the request count
+    collapses.
+
+    A zombie attempt (straggler whose speculative duplicate already
+    satisfied the stage barrier) may run after ``delete_intermediates``
+    GC'd the job; the tombstone check below un-writes its batch (returns
+    0) instead of resurrecting deleted keys.  The check runs *after* the
+    write on purpose — check-then-write would race (a tombstone landing
+    between check and write leaves the resurrected keys forever), while
+    write-then-check cannot: the tombstone is written before the GC's
+    batched delete, so any write that lands after that delete must
+    observe the tombstone and self-clean.  Cost: one modeled existence
+    check per map task, amortized over the whole fan-out.
+
+    Corollary: writes under a job name whose intermediates were already
+    GC'd are dropped — job ids are single-use per store unless revived
+    via :func:`clear_gc_tombstone`."""
+    items = {
+        intermediate_key(job, map_id, part_id): list(part)
+        for part_id, part in enumerate(parts)
+    }
+    tomb = gc_tombstone_key(job)
+    if isinstance(store, KVStore):
+        store.mset(items, worker=worker)
+        if store.exists(tomb, worker=worker):
+            store.mdel(list(items), worker=worker)
+            return 0
+    else:
+        store.put_many(items, worker=worker)
+        if store.exists(tomb, worker=worker):
+            store.delete_many(list(items), worker=worker)
+            return 0
+    return len(items)
 
 
 def read_partition_column(
@@ -115,6 +181,39 @@ def read_partition_column(
     for chunk in chunks:
         out.extend(chunk)
     return out
+
+
+def delete_intermediates(
+    store: Store,
+    job: str,
+    num_map_tasks: int,
+    num_partitions: int,
+    *,
+    worker: str = "-",
+) -> int:
+    """Shuffle-intermediate GC: retire every ``shuffle/{job}`` object after
+    the merge stage has consumed them.  The key space is deterministic
+    (``intermediate_key`` over the map × partition grid), so no listing is
+    needed — the whole column space goes in one batched delete
+    (``KVStore.mdel``: one round-trip per shard touched;
+    ``ObjectStore.delete_many``: one amortized round-trip).  A GC
+    tombstone (:func:`gc_tombstone_key`) is written *before* the deletes
+    so a zombie map attempt landing afterwards sees it and drops its
+    re-write.  Returns the number of keys submitted for deletion."""
+    keys = [
+        intermediate_key(job, map_id, part_id)
+        for map_id in range(num_map_tasks)
+        for part_id in range(num_partitions)
+    ]
+    if not keys:
+        return 0
+    if isinstance(store, KVStore):
+        store.set(gc_tombstone_key(job), 1, worker=worker)
+        store.mdel(keys, worker=worker)
+    else:
+        store.put(gc_tombstone_key(job), 1, worker=worker)
+        store.delete_many(keys, worker=worker)
+    return len(keys)
 
 
 def merge_sorted(chunks: List[List[Any]], key: Optional[Callable[[Any], Any]] = None) -> List[Any]:

@@ -1,0 +1,395 @@
+"""Write-plane regressions: batched puts, per-shard write coalescing,
+and shuffle-intermediate GC.
+
+Pins the PR-3 contract (the write-side mirror of PR 2's batched reads):
+  * ``ObjectStore.put_many``/``put_many_bytes`` — one backend call charged
+    exactly one request latency + summed transfer, one ``notify_put`` for
+    the whole batch, per-key first-writer-wins under ``if_absent``;
+  * ``KVStore.mset``/``rpush_many``/``eval_many`` — one charged op and one
+    shard-sequence bump per shard touched (a batch wakes each shard's
+    watchers exactly once), with bit-identical results to looped writes;
+  * ``shuffle.write_partitions`` — a map task's whole fan-out in one
+    batched write; ``shuffle.delete_intermediates`` — the job's column
+    space retired in one batched delete, and mapreduce/terasort leave no
+    ``shuffle/{job}`` keys behind;
+  * driver-side batching — ``wren.map`` stages all inputs in one ``mput``
+    and submits all tasks in one pipelined push; ``ParameterServer``
+    pushes ride ``eval_many``.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ParameterServer,
+    PSConfig,
+    WrenExecutor,
+    get_all,
+    mapreduce,
+    terasort,
+    verify_sorted,
+)
+from repro.storage import KVStore, ObjectStore
+from repro.storage import shuffle as shf
+
+
+# ---------------------------------------------------------------------------
+# ObjectStore.put_many
+# ---------------------------------------------------------------------------
+
+def test_put_many_single_amortized_round_trip():
+    """N objects must cost one request latency + summed transfer — the
+    perf-model accounting must equal the formula exactly."""
+    store = ObjectStore()
+    items = {f"k/{i}": bytes(100) for i in range(32)}
+    store.put_many_bytes(items, worker="w")
+    recs = [r for r in store.ledger.records() if r.op == "mput"]
+    assert len(recs) == 1
+    total = sum(len(b) for b in items.values())
+    expected = store.profile.write_latency_s + total / store.profile.write_bw_per_conn
+    assert recs[0].nbytes == total
+    assert abs(recs[0].vtime_s - expected) < 1e-12
+    # amortized: far cheaper than 32 independent puts would have been
+    assert recs[0].vtime_s < 32 * store.profile.write_latency_s / 2
+
+
+def test_put_many_parity_with_looped_puts():
+    """Batched and looped writes must leave bit-identical store contents."""
+    values = {f"p/{i}": {"i": i, "blob": "x" * i} for i in range(16)}
+    batched, looped = ObjectStore(), ObjectStore()
+    batched.put_many(values)
+    for k, v in values.items():
+        looped.put(k, v)
+    assert batched.get_many(list(values)) == looped.get_many(list(values))
+    assert batched.list("p/") == looped.list("p/")
+
+
+def test_put_many_single_notify_wakes_waiters():
+    """The whole batch fires exactly one put notification — and that one
+    wakeup is enough for a waiter blocked on any key of the batch."""
+    store = ObjectStore()
+    seq0 = store.put_seq()
+    store.put_many({f"n/{i}": i for i in range(8)})
+    assert store.put_seq() == seq0 + 1  # one bump for 8 objects
+
+    woken = []
+
+    def waiter():
+        store.wait_keys(["n2/5"], timeout_s=5.0)
+        woken.append(True)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    store.put_many({f"n2/{i}": i for i in range(8)})
+    t.join(timeout=5.0)
+    assert woken and time.monotonic() - t0 < 0.5
+
+
+def test_put_many_if_absent_first_writer_wins():
+    store = ObjectStore()
+    store.put("a", "old")
+    won = store.put_many({"a": "new", "b": "fresh"}, if_absent=True)
+    assert won == 1  # only 'b' landed
+    assert store.get("a") == "old"
+    assert store.get("b") == "fresh"
+    # empty batch: no round-trip charged, no notify
+    store.ledger.clear()
+    seq = store.put_seq()
+    assert store.put_many({}) == 0
+    assert store.ledger.records() == []
+    assert store.put_seq() == seq
+
+
+def test_delete_many_single_round_trip():
+    store = ObjectStore()
+    store.put_many({f"d/{i}": i for i in range(8)})
+    store.ledger.clear()
+    store.delete_many([f"d/{i}" for i in range(8)], worker="gc")
+    assert [r.op for r in store.ledger.records()] == ["mdel"]
+    assert store.list("d/") == []
+
+
+# ---------------------------------------------------------------------------
+# KVStore.mset / rpush_many / eval_many: per-shard coalescing
+# ---------------------------------------------------------------------------
+
+def test_mset_one_charge_and_one_wakeup_per_shard():
+    kv = KVStore(num_shards=4)
+    mapping = {f"ms/{i}": i for i in range(16)}
+    shards = {kv.shard_of(k) for k in mapping}
+    seqs_before = {s: kv._shards[s].seq for s in shards}
+    before = kv.total_ops()
+    kv.mset(mapping)
+    # one charged op per shard touched, not one per key
+    assert kv.total_ops() - before == len(shards)
+    # each touched shard's sequence bumped exactly once for the whole batch
+    for s in shards:
+        assert kv._shards[s].seq == seqs_before[s] + 1
+    assert kv.mget(list(mapping)) == list(mapping.values())
+
+
+def test_mset_parity_with_looped_sets():
+    mapping = {f"par/{i}": [i, str(i)] for i in range(12)}
+    batched, looped = KVStore(num_shards=3), KVStore(num_shards=3)
+    batched.mset(mapping)
+    for k, v in mapping.items():
+        looped.set(k, v)
+    assert batched.mget(list(mapping)) == looped.mget(list(mapping))
+
+
+def test_rpush_many_returns_lengths_and_wakes_blpop():
+    kv = KVStore(num_shards=2)
+    kv.rpush("q/a", "seed")
+    got = []
+
+    def consumer():
+        got.append(kv.blpop("q/b", timeout_s=5.0))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)
+    t0 = time.monotonic()
+    lengths = kv.rpush_many({"q/a": [1, 2], "q/b": ["payload"]})
+    t.join(timeout=5.0)
+    assert lengths["q/a"] == 3
+    assert got == ["payload"]  # woken by the batched push itself
+    assert time.monotonic() - t0 < 0.5
+    # one charged op per shard touched
+    ops = [r.op for r in kv.ledger.records() if r.op == "mrpush"]
+    shards = {kv.shard_of("q/a"), kv.shard_of("q/b")}
+    assert len(ops) == len(shards)
+
+
+def test_eval_many_atomic_per_key_one_wakeup_per_shard():
+    kv = KVStore(num_shards=4)
+    kv.mset({"e/x": 10, "e/y": 20})
+    keys = ("e/x", "e/y", "e/new")
+    touched = {kv.shard_of(k) for k in keys}
+    seqs_before = {s: kv._shards[s].seq for s in touched}
+    out = kv.eval_many(
+        {"e/x": lambda v: v + 1, "e/y": lambda v: v * 2, "e/new": lambda v: (v or 0) + 5}
+    )
+    assert out == {"e/x": 11, "e/y": 40, "e/new": 5}
+    assert kv.get("e/x") == 11 and kv.get("e/y") == 40 and kv.get("e/new") == 5
+    # one sequence bump per touched shard, regardless of how many keys landed
+    for s in touched:
+        assert kv._shards[s].seq == seqs_before[s] + 1
+
+
+def test_eval_many_charges_per_shard():
+    kv = KVStore(num_shards=4)
+    keys = [f"ev/{i}" for i in range(12)]
+    kv.mset({k: 0 for k in keys})
+    before = kv.total_ops()
+    kv.eval_many({k: (lambda v: v + 1) for k in keys})
+    assert kv.total_ops() - before == len({kv.shard_of(k) for k in keys})
+    assert kv.mget(keys) == [1] * 12
+
+
+# ---------------------------------------------------------------------------
+# shuffle: batched write_partitions + intermediate GC
+# ---------------------------------------------------------------------------
+
+def test_write_partitions_one_request_object_store():
+    store = ObjectStore()
+    parts = [[(p, i) for i in range(3)] for p in range(6)]
+    store.ledger.clear()
+    n = shf.write_partitions(store, "job", 0, parts, worker="m0")
+    assert n == 6
+    writes = [r for r in store.ledger.records() if r.op in ("put", "mput")]
+    assert [r.op for r in writes] == ["mput"]  # whole fan-out, one request
+    col = shf.read_partition_column(store, "job", 1, 2, worker="r2")
+    assert col == parts[2]
+
+
+def test_write_partitions_per_shard_kv_store():
+    kv = KVStore(num_shards=2)
+    parts = [[(p, i) for i in range(3)] for p in range(6)]
+    kv.ledger.clear()
+    shf.write_partitions(kv, "job", 0, parts, worker="m0")
+    writes = [r for r in kv.ledger.records() if r.op in ("set", "mset")]
+    assert all(r.op == "mset" for r in writes)
+    assert len(writes) <= kv.num_shards  # one per shard touched, never per key
+    col = shf.read_partition_column(kv, "job", 1, 4, worker="r4")
+    assert col == parts[4]
+
+
+@pytest.mark.parametrize("kind", ["obj", "kv"])
+def test_delete_intermediates_retires_column_space(kind):
+    store = KVStore(num_shards=2) if kind == "kv" else ObjectStore()
+    n_maps, n_parts = 3, 4
+    for m in range(n_maps):
+        shf.write_partitions(store, "gcjob", m, [[m, p] for p in range(n_parts)])
+    deleted = shf.delete_intermediates(store, "gcjob", n_maps, n_parts)
+    assert deleted == n_maps * n_parts
+    for m in range(n_maps):
+        for p in range(n_parts):
+            key = shf.intermediate_key("gcjob", m, p)
+            if kind == "kv":
+                assert not store.exists(key)
+            else:
+                assert not store.backend.exists(key)
+    if kind == "obj":
+        assert store.list("shuffle/gcjob/") == []
+    # zombie guard: a straggler map attempt finishing after GC must not
+    # resurrect the deleted column space (its write is dropped)
+    assert shf.write_partitions(store, "gcjob", 0, [[9], [9]]) == 0
+    assert not (
+        store.exists(shf.intermediate_key("gcjob", 0, 0))
+        if kind == "kv"
+        else store.backend.exists(shf.intermediate_key("gcjob", 0, 0))
+    )
+    # job ids are single-use after GC — but clearing the tombstone is the
+    # explicit escape hatch that revives the name
+    shf.clear_gc_tombstone(store, "gcjob")
+    assert shf.write_partitions(store, "gcjob", 0, [[9], [9]]) == 2
+
+
+def test_mapreduce_leaves_no_shuffle_intermediates():
+    docs = [[f"w{i % 5} w{(i * 3) % 7}" for i in range(10)] for _ in range(4)]
+    with WrenExecutor(num_workers=4) as wex:
+        out = mapreduce(
+            wex,
+            lambda doc: [(w, 1) for line in doc for w in line.split()],
+            lambda _k, vs: sum(vs),
+            docs,
+            num_reducers=3,
+        )
+        assert sum(out.values()) == sum(len(l.split()) for d in docs for l in d)
+        assert wex.store.list("shuffle/") == []  # GC'd after merge
+
+
+def test_terasort_leaves_no_shuffle_intermediates_kv():
+    with WrenExecutor(num_workers=4) as wex:
+        store = wex.store
+        keys = []
+        for i in range(3):
+            k = f"tin/{i}"
+            store.put(k, shf.make_sort_records(40, seed=i))
+            keys.append(k)
+        kv = KVStore(num_shards=2)
+        rep = terasort(wex, keys, "tout", 4, intermediate=kv)
+        assert verify_sorted(store, "tout")
+        assert rep.n_records == 3 * 40
+        # every shuffle/<job> KV key retired after merge
+        for sh in kv._shards:
+            assert not any(k.startswith("shuffle/") for k in sh.data)
+
+
+# ---------------------------------------------------------------------------
+# driver-side batching: input staging + batch submit
+# ---------------------------------------------------------------------------
+
+def test_map_stages_inputs_in_one_batched_put():
+    with WrenExecutor(num_workers=2) as wex:
+        wex.store.ledger.clear()
+        futs = wex.map(lambda x: x * 3, list(range(10)), job_id="batched")
+        driver_puts = [
+            r
+            for r in wex.store.ledger.records()
+            if r.worker == "driver" and r.op in ("put", "mput")
+        ]
+        # one mput stages all 10 inputs; the only per-key put is the
+        # content-addressed function registration
+        assert sum(1 for r in driver_puts if r.op == "mput") == 1
+        assert sum(1 for r in driver_puts if r.op == "put") <= 1
+        assert get_all(futs, timeout_s=30) == [x * 3 for x in range(10)]
+
+
+def test_submit_many_single_pipelined_push():
+    with WrenExecutor(num_workers=2) as wex:
+        # map → submit_many: the queue push must be one mrpush, not N rpushes
+        wex.kv.ledger.clear()
+        futs = wex.map(lambda x: x + 1, list(range(8)), job_id="pipelined")
+        pushes = [
+            r
+            for r in wex.kv.ledger.records()
+            if r.worker == "scheduler" and r.op in ("rpush", "mrpush")
+        ]
+        assert [r.op for r in pushes] == ["mrpush"]
+        assert get_all(futs, timeout_s=30) == [x + 1 for x in range(8)]
+
+
+def test_stage_inputs_content_addressing_dedupes():
+    from repro.core import stage_inputs
+
+    store = ObjectStore()
+    keys = stage_inputs(store, "dj", [1, 2, 1, 2, 1], worker="driver")
+    assert len(keys) == 5
+    assert keys[0] == keys[2] == keys[4]  # identical items share one object
+    assert len(set(keys)) == 2
+    assert store.get(keys[0]) == 1 and store.get(keys[1]) == 2
+
+
+# ---------------------------------------------------------------------------
+# parameter server: batched pushes
+# ---------------------------------------------------------------------------
+
+def test_ps_push_is_batched_eval_many():
+    kv = KVStore(num_shards=4)
+    ps = ParameterServer(kv, np.zeros(64, np.float32), PSConfig(num_blocks=8))
+    kv.ledger.clear()
+    applied = ps.push_delta(np.ones(64, np.float32), worker="pusher")
+    assert applied == 8
+    ops = [r.op for r in kv.ledger.records() if r.worker == "pusher"]
+    assert set(ops) == {"meval"}
+    # two batched phases (block data, then version bumps — data must land
+    # first), each at most one round-trip per shard, never one per block
+    assert len(ops) <= 2 * 4
+    params, vers = ps.pull()
+    np.testing.assert_allclose(params, np.ones(64, np.float32))
+    assert vers == [1] * 8
+
+
+def test_ps_push_lands_data_before_versions():
+    """A version bump must never publish ahead of its block data: the push
+    writes all blocks in one eval_many, then all versions in a second, so
+    any ledger 'meval' touching a version key comes after every block
+    write.  (A wait_fresh reader woken by the version bump would otherwise
+    pull stale block data believing it fresh.)"""
+    kv = KVStore(num_shards=4)
+    ps = ParameterServer(kv, np.zeros(64, np.float32), PSConfig(num_blocks=8))
+    kv.ledger.clear()
+    ps.push_delta(np.ones(64, np.float32), worker="pusher")
+    mevals = [r for r in kv.ledger.records() if r.op == "meval"]
+    # first half of the meval records carries block bytes (float arrays),
+    # second half the integer version counters — sizes tell them apart
+    assert len(mevals) >= 2
+    half = len(mevals) // 2
+    data_bytes = sum(r.nbytes for r in mevals[:half])
+    version_bytes = sum(r.nbytes for r in mevals[half:])
+    assert data_bytes > version_bytes  # data phase strictly precedes versions
+
+
+def test_ps_push_staleness_still_rejects():
+    kv = KVStore(num_shards=2)
+    ps = ParameterServer(kv, np.zeros(8, np.float32), PSConfig(num_blocks=2, max_staleness=0))
+    # advance every block once
+    assert ps.push_delta(np.ones(8, np.float32), pulled_versions=[0, 0]) == 2
+    # a push based on the stale snapshot is rejected block-wise
+    assert ps.push_delta(np.ones(8, np.float32), pulled_versions=[-1, -1]) == 0
+    params, vers = ps.pull()
+    np.testing.assert_allclose(params, np.ones(8, np.float32))
+    assert vers == [1, 1]
+
+
+def test_ps_batched_push_wakes_wait_fresh():
+    kv = KVStore(num_shards=2)
+    ps = ParameterServer(kv, np.zeros(8, np.float32), PSConfig(num_blocks=2))
+
+    def pusher():
+        time.sleep(0.05)
+        ps.push_delta(np.ones(8, np.float32))
+
+    t = threading.Thread(target=pusher)
+    t.start()
+    t0 = time.monotonic()
+    ver = ps.wait_fresh(1, seen_version=0, timeout_s=5.0)
+    t.join()
+    assert ver >= 1
+    assert time.monotonic() - t0 < 1.0  # eval_many's shard touch woke us

@@ -1,0 +1,119 @@
+"""Internal-link checker for the docs suite (CI `docs` job).
+
+Usage:
+    python tools/check_links.py README.md docs [more files or dirs ...]
+
+For every markdown file given (directories are walked for ``*.md``), each
+inline link or image ``[text](target)`` is checked:
+
+  * external targets (``http://``, ``https://``, ``mailto:``) are skipped —
+    CI must not depend on the network;
+  * relative targets must exist on disk, resolved against the file's
+    directory;
+  * ``path#anchor`` / ``#anchor`` targets must also name a real heading in
+    the target file, using GitHub's slug rules (lowercase, spaces to
+    hyphens, punctuation dropped).
+
+Exit status: 0 when every link resolves, 1 when any is broken (never the
+raw count — POSIX truncates exit codes modulo 256, so 256 broken links
+would otherwise read as success), 2 on usage error.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterator, List, Tuple
+
+# Inline links/images: [text](target) — target may carry a #fragment.
+# Nested brackets in text (e.g. badges) are not needed for this repo.
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*#*\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code, lowercase, drop
+    punctuation, spaces become hyphens."""
+    text = re.sub(r"[`*_~]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linkified headings
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def md_files(paths: List[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                for name in sorted(names):
+                    if name.endswith(".md"):
+                        yield os.path.join(root, name)
+        else:
+            yield p
+
+
+def heading_slugs(md_path: str) -> set:
+    slugs = set()
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for line in f:
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING_RE.match(line)
+            if m:
+                slugs.add(github_slug(m.group(1)))
+    return slugs
+
+
+def iter_links(md_path: str) -> Iterator[Tuple[int, str]]:
+    in_fence = False
+    with open(md_path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK_RE.finditer(line):
+                yield lineno, m.group(1)
+
+
+def check_file(md_path: str) -> List[str]:
+    errors = []
+    base = os.path.dirname(os.path.abspath(md_path))
+    for lineno, target in iter_links(md_path):
+        if target.startswith(_EXTERNAL):
+            continue
+        path, _, anchor = target.partition("#")
+        dest = md_path if not path else os.path.normpath(os.path.join(base, path))
+        if path and not os.path.exists(dest):
+            errors.append(f"{md_path}:{lineno}: broken link -> {target}")
+            continue
+        if anchor and dest.endswith(".md"):
+            if github_slug(anchor) not in heading_slugs(dest):
+                errors.append(f"{md_path}:{lineno}: missing anchor -> {target}")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    if not argv:
+        print(__doc__)
+        return 2
+    errors: List[str] = []
+    checked = 0
+    for md_path in md_files(argv):
+        checked += 1
+        errors.extend(check_file(md_path))
+    for e in errors:
+        print(e)
+    print(f"checked {checked} file(s): {len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
