@@ -1,5 +1,6 @@
 """Control-plane microbenchmarks: map throughput, job completion time,
-a speculation-factor sweep, and shuffle request-count accounting.
+speculation sweeps (legacy factor + quantile rule), multi-driver overhead,
+and shuffle request-count accounting.
 
 Measures what the event-driven dispatch + batched data plane target:
 per-task scheduling overhead with no-op user functions, so queue/lease/
@@ -9,10 +10,17 @@ notify/multi-get traffic dominates.  Reported rows:
     ``n`` no-op tasks on N warm containers (derived: tasks/s, wall s);
   * ``runtime/job_completion_w{N}`` — wall time of a small *job* (submit →
     all futures resolved), the end-to-end latency a driver observes;
-  * ``runtime/speculation_f{F}`` — completion wall time of a map with one
-    injected straggler worker, across ``speculation_factor`` values: the
-    tuning curve for ``SchedulerConfig.speculation_factor`` (low = eager
-    duplicates hide stragglers sooner at the cost of wasted work);
+  * ``runtime/speculation_f{F}`` / ``runtime/speculation_q{Q}_k{K}`` —
+    completion wall time of a map with one injected straggler worker,
+    across the legacy ``factor × median`` rule and the PR-4
+    quantile-adaptive rule (``max(floor, k × q)``): the tuning curves for
+    ``SchedulerConfig`` (eager duplicates hide stragglers sooner at the
+    cost of wasted work);
+  * ``runtime/multi_driver_d{D}_w{W}`` — map throughput through D
+    stateless scheduler handles (each its own executor + worker pool)
+    sharing one KV/store, vs. one driver with the same total workers: the
+    ``overhead_pct`` field is the cost of splitting the control plane
+    (epoch-fenced CAS traffic + duplicated control loops);
   * ``runtime/shuffle_requests_{obj,kv}`` — modeled storage *requests* per
     shuffle stage on the batched write plane vs. the looped (pre-batching,
     PR 2) write path: every ledger record is one modeled request, so the
@@ -24,40 +32,66 @@ notify/multi-get traffic dominates.  Reported rows:
 Run directly (``python -m benchmarks.microbench``) or via
 ``python -m benchmarks.run`` which includes these rows in the CSV.
 
-CLI (the CI bench-smoke job uses all of these):
+CLI (the CI bench-smoke and multiprocess jobs use all of these):
 
-  python -m benchmarks.microbench --quick --json bench.json \\
+  python -m benchmarks.microbench --quick --json BENCH_control_plane.json \\
       --floor-tasks-per-s 150 --floor-shuffle-ratio 2.0
+  python -m benchmarks.microbench --quick --backend file \\
+      --json BENCH_control_plane_file.json --floor-tasks-per-s 25
 
 ``--quick`` shrinks budgets for CI, ``--json`` writes the rows as a JSON
-artifact, ``--floor-tasks-per-s`` exits non-zero if the 4-worker map
-throughput regresses below the floor (guarding the batched data plane's
-speedup; PR 1 baseline was ~282 tasks/s on 4 warm workers), and
-``--floor-shuffle-ratio`` exits non-zero if the batched write plane stops
-beating the looped path by the given request-count factor.
+artifact (CI uploads it as ``BENCH_control_plane*.json`` so the perf
+trajectory is tracked per commit), ``--floor-tasks-per-s`` exits non-zero
+if the 4-worker map throughput regresses below the floor (any event-loss
+stall — a missed cross-process wake falling back to timeouts — collapses
+throughput and trips this), and ``--floor-shuffle-ratio`` exits non-zero if
+the batched write plane stops beating the looped path by the given factor.
+``--backend file`` runs the map benches over ``FileKVStore`` +
+``FileBackend`` — every queue pop, lease CAS, and result publish crosses
+the filesystem substrate, exercising the cross-process plane end to end
+(the floor is lower: fsync'd puts and flock'd KV transactions dominate).
 """
 
 from __future__ import annotations
 
+import os
 import time
 
 
-def _throughput(rep, num_workers: int, n_tasks: int) -> None:
+def _make_stores(backend: str, workdir: str = None):
+    """Storage pair for a bench: in-memory (default) or the cross-process
+    file substrate (FileKVStore + FileBackend over ``workdir``)."""
+    from repro.storage import FileBackend, FileKVStore, KVStore, ObjectStore
+
+    if backend == "file":
+        return (
+            ObjectStore(backend=FileBackend(os.path.join(workdir, "obj"))),
+            FileKVStore(os.path.join(workdir, "kv"), num_shards=2),
+        )
+    return ObjectStore(), KVStore(num_shards=2)
+
+
+def _throughput(rep, num_workers: int, n_tasks: int, backend: str = "memory") -> None:
+    import tempfile
+
     from repro.core import WrenExecutor, get_all
 
-    with WrenExecutor(num_workers=num_workers) as wex:
-        wex.map_get(lambda x: x, [0], timeout_s=60)  # warm containers
-        t0 = time.perf_counter()
-        futs = wex.map(lambda x: x, list(range(n_tasks)))
-        get_all(futs, timeout_s=120)
-        dt = time.perf_counter() - t0
-        rep.row(
-            f"runtime/map_throughput_w{num_workers}",
-            dt / n_tasks * 1e6,
-            tasks_per_s=round(n_tasks / dt, 1),
-            tasks=n_tasks,
-            wall_s=round(dt, 3),
-        )
+    with tempfile.TemporaryDirectory() as workdir:
+        store, kv = _make_stores(backend, workdir)
+        suffix = "_file" if backend == "file" else ""
+        with WrenExecutor(store=store, kv=kv, num_workers=num_workers) as wex:
+            wex.map_get(lambda x: x, [0], timeout_s=60)  # warm containers
+            t0 = time.perf_counter()
+            futs = wex.map(lambda x: x, list(range(n_tasks)))
+            get_all(futs, timeout_s=120)
+            dt = time.perf_counter() - t0
+            rep.row(
+                f"runtime/map_throughput{suffix}_w{num_workers}",
+                dt / n_tasks * 1e6,
+                tasks_per_s=round(n_tasks / dt, 1),
+                tasks=n_tasks,
+                wall_s=round(dt, 3),
+            )
 
 
 def _job_completion(rep, num_workers: int, n_tasks: int, reps: int = 3) -> None:
@@ -79,19 +113,20 @@ def _job_completion(rep, num_workers: int, n_tasks: int, reps: int = 3) -> None:
         )
 
 
-def _speculation(rep, factor: float, n_tasks: int) -> None:
-    """One straggler worker (heavy injected slowdown) against a map; lower
-    ``speculation_factor`` duplicates it sooner.  Reports wall time and how
-    many duplicates were enqueued."""
+def _speculation(rep, cfg_kwargs: dict, row_name: str, n_tasks: int) -> None:
+    """One straggler worker (heavy injected slowdown) against a map, under
+    the given speculation config.  Reports wall time and how many
+    duplicates were enqueued — the tuning curve for both the legacy
+    ``factor × median`` rule and the quantile-adaptive ``k × q`` rule."""
     from repro.core import FaultPlan, SchedulerConfig, WrenExecutor, get_all
 
     cfg = SchedulerConfig(
         lease_timeout_s=5.0,
-        speculation_factor=factor,
         min_completed_for_speculation=3,
-        # The sweep tunes the *factor*: drop the straggler-age floor so the
-        # factor (× a no-op median) is what decides, not the safety clamp.
+        # The sweep tunes the *rule*: drop the straggler-age floor so the
+        # rule (over a no-op distribution) is what decides, not the clamp.
         min_speculation_age_s=0.005,
+        **cfg_kwargs,
     )
     fp = FaultPlan(slowdown={"w0000": 400.0})
     wex = WrenExecutor(num_workers=4, scheduler_config=cfg, fault_plan=fp, seed=0)
@@ -101,7 +136,7 @@ def _speculation(rep, factor: float, n_tasks: int) -> None:
         get_all(wex.map(lambda x: x, list(range(n_tasks))), timeout_s=120)
         dt = time.perf_counter() - t0
         rep.row(
-            f"runtime/speculation_f{factor:g}",
+            row_name,
             dt * 1e6,
             wall_s=round(dt, 4),
             duplicates=len(wex.scheduler._speculated),
@@ -109,6 +144,47 @@ def _speculation(rep, factor: float, n_tasks: int) -> None:
         )
     finally:
         wex.shutdown()
+
+
+def _multi_driver(rep, total_workers: int, n_tasks: int) -> None:
+    """Throughput of one map through 1 driver vs. 2 stateless scheduler
+    handles sharing the KV (same total worker count): the two-driver row's
+    ``overhead_pct`` is the cost of the fenced, shared control plane —
+    epoch CAS traffic plus a second reap/speculate loop."""
+    from repro.core import WrenExecutor, get_all
+    from repro.storage import KVStore, ObjectStore
+
+    walls = {}
+    for n_drivers in (1, 2):
+        store = ObjectStore()
+        kv = KVStore(num_shards=2)
+        per = total_workers // n_drivers
+        drivers = [
+            WrenExecutor(store=store, kv=kv, num_workers=per, seed=i)
+            for i in range(n_drivers)
+        ]
+        try:
+            for d in drivers:
+                d.map_get(lambda x: x, [0], timeout_s=60)  # warm all pools
+            t0 = time.perf_counter()
+            futs = drivers[0].map(lambda x: x, list(range(n_tasks)))
+            get_all(futs, timeout_s=120)
+            dt = time.perf_counter() - t0
+        finally:
+            for d in drivers:
+                d.shutdown()
+        walls[n_drivers] = dt
+        extra = {}
+        if n_drivers > 1:
+            extra["overhead_pct"] = round((dt / walls[1] - 1.0) * 100.0, 1)
+        rep.row(
+            f"runtime/multi_driver_d{n_drivers}_w{per}",
+            dt / n_tasks * 1e6,
+            tasks_per_s=round(n_tasks / dt, 1),
+            tasks=n_tasks,
+            wall_s=round(dt, 3),
+            **extra,
+        )
 
 
 def _shuffle_requests_for(rep, store_kind: str, n_maps: int, n_parts: int) -> None:
@@ -186,17 +262,45 @@ def map_throughput(rep, quick: bool = False) -> None:
         _throughput(rep, num_workers, n_tasks)
 
 
+def map_throughput_file(rep, quick: bool = False) -> None:
+    """Map throughput over the cross-process substrate (FileKVStore +
+    FileBackend): every control-plane op is a flock'd file transaction and
+    every result publish an fsync'd put, so this is the floor-gated canary
+    for event loss in the watcher plane — a missed wake turns into timeout
+    waits and collapses tasks/s."""
+    plan = [(4, 64)] if quick else [(4, 128)]
+    for num_workers, n_tasks in plan:
+        _throughput(rep, num_workers, n_tasks, backend="file")
+
+
 def job_completion(rep, quick: bool = False) -> None:
     _job_completion(rep, 8, 32, reps=1 if quick else 3)
 
 
 def speculation_sweep(rep, quick: bool = False) -> None:
+    # Legacy static rule (factor × median) …
     factors = [3.0] if quick else [1.5, 3.0, 6.0]
     for f in factors:
-        _speculation(rep, f, n_tasks=24)
+        _speculation(
+            rep, {"speculation_factor": f}, f"runtime/speculation_f{f:g}", n_tasks=24
+        )
+    # … vs. the quantile-adaptive rule (k × q over the job's distribution).
+    qk = [(0.95, 1.5)] if quick else [(0.9, 1.0), (0.95, 1.5), (0.99, 3.0)]
+    for q, k in qk:
+        _speculation(
+            rep,
+            {"speculation_quantile": q, "speculation_k": k},
+            f"runtime/speculation_q{q:g}_k{k:g}",
+            n_tasks=24,
+        )
 
 
-ALL = [map_throughput, job_completion, speculation_sweep, shuffle_requests]
+def multi_driver(rep, quick: bool = False) -> None:
+    _multi_driver(rep, total_workers=4, n_tasks=100 if quick else 200)
+
+
+ALL = [map_throughput, job_completion, speculation_sweep, multi_driver, shuffle_requests]
+FILE_BACKEND_BENCHES = [map_throughput_file]
 
 
 def main(argv=None) -> int:
@@ -208,6 +312,13 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="small CI budget")
     ap.add_argument("--json", metavar="PATH", help="write rows as JSON")
+    ap.add_argument(
+        "--backend",
+        choices=["memory", "file"],
+        default="memory",
+        help="'file' runs the map benches over FileKVStore+FileBackend "
+        "(the cross-process substrate) instead of the in-memory stores",
+    )
     ap.add_argument(
         "--floor-tasks-per-s",
         type=float,
@@ -224,7 +335,7 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     rep = Reporter()
-    for bench in ALL:
+    for bench in FILE_BACKEND_BENCHES if args.backend == "file" else ALL:
         bench(rep, quick=args.quick)
 
     if args.json:
@@ -236,7 +347,7 @@ def main(argv=None) -> int:
         tput = [
             r["tasks_per_s"]
             for r in rep.rows
-            if r["name"] == "runtime/map_throughput_w4"
+            if r["name"].startswith("runtime/map_throughput") and r["name"].endswith("_w4")
         ]
         if not tput or max(tput) < args.floor_tasks_per_s:
             print(

@@ -18,6 +18,14 @@ Workers heartbeat their lease from a side thread while the user function
 runs, so long tasks are not falsely reaped, but a *dead* worker stops
 heartbeating and is.
 
+Epoch fencing threads through here: a leased ``TaskSpec`` carries the
+attempt's fencing token (``task.epoch``), heartbeats are epoch-checked
+extensions, and ``_execute`` hands ``run_task`` a fence callback
+(``Scheduler.owns_lease``) checked immediately before the result publish —
+a zombie container (reaped as dead, or superseded by a speculative
+duplicate's lease) finishes its work but cannot publish over the owning
+attempt's result or extend a lease it no longer holds.
+
 Event-driven dispatch: workers do not poll the queue.  ``Worker.run``
 blocks in ``Scheduler.lease_batch`` on the *queue shard's* KV watch
 condition and is woken by any producer's ``rpush`` (submit, reap requeue,
@@ -79,8 +87,12 @@ class FaultPlan:
 
 @dataclass
 class WorkerStats:
-    tasks_ok: int = 0
+    tasks_ok: int = 0  # attempts whose result is the task's visible one
     tasks_failed: int = 0
+    # Attempts that ran to completion but whose result was fenced or beaten
+    # to the publish by a duplicate — the price of speculation/retries.
+    # Invariant: Σ tasks_ok across workers == number of visible results.
+    tasks_superseded: int = 0
     cold_starts: int = 0
     vtime_busy_s: float = 0.0
 
@@ -222,6 +234,10 @@ class Worker(threading.Thread):
                 worker=self.worker_id,
                 setup_vtime=setup_vtime,
                 compute_time_fn=ct,
+                # Fence: publish only while this attempt's epoch still owns
+                # the lease (zombie publishes are suppressed; scheduler.py
+                # documents the protocol).
+                fence=lambda: self.scheduler.owns_lease(task),
             )
             vtotal = sum(result.phases.values())
             try:
@@ -231,10 +247,12 @@ class Worker(threading.Thread):
                 # record but keep the published result (it is still correct —
                 # the limit models billing, not correctness).
                 result.phases["over_limit"] = vtotal
-            if result.success:
-                self.stats.tasks_ok += 1
-            else:
+            if not result.success:
                 self.stats.tasks_failed += 1
+            elif result.fenced:
+                self.stats.tasks_superseded += 1
+            else:
+                self.stats.tasks_ok += 1
             self.stats.vtime_busy_s += vtotal
         finally:
             hb_stop.set()
@@ -286,7 +304,15 @@ class WorkerPool:
     def scale_to(self, n: int) -> None:
         """Elasticity: spin containers up or down; safe mid-job because state
         is storage-resident and tasks are idempotent.  Converges to exactly
-        ``n`` runnable containers even across repeated up/down calls."""
+        ``n`` runnable containers even across repeated up/down calls.
+
+        Scale-down is a *graceful* stop, not a kill: a worker that leased a
+        batch between the ``runnable_workers()`` snapshot and its stop flag
+        hands every unstarted lease straight back (``Scheduler.release``,
+        which burns the released epoch), so scale-down returns queue depth
+        immediately instead of stranding leases until expiry — the reaper
+        is for *lost* instances (``kill_worker``/fault injection), not for
+        deliberate elasticity."""
         with self._lock:
             runnable = self.runnable_workers()
             while len(runnable) < n:
@@ -304,9 +330,9 @@ class WorkerPool:
                 self.workers.append(w)
                 runnable.append(w)
                 w.start()
-            # scale down: kill newest runnable first
+            # scale down: stop newest runnable first (graceful — releases)
             for w in reversed(runnable[n:]):
-                w.kill()
+                w.stop()
 
     def kill_worker(self, idx: int) -> None:
         """Kill the idx-th *runnable* worker (indexing over already-dead

@@ -20,6 +20,7 @@ per-phase virtual timings, mirroring the paper's Table 2 phase breakdown.
 
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import pickle
 import time
@@ -52,7 +53,16 @@ class FunctionSpec:
 
 @dataclass(frozen=True)
 class TaskSpec:
-    """One stateless invocation."""
+    """One stateless invocation.
+
+    ``epoch`` is the *fencing token* of the attempt holding this spec: 0 in
+    the queue (no attempt owns it), assigned from the monotonically
+    increasing ``sched/epoch/{task}`` counter at lease time.  Every
+    authoritative mutation the attempt makes downstream — heartbeat, result
+    publish, complete, release — is checked against the lease record's
+    epoch, so a stale attempt (reaped as dead, preempted, or raced by a
+    speculative duplicate) is rejected instead of clobbering the current
+    attempt's state."""
 
     task_id: str
     job_id: str
@@ -61,6 +71,7 @@ class TaskSpec:
     input_key: str
     result_key: str
     attempt: int = 0  # bumped on retry; same result_key (idempotent)
+    epoch: int = 0  # fencing token of the owning attempt; 0 = unleased
 
     @staticmethod
     def make(
@@ -87,7 +98,16 @@ class TaskSpec:
             input_key=self.input_key,
             result_key=self.result_key,
             attempt=self.attempt + 1,
+            epoch=self.epoch,
         )
+
+    def with_epoch(self, epoch: int) -> "TaskSpec":
+        """The leased form of this spec, carrying its fencing token."""
+        return dataclasses.replace(self, epoch=epoch)
+
+    def unleased(self) -> "TaskSpec":
+        """The queue form of this spec: no owner, epoch 0."""
+        return dataclasses.replace(self, epoch=0) if self.epoch else self
 
 
 @dataclass
@@ -99,6 +119,10 @@ class TaskResult:
     phases: Dict[str, float] = field(default_factory=dict)  # virtual seconds
     worker: str = "-"
     attempt: int = 0
+    # True when this attempt's result is not the visible one: its epoch was
+    # stale at publish time (write suppressed — see TaskSpec.epoch) or a
+    # concurrent duplicate won the if_absent publish race first.
+    fenced: bool = False
 
 
 def stage_input(store: ObjectStore, job_id: str, value: Any, *, worker: str = "-") -> str:
@@ -131,6 +155,7 @@ def run_task(
     worker: str = "-",
     setup_vtime: float = 0.0,
     compute_time_fn: Optional[Callable[[float], float]] = None,
+    fence: Optional[Callable[[], bool]] = None,
 ) -> TaskResult:
     """The generic container entry point (the single registered Lambda).
 
@@ -138,6 +163,14 @@ def run_task(
     atomically at ``task.result_key``.  A concurrent duplicate (speculative
     copy or lease-expired retry) publishing first simply wins; this copy's
     publish becomes a no-op — the paper's exactly-once-visibility contract.
+
+    ``fence`` is the epoch check: called immediately before the result
+    publish, and if it returns False the publish is suppressed and the
+    result is marked ``fenced`` — a zombie attempt (lease reaped or
+    superseded by a speculative duplicate's lease) cannot clobber the
+    current attempt's result.  The fence narrows, rather than replaces, the
+    ``if_absent`` first-writer-wins guard: results are deterministic, so
+    the residual check-to-publish window is benign.
 
     ``compute_time_fn`` maps real compute seconds to virtual seconds (the
     Lambda-core calibration used by the paper-figure benchmarks).
@@ -182,7 +215,10 @@ def run_task(
                 worker=worker,
                 attempt=task.attempt,
             )
-            store.publish_result(task.result_key, result, worker=worker)
+            if fence is not None and not fence():
+                result.fenced = True  # stale epoch: suppress the publish
+            elif not store.publish_result(task.result_key, result, worker=worker):
+                result.fenced = True  # a concurrent duplicate published first
         return result
     except Exception:  # noqa: BLE001 — a task may raise anything
         result = TaskResult(

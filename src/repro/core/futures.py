@@ -7,10 +7,13 @@ and work across processes (anyone with the store handle can wait).
 
 Event-driven waiting: ``result()``/``wait()`` block on the store's key-watch
 condition (see ``ObjectStore.notify_put``) instead of sleep-polling.  A
-publish through the same store handle wakes waiters immediately; only
-cross-process backends (``FileBackend``) keep a fallback re-check tick,
-since an external writer never notifies this process.  The ``poll_s``
-parameters are retained for backward compatibility and override that tick.
+publish through the same store handle wakes waiters immediately, and a
+publish from *another process* over a shared ``FileBackend`` is relayed by
+the backend's watch thread — no built-in backend needs a fallback tick
+anymore.  The ``poll_s`` parameters are retained for backward compatibility
+and force one (counted in ``ObjectStore.fallback_tick_waits``); waiting
+over *multiple distinct backends* in one ``wait`` call is the only other
+tick user left.
 
 Batched resolution: ``get_all`` waits for every result key, then fetches
 all uncached results in a *single* ``ObjectStore.get_many`` — one amortized
@@ -119,7 +122,11 @@ def wait(
             )
         remaining = deadline - now
         if store is not None:
-            store.wait_put(seq, remaining if tick is None else min(tick, remaining))
+            if tick is None:
+                store.wait_put(seq, remaining)
+            else:
+                store.fallback_tick_waits += 1
+                store.wait_put(seq, min(tick, remaining))
         else:
             time.sleep(min(tick or 0.05, remaining))
 

@@ -1,72 +1,88 @@
-"""Global scheduler: queue, leases, retries, straggler speculation.
+"""Stateless scheduler handle: queue, fenced epoch leases, retries,
+quantile-adaptive straggler speculation — all authoritative state in the KV.
 
 The paper's architecture (Fig 1) has a *global scheduler* dispatching
-stateless functions to containers.  Scheduling state itself lives in the
-low-latency KV store (we eat our own dogfood: the scheduler is a KV-store
-client, not a stateful server — it can be restarted at any time and recover
-from storage, the same property the paper demands of workers).
+stateless functions to containers.  We take the paper at its word: the
+scheduler is not a stateful server but a **handle over the KV store** — any
+number of ``Scheduler`` objects (in one process or, over
+``FileKVStore``/``FileBackend``, in many) may submit, lease, reap,
+speculate, and GC the *same* job concurrently, and any of them can be
+restarted at any time and recover from storage, the same property the
+paper demands of workers.
 
-Fault tolerance model (paper §3.1):
-  * a worker takes a *lease* on a task (KV ``setnx``) with an expiry;
-  * while running it heartbeats (extends the lease);
-  * if the worker dies, the lease expires and ``reap()`` re-enqueues the
-    task; since results publish atomically, the retry is idempotent;
-  * *speculation*: tasks running much longer than the completed-task median
-    get a duplicate enqueued (the paper observed S3 stragglers in its word
-    count; speculative copies are PyWren-safe because of first-writer-wins).
+Epoch-fencing protocol (the exactly-once-per-attempt contract):
+  * ``sched/epoch/{task}`` — a monotonically increasing counter (KV
+    ``incr``), the *fencing-token generator*.  Each lease acquisition draws
+    the next epoch; a release-invalidated epoch is also burned here.
+  * ``sched/lease/{task}`` — the **single source of truth** for the current
+    attempt: ``{worker, epoch, expires, started, attempt, spec}``.  The
+    spec rides inside the record so *any* handle (including one that never
+    saw the submit) can requeue or speculate the task.
+  * every authoritative mutation is an epoch-compared ``eval`` (Redis
+    server-side script analogue) on the lease record, atomic under the
+    shard lock — machine-wide for ``FileKVStore``:
+      - ``heartbeat`` extends ``expires`` only if the caller's epoch is
+        current;
+      - ``complete``/``release`` delete the record only if the epoch is
+        current (compare-then-``DELETE`` in one eval) — a stale attempt's
+        complete pushes no duration sample and frees nothing;
+      - ``reap`` re-checks both epoch *and* expiry inside the eval, so a
+        heartbeat landing between the scheduler's read and its delete
+        keeps the lease alive;
+      - the worker's **result publish** is fenced too: ``run_task`` calls
+        back into :meth:`Scheduler.owns_lease` immediately before
+        ``publish_result``, so a zombie (presumed-dead worker whose lease
+        was reaped, or a straggler superseded by a speculative duplicate's
+        lease) cannot clobber the owning attempt's result.
+    Two handles racing the same transition: exactly one eval wins; the
+    loser observes a mismatch and does nothing.  That is what makes
+    concurrent ``reap``/``speculate`` from N drivers safe.
+  * job state is KV-resident as well: ``sched/jobtasks/{job}`` (task-id
+    membership, written with the submit push), ``sched/specmark/{task}``
+    (``setnx`` speculation marks — two drivers cannot double-duplicate),
+    and ``sched/finished/{job}`` (GC tombstones, written *before* the
+    state deletes so a concurrent lease in any process observes them).
 
-Notification contract (event-driven control plane):
-  * **per-shard queue watch** — workers block in ``lease_batch`` on the
-    watch condition of the KV shard holding the queue key
-    (``KVStore.wait_key``): every producer's push (``submit``/
-    ``submit_many``, ``reap`` requeues, ``speculate`` duplicates,
-    ``release``) notifies that shard as part of the write itself, so *any*
-    producer sharing the KV — including a second scheduler handle — wakes
-    waiting workers, not just this object.  ``submit_many`` is pipelined
-    (``KVStore.rpush_many``): an N-task submit is one round-trip and one
-    coalesced wakeup on the queue's shard, not N.  Queue length is re-checked
-    between the shard-sequence snapshot and the wait, so an in-process
-    push can never be missed.  A worker being stopped is woken via
-    ``wake_workers()`` (a virtual shard touch) and re-checks its stop
-    predicate.
-  * **activity event** — ``submit*``/``complete``/``release`` (and any
-    requeue) set ``_activity_evt`` so the executor's control loop wakes
-    immediately on job progress.  Between events the control loop sleeps
-    until ``next_wakeup_s()``, which reads the *lease-expiry heap*: the
-    earliest outstanding expiry bounds the sleep (capped at heartbeat
-    granularity so straggler detection still runs), and a long idle tick
-    applies when nothing is queued or leased.
-  * wakeup guarantee: notifications are in-process only.  A scheduler
-    restarted against the same KV store recovers from storage as before —
-    the fallback tick, not the condition, is the cross-process safety net.
+Local heaps are **rebuildable caches**, never authority: ``_try_lease``
+pushes ``(expires, task_id)`` / ``(started, task_id)`` hints, and a
+time-gated ``kv.scan("sched/lease/")`` (``_maybe_refresh_index``, at most
+once per lease timeout) folds in leases granted through *other* handles —
+so if a peer driver dies, this one's reaper picks up its expired leases.
+Every hint is lazily re-validated against the KV record before acting
+(extended leases are re-pushed with their real expiry; completed ones are
+dropped), exactly as in PR 2 — the refactor demotes the heaps from
+"indexes of my state" to "hints about shared state".
 
-Lease indexing (heap, lazy deletion):
-  * ``_try_lease`` pushes ``(expires, task_id)`` on the expiry heap and
-    ``(started, task_id)`` on the per-job start heap.  The KV lease record
-    stays the *source of truth*; heap entries are hints.  ``reap`` pops
-    only entries whose hinted expiry has passed, re-validates against the
-    record (a heartbeat may have extended it — re-push with the real
-    expiry; the task may have completed — drop), and requeues genuinely
-    expired leases: O(log n) per expiry instead of an O(n) scan of every
-    spec per control pass.  ``speculate`` pops per-job start-heap entries
-    older than the straggler threshold the same way.
+Straggler speculation (paper §3.1) is now **quantile-adaptive** by
+default: a task is duplicated when its elapsed time exceeds
+``max(min_speculation_age_s, speculation_k × q(speculation_quantile))``
+over its job's completed-duration distribution (``sched/durations/{job}``)
+— the tail quantile tracks the job's own spread instead of a static
+multiple of the median, so tight distributions speculate aggressively and
+naturally long-tailed ones don't thrash.  Setting the legacy
+``speculation_factor`` restores the old ``factor × median`` rule
+(``benchmarks/microbench.py speculation_sweep`` measures both).
 
-Per-job GC: completed jobs' specs, attempt counters, lease records,
-duration samples, and result/input objects otherwise accumulate for the
-life of the executor.  ``finish_job(job_id)`` frees all of them; stale
-heap entries for the job are discarded lazily on their next pop.
+Notification contract (event-driven control plane) is unchanged from PR 2:
+per-shard queue watch for ``lease_batch`` (any producer's ``rpush``
+through the shared KV wakes waiting workers — now including producers in
+other *processes* via ``FileKVStore``'s watch thread), an in-process
+activity event for the control loop, and a deadline-based
+``next_wakeup_s`` fallback tick bounded by the earliest hinted lease
+expiry.
 """
 
 from __future__ import annotations
 
 import heapq
+import math
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
-from repro.storage import KVStore, ObjectStore
+from repro.storage import DELETE, KVStore, ObjectStore
 
 from .functions import TaskSpec
 
@@ -74,38 +90,75 @@ _Q = "sched/queue"
 _LEASE = "sched/lease/"
 _ATTEMPTS = "sched/attempts/"
 _DURATION = "sched/durations/"  # per-job list: sched/durations/<job_id>
+_EPOCH = "sched/epoch/"  # fencing-token generator: sched/epoch/<task_id>
+_SPECMARK = "sched/specmark/"  # speculation dedupe marks (setnx)
+_FINISHED = "sched/finished/"  # per-job GC tombstones
+_JOBTASKS = "sched/jobtasks/"  # per-job task-id membership list
 
 # Cap for an untimed lease wait; workers are woken by writes/wake_workers,
 # so this only bounds how long a fully idle, never-notified wait can hold.
 _UNBOUNDED_WAIT_S = 3600.0
 
-# Finished-job tombstones kept before FIFO eviction (see Scheduler.__init__).
+# Finished-job tombstones cached locally before FIFO eviction (the KV
+# tombstone stays authoritative; the local set only saves the exists probe).
 _MAX_TOMBSTONES = 1024
+
+
+def quantile(samples: List[float], q: float) -> float:
+    """Upper empirical quantile (nearest-rank): smallest sample with at
+    least ``q`` of the distribution at or below it."""
+    s = sorted(samples)
+    rank = min(len(s) - 1, max(0, math.ceil(q * len(s)) - 1))
+    return s[rank]
 
 
 @dataclass
 class SchedulerConfig:
+    """Knobs for leases, retries, and straggler speculation.
+
+    Speculation threshold (elapsed time before a running task gets a
+    duplicate enqueued):
+
+      * default (``speculation_factor=None``): the quantile rule
+        ``max(min_speculation_age_s, speculation_k × q(speculation_quantile))``
+        over the job's completed durations — adaptive to each job's own
+        distribution;
+      * legacy (``speculation_factor=f``): ``max(min_age, f × median)``,
+        the static PR-1/2 rule, kept for comparability and for the
+        microbench sweep.
+
+    ``min_speculation_age_s`` floors both rules: with no-op tasks the
+    distribution is microseconds wide and a millisecond-scale threshold
+    would duplicate any task that merely hit a scheduler blip.
+    """
+
     lease_timeout_s: float = 1.0
     max_attempts: int = 4
-    # Straggler knob (paper §3.1 / our microbench sweep): duplicate tasks
-    # running longer than ``speculation_factor * median completed duration``.
-    # Lower = more aggressive duplicates (costs work, hides stragglers
-    # sooner); higher = near-zero duplicate work but long tails survive.
-    # ``benchmarks/microbench.py speculation_sweep`` measures completion
-    # time across factors against an injected straggler distribution.
-    speculation_factor: float = 3.0
+    speculation_factor: Optional[float] = None
+    speculation_quantile: float = 0.95
+    speculation_k: float = 1.5
     min_completed_for_speculation: int = 5
-    # Floor on the straggler threshold: with no-op tasks the median duration
-    # is microseconds, and a 1 ms-scale floor speculates on any task that
-    # merely hit a scheduler blip (flaky duplicates under CI load).  A task
-    # must run at least this long before it can be called a straggler;
-    # duplicating anything quicker costs more than it hides.
     min_speculation_age_s: float = 0.05
     heartbeat_interval_s: float = 0.2
     idle_tick_s: float = 0.5  # control-loop fallback when no work in flight
 
+    def straggler_threshold_s(self, durations: List[float]) -> float:
+        if self.speculation_factor is not None:
+            base = self.speculation_factor * quantile(durations, 0.5)
+        else:
+            base = self.speculation_k * quantile(durations, self.speculation_quantile)
+        return max(base, self.min_speculation_age_s)
+
 
 class Scheduler:
+    """A stateless handle over shared scheduler state in the KV.
+
+    Construct as many as you like over the same ``kv``/``store`` pair —
+    including in other processes via ``FileKVStore``/``FileBackend``.  All
+    mutating operations are epoch-fenced KV transactions (module
+    docstring), so handles cannot corrupt each other; the in-memory fields
+    below are caches and advisory counters only."""
+
     def __init__(
         self,
         kv: KVStore,
@@ -116,32 +169,25 @@ class Scheduler:
         self.store = store
         self.config = config or SchedulerConfig()
         self._lock = threading.Lock()
-        # task_id -> spec, for requeue on reap (specs are tiny; the heavy
-        # payloads live behind input/func keys in the object store).
+        # Spec cache (authoritative copy rides in queue entries and lease
+        # records): serves pending() and avoids KV reads on requeue paths.
         self._specs: Dict[str, TaskSpec] = {}
-        self._speculated: set = set()
-        # job_id -> task_ids, so finish_job frees a job without scanning.
-        self._jobs: Dict[str, Set[str]] = {}
-        # Tombstones: jobs already GC'd.  A speculative duplicate or reaped
-        # retry of a finished job may still sit in the queue; leasing it
-        # would resurrect attempts/lease/duration state finish_job just
-        # freed (and fail on the deleted input anyway), so _try_lease drops
-        # tasks of tombstoned jobs instead.  Kept in-memory only: a *fresh*
-        # scheduler over the same KV must still recover queued work.
-        # Bounded (FIFO eviction at _MAX_TOMBSTONES): a duplicate outliving
-        # that many subsequent jobs has long since drained from the queue,
-        # and an unbounded set would just re-create per-job accumulation.
+        self._speculated: set = set()  # local mirror of sched/specmark/*
+        self._jobs: Dict[str, Set[str]] = {}  # cache of sched/jobtasks/*
+        # Local mirror of sched/finished/* tombstones (bounded FIFO): saves
+        # the per-lease KV probe for jobs this handle already saw finish.
         self._finished_jobs: Set[str] = set()
         self._finished_order: Deque[str] = deque()
-        # Lease indexes (lazy heaps; see module docstring).  Guarded by
+        # Lease-index caches (lazy heaps; see module docstring).  Guarded by
         # self._lock.  KV lease records remain the source of truth.
         self._lease_heap: List[Tuple[float, str]] = []  # (expires, task_id)
-        self._start_heaps: Dict[str, List[Tuple[float, str]]] = {}  # job -> (started, task_id)
+        self._start_heaps: Dict[str, List[Tuple[float, str]]] = {}
+        self._hinted: Set[str] = set()  # task_ids with a live expiry hint
+        self._last_index_refresh = 0.0
         # Event plane (in-process; see module docstring for the contract).
         self._activity_evt = threading.Event()
-        # Advisory count of outstanding leases — drives the control loop's
-        # fallback tick only, never correctness (kv lease records stay the
-        # source of truth and survive a scheduler restart).
+        # Advisory count of leases granted through *this* handle — drives
+        # the control loop's fallback tick only, never correctness.
         self._active_leases = 0
 
     # ---- event plane ----------------------------------------------------
@@ -168,20 +214,20 @@ class Scheduler:
 
     def next_wakeup_s(self) -> float:
         """Deadline-based fallback tick for the control loop.  While leases
-        are outstanding, sleep until the earliest hinted expiry on the lease
-        heap (capped at heartbeat granularity so straggler detection still
-        runs); while work is merely queued, heartbeat granularity; otherwise
-        idle long.  O(1): the heap top is the earliest deadline."""
+        are outstanding — this handle's or, via index hints, any handle's —
+        sleep until the earliest hinted expiry (capped at heartbeat
+        granularity so straggler detection still runs); while work is merely
+        queued, heartbeat granularity; otherwise idle long."""
         now = time.monotonic()
         with self._lock:
-            busy = self._active_leases > 0
+            busy = self._active_leases > 0 or bool(self._lease_heap)
             next_expiry = self._lease_heap[0][0] if self._lease_heap else None
         if busy or self.queue_depth() > 0:
             tick = min(
                 self.config.heartbeat_interval_s,
                 max(self.config.lease_timeout_s / 4.0, 0.01),
             )
-            if busy and next_expiry is not None:
+            if next_expiry is not None:
                 tick = min(tick, max(next_expiry - now, 0.01))
             return tick
         return self.config.idle_tick_s
@@ -194,52 +240,137 @@ class Scheduler:
                 self._jobs.setdefault(t.job_id, set()).add(t.task_id)
 
     def submit(self, task: TaskSpec) -> None:
-        self._index_tasks([task])
-        self.kv.rpush(_Q, task, worker="scheduler")
-        self._signal_work()
+        self.submit_many([task])
 
     def submit_many(self, tasks: List[TaskSpec]) -> None:
-        """Batch-submit: the whole task list lands on the queue in one
-        pipelined push (one round-trip, one wakeup on the queue's shard —
-        ``KVStore.rpush_many`` coalesces the shard notify, so an N-task
-        submit wakes blocked workers once, not N times)."""
+        """Batch-submit: the task list and the per-job membership index
+        land in one pipelined push (``KVStore.rpush_many`` — one round-trip
+        and one coalesced wakeup per shard touched).  Membership in
+        ``sched/jobtasks/{job}`` is what lets *any* handle GC the job."""
         if not tasks:
             return
         self._index_tasks(tasks)
-        self.kv.rpush_many({_Q: list(tasks)}, worker="scheduler")
+        pushes: Dict[str, List] = {_Q: [t.unleased() for t in tasks]}
+        for t in tasks:
+            pushes.setdefault(_JOBTASKS + t.job_id, []).append(t.task_id)
+        self.kv.rpush_many(pushes, worker="scheduler")
         self._signal_work()
+
+    # ---- fenced lease transactions --------------------------------------
+    def _job_finished(self, job_id: str) -> bool:
+        """Has any handle GC'd this job?  Local tombstone cache first, then
+        the authoritative KV tombstone (cached on hit)."""
+        with self._lock:
+            if job_id in self._finished_jobs:
+                return True
+        if self.kv.get(_FINISHED + job_id, worker="scheduler") is None:
+            return False
+        self._remember_finished(job_id)
+        return True
+
+    def _remember_finished(self, job_id: str) -> None:
+        with self._lock:
+            if job_id not in self._finished_jobs:
+                self._finished_jobs.add(job_id)
+                self._finished_order.append(job_id)
+                while len(self._finished_order) > _MAX_TOMBSTONES:
+                    self._finished_jobs.discard(self._finished_order.popleft())
+
+    def _fenced_drop_lease(
+        self,
+        task_id: str,
+        epoch: int,
+        worker: str,
+        *,
+        require_expired_before: Optional[float] = None,
+    ) -> Tuple[bool, Optional[dict]]:
+        """Atomically delete the lease record iff the caller's epoch is
+        current (and, for reaping, iff it is still expired at the given
+        instant — a heartbeat racing the reaper keeps the lease).  Epoch 0
+        is the legacy unfenced wildcard.  Returns (won, record)."""
+        out: Dict[str, dict] = {}
+
+        def _cas(cur):
+            if cur is None:
+                return DELETE  # nothing to drop (key untouched)
+            if epoch and int(cur.get("epoch", 0)) != epoch:
+                return cur  # fenced: a different attempt owns the task
+            if require_expired_before is not None and cur["expires"] > require_expired_before:
+                return cur  # extended in the meantime: not reapable
+            out["rec"] = cur
+            return DELETE
+
+        self.kv.eval(_LEASE + task_id, _cas, worker=worker)
+        rec = out.get("rec")
+        if rec is not None:
+            with self._lock:
+                self._active_leases = max(0, self._active_leases - 1)
+                self._hinted.discard(task_id)
+        return rec is not None, rec
+
+    def owns_lease(self, task: TaskSpec) -> bool:
+        """Is ``task.epoch`` still the current attempt?  This is the fence
+        ``run_task`` checks immediately before publishing a result."""
+        rec = self.kv.get(_LEASE + task.task_id, worker="scheduler")
+        if rec is None:
+            return False
+        return task.epoch == 0 or int(rec.get("epoch", 0)) == task.epoch
 
     # ---- worker protocol --------------------------------------------------
     def _try_lease(self, worker: str) -> Optional[TaskSpec]:
-        """Non-blocking: pop a task and take its lease, or None if empty."""
+        """Non-blocking: pop a task and take a fenced lease, or None."""
         while True:
             task: Optional[TaskSpec] = self.kv.lpop(_Q, worker=worker)
             if task is None:
                 return None
-            with self._lock:
-                if task.job_id in self._finished_jobs:
-                    continue  # stale duplicate of a GC'd job: drop, don't resurrect
+            if self._job_finished(task.job_id):
+                continue  # stale duplicate of a GC'd job: drop, don't resurrect
             if self.store.backend.exists(task.result_key):
                 continue  # already done (speculative duplicate became moot)
             attempts = self.kv.incr(_ATTEMPTS + task.task_id, 1, worker=worker)
             if attempts > self.config.max_attempts:
                 continue  # dropped; driver will surface missing-result error
+            epoch = int(self.kv.incr(_EPOCH + task.task_id, 1, worker=worker))
             now = time.monotonic()
             expires = now + self.config.lease_timeout_s
-            self.kv.set(
-                _LEASE + task.task_id,
-                {"worker": worker, "expires": expires,
-                 "started": now, "attempt": int(attempts) - 1},
-                worker=worker,
-            )
+            spec = task.unleased()
+            record = {
+                "worker": worker,
+                "epoch": epoch,
+                "expires": expires,
+                "started": now,
+                "attempt": int(attempts) - 1,
+                "spec": spec,
+            }
+
+            def _install(cur, record=record):
+                # Two handles can pop duplicate queue entries of one task
+                # concurrently; the higher epoch wins the record (it fenced
+                # the lower at the epoch counter), never the later writer.
+                if cur is not None and int(cur.get("epoch", 0)) > record["epoch"]:
+                    return cur
+                return record
+
+            installed = self.kv.eval(_LEASE + task.task_id, _install, worker=worker)
+            if int(installed.get("epoch", 0)) != epoch:
+                # Lost the duplicate race; that attempt owns it.  Undo the
+                # attempt charge — this pop executed nothing, and burned
+                # charges would let race losses push a task over
+                # max_attempts without max_attempts real executions.
+                self.kv.incr(_ATTEMPTS + task.task_id, -1, worker=worker)
+                continue
             with self._lock:
+                self._specs[task.task_id] = spec
+                self._jobs.setdefault(task.job_id, set()).add(task.task_id)
                 self._active_leases += 1
+                self._hinted.add(task.task_id)
                 heapq.heappush(self._lease_heap, (expires, task.task_id))
                 heapq.heappush(
                     self._start_heaps.setdefault(task.job_id, []),
                     (now, task.task_id),
                 )
-            return task.retry() if attempts > 1 else task
+            leased = task if attempts == 1 else task.retry()
+            return leased.with_epoch(epoch)
 
     def lease_next(self, worker: str) -> Optional[TaskSpec]:
         """Atomically pop a task and take its lease (non-blocking)."""
@@ -255,9 +386,9 @@ class Scheduler:
         """Lease up to ``max_n`` tasks, blocking on the *queue shard's* watch
         condition until at least one is available (or ``timeout_s`` elapses /
         ``should_stop`` returns True).  Any producer's ``rpush`` through the
-        shared KV wakes this — not just producers on this scheduler object.
-        Batching amortizes queue lock traffic; returning an empty list means
-        "no work" — the caller re-checks its own state and may call again."""
+        shared KV wakes this — other handles, and over ``FileKVStore`` other
+        *processes*.  Returning an empty list means "no work" — the caller
+        re-checks its own state and may call again."""
         deadline = None if timeout_s is None else time.monotonic() + timeout_s
         while True:
             batch: List[TaskSpec] = []
@@ -289,80 +420,163 @@ class Scheduler:
 
     def release(self, task: TaskSpec, worker: str) -> None:
         """Cleanly return a leased-but-unstarted task to the queue (graceful
-        worker shutdown).  Undoes the attempt charge so a preempted task is
+        worker shutdown / scale-down preemption).  Fenced: only the current
+        epoch holder can hand the task back, the released epoch is burned
+        (``sched/epoch`` incr) so any in-flight heartbeat or publish from it
+        is rejected, and the attempt charge is undone so a preempted task is
         not penalized toward ``max_attempts``."""
-        self._drop_lease_record(task.task_id, worker)
-        with self._lock:
-            finished = task.job_id in self._finished_jobs
-            spec = self._specs.get(task.task_id)
-        if finished:
+        won, rec = self._fenced_drop_lease(task.task_id, task.epoch, worker)
+        if not won:
+            return  # reaped/completed/superseded meanwhile: nothing to return
+        if self._job_finished(task.job_id):
             return  # job GC'd while leased: don't re-create attempts/queue state
+        self.kv.incr(_EPOCH + task.task_id, 1, worker=worker)  # invalidate
         self.kv.incr(_ATTEMPTS + task.task_id, -1, worker=worker)
-        self.kv.rpush(_Q, spec if spec is not None else task, worker=worker)
+        spec = rec.get("spec") if rec else None
+        self.kv.rpush(_Q, spec if spec is not None else task.unleased(), worker=worker)
         self._signal_work()
 
-    def heartbeat(self, task: TaskSpec, worker: str) -> None:
+    def heartbeat(self, task: TaskSpec, worker: str) -> bool:
+        """Extend the lease iff ``task.epoch`` is still current.  A zombie's
+        heartbeat (reaped, released, or superseded) is rejected — it cannot
+        keep a lease alive that another attempt now owns.  Returns whether
+        the extension applied."""
+        epoch = task.epoch
+        expires = time.monotonic() + self.config.lease_timeout_s
+        out: Dict[str, bool] = {}
+
         def _extend(cur):
             if cur is None:
-                return cur
+                return DELETE  # no record: leave the key absent
+            if epoch and int(cur.get("epoch", 0)) != epoch:
+                return cur  # fenced
             cur = dict(cur)
-            cur["expires"] = time.monotonic() + self.config.lease_timeout_s
+            cur["expires"] = expires
+            out["ok"] = True
             return cur
 
         self.kv.eval(_LEASE + task.task_id, _extend, worker=worker)
+        return bool(out.get("ok"))
 
-    def _drop_lease_record(self, task_id: str, worker: str) -> None:
-        """Delete a lease record, decrementing the advisory count only if a
-        record actually existed — a reaped lease may already be gone by the
-        time its (still running) worker completes, and double-decrementing
-        would make ``next_wakeup_s`` fall back to the idle tick too early."""
-        if self.kv.get(_LEASE + task_id, worker=worker) is not None:
-            self.kv.delete(_LEASE + task_id, worker=worker)
-            with self._lock:
-                self._active_leases = max(0, self._active_leases - 1)
-
-    def complete(self, task: TaskSpec, worker: str, duration_s: float) -> None:
-        self._drop_lease_record(task.task_id, worker)
-        # Durations are kept per job: stragglers are judged against their
-        # own job's distribution, and finish_job can free the samples.  An
-        # in-flight duplicate finishing after its job was GC'd must not
+    def complete(self, task: TaskSpec, worker: str, duration_s: float) -> bool:
+        """Fenced completion: drop the lease iff ``task.epoch`` is current.
+        Only the winning attempt's duration enters the job's straggler
+        distribution — a zombie's wall time (it sat reaped or superseded)
+        would poison the quantile.  Returns whether this attempt won."""
+        won, _rec = self._fenced_drop_lease(task.task_id, task.epoch, worker)
+        # An in-flight duplicate finishing after its job was GC'd must not
         # re-create state finish_job just deleted: skip the duration push
         # and scrub the result/.err objects its publish re-created (the
         # result key was absent again, so its if_absent publish won).
-        with self._lock:
-            finished = task.job_id in self._finished_jobs
-        if finished:
+        if self._job_finished(task.job_id):
             self.store.delete_prefix(task.result_key, worker=worker)
-        else:
+            won = False
+        elif won:
             self.kv.rpush(_DURATION + task.job_id, duration_s, worker=worker)
         self._activity_evt.set()
+        return won
+
+    # ---- index cache maintenance ----------------------------------------
+    def refresh_index(self) -> int:
+        """Rebuild lease-index hints from the KV (`scan` over lease
+        records): fold in leases granted through *other* handles — or
+        before this handle existed — so reap/speculate cover them.  Safe to
+        call any time; hints are always re-validated before acting.
+        One scan + one batched ``mget`` for the unknown records (the PR-2
+        multi-get lesson — never one round-trip per key).  Returns the
+        number of new hints added."""
+        keys = self.kv.scan(_LEASE, worker="scheduler")
+        with self._lock:
+            unknown = [k for k in keys if k[len(_LEASE):] not in self._hinted]
+        if not unknown:
+            return 0
+        added = 0
+        records = self.kv.mget(unknown, worker="scheduler")
+        for key, rec in zip(unknown, records):
+            if rec is None:
+                continue  # consumed between the scan and the mget
+            task_id = key[len(_LEASE):]
+            spec = rec.get("spec")
+            with self._lock:
+                if task_id in self._hinted:
+                    continue
+                self._hinted.add(task_id)
+                heapq.heappush(self._lease_heap, (rec["expires"], task_id))
+                if spec is not None:
+                    self._specs.setdefault(task_id, spec)
+                    self._jobs.setdefault(spec.job_id, set()).add(task_id)
+                    heapq.heappush(
+                        self._start_heaps.setdefault(spec.job_id, []),
+                        (rec["started"], task_id),
+                    )
+            added += 1
+        return added
+
+    def _maybe_refresh_index(self) -> None:
+        """Time-gated :meth:`refresh_index` — at most one KV scan per lease
+        timeout, so a control loop ticking every heartbeat doesn't turn the
+        O(shards) scan into per-tick traffic."""
+        now = time.monotonic()
+        with self._lock:
+            if now - self._last_index_refresh < self.config.lease_timeout_s:
+                return
+            self._last_index_refresh = now
+        self.refresh_index()
 
     # ---- control loop -----------------------------------------------------
     def reap(self) -> int:
         """Re-enqueue tasks whose lease expired (worker death). Returns count.
 
-        Heap-indexed: pops only entries whose *hinted* expiry has passed,
-        then re-validates against the KV lease record — extended leases are
-        re-pushed with their real expiry, completed/GC'd ones are dropped.
-        O(expired · log n), not an O(n) scan of every outstanding spec."""
+        Heap-indexed with lazy re-validation (PR 2), now over *shared*
+        state: the hint heap covers every handle's leases (via
+        ``_maybe_refresh_index``), and the actual requeue is a fenced
+        epoch+expiry CAS-delete — two drivers reaping the same lease race
+        at the eval and exactly one wins the requeue."""
         n = 0
+        self._maybe_refresh_index()
         now = time.monotonic()
         while True:
             with self._lock:
                 if not self._lease_heap or self._lease_heap[0][0] > now:
                     break
                 _, task_id = heapq.heappop(self._lease_heap)
-                spec = self._specs.get(task_id)
             lease = self.kv.get(_LEASE + task_id, worker="scheduler")
             if lease is None:
+                with self._lock:
+                    self._hinted.discard(task_id)
                 continue  # completed, released, or job GC'd — stale hint
             if lease["expires"] > now:
                 # Heartbeat extended the lease after our hint was pushed.
                 with self._lock:
                     heapq.heappush(self._lease_heap, (lease["expires"], task_id))
                 continue
-            self._drop_lease_record(task_id, "scheduler")
-            if spec is None or self.store.backend.exists(spec.result_key):
+            won, rec = self._fenced_drop_lease(
+                task_id,
+                int(lease.get("epoch", 0)),
+                "scheduler",
+                require_expired_before=now,
+            )
+            if not won:
+                # Another driver reaped it first, the worker completed, or a
+                # heartbeat slipped in — re-hint if a record is still there;
+                # otherwise drop the hint marker too, or refresh_index would
+                # skip every future lease of this task on this handle.
+                fresh = self.kv.get(_LEASE + task_id, worker="scheduler")
+                with self._lock:
+                    if fresh is not None:
+                        heapq.heappush(self._lease_heap, (fresh["expires"], task_id))
+                    else:
+                        self._hinted.discard(task_id)
+                continue
+            spec = rec.get("spec") if rec else None
+            if spec is None:
+                with self._lock:
+                    spec = self._specs.get(task_id)
+            if (
+                spec is None
+                or self._job_finished(spec.job_id)
+                or self.store.backend.exists(spec.result_key)
+            ):
                 continue
             self.kv.rpush(_Q, spec, worker="scheduler")
             self._signal_work()
@@ -372,10 +586,10 @@ class Scheduler:
     def speculate(self) -> int:
         """Enqueue duplicates of straggling tasks. Returns count.
 
-        Per-job start heaps: a task becomes a speculation candidate only
-        when its start time falls behind ``now - factor·median`` for its
-        job, so each control pass pops exactly the candidates instead of
-        scanning all running specs against every job's threshold."""
+        Per-job start heaps pop exactly the candidates whose elapsed time
+        crossed the straggler threshold (quantile-adaptive; see
+        ``SchedulerConfig``).  The duplicate mark is a KV ``setnx`` —
+        N drivers speculating the same job enqueue each straggler once."""
         n = 0
         now = time.monotonic()
         with self._lock:
@@ -392,22 +606,14 @@ class Scheduler:
             durations: List[float] = self.kv.lrange(_DURATION + job_id, worker="scheduler")
             if len(durations) < self.config.min_completed_for_speculation:
                 continue
-            med = sorted(durations)[len(durations) // 2]
-            threshold = max(
-                self.config.speculation_factor * med,
-                self.config.min_speculation_age_s,
-            )
-            cutoff = now - threshold
+            cutoff = now - self.config.straggler_threshold_s(durations)
             while True:
                 with self._lock:
                     heap = self._start_heaps.get(job_id)
                     if not heap or heap[0][0] > cutoff:
                         break
                     started, task_id = heapq.heappop(heap)
-                    spec = self._specs.get(task_id)
                     already = task_id in self._speculated
-                if spec is None or already:
-                    continue  # job GC'd / duplicate already queued
                 lease = self.kv.get(_LEASE + task_id, worker="scheduler")
                 if lease is None:
                     continue  # finished or reaped; a re-lease pushes a fresh hint
@@ -415,7 +621,15 @@ class Scheduler:
                     with self._lock:
                         heapq.heappush(heap, (lease["started"], task_id))
                     continue  # stale hint from an earlier attempt
+                spec = lease.get("spec")
+                if spec is None or already:
+                    continue
                 if self.store.backend.exists(spec.result_key):
+                    continue
+                if not self.kv.setnx(_SPECMARK + task_id, 1, worker="scheduler"):
+                    # Another driver already duplicated this straggler.
+                    with self._lock:
+                        self._speculated.add(task_id)
                     continue
                 with self._lock:
                     self._speculated.add(task_id)
@@ -426,33 +640,39 @@ class Scheduler:
 
     # ---- per-job GC -------------------------------------------------------
     def finish_job(self, job_id: str) -> int:
-        """Free everything a completed job left behind: in-memory specs and
-        speculation marks, per-job start heap, KV attempt counters / lease
-        records / duration samples, and the job's result + staged-input
-        objects.  Returns the number of tasks freed.  Futures for the job
-        become unresolvable (their result keys are deleted) — call only
-        after results have been retrieved.  Stale lease-heap hints are
-        discarded lazily on their next pop, and queued duplicates of the
-        job are dropped at lease time via the job tombstone."""
+        """Free everything a completed job left behind — callable from *any*
+        handle, not just the submitter, because task membership lives in
+        ``sched/jobtasks/{job}``.  The KV tombstone (``sched/finished/``)
+        is written **before** the deletes, so a concurrent lease in any
+        process drops the job's queued duplicates instead of resurrecting
+        the state being freed.  Returns the number of tasks freed.  Futures
+        for the job become unresolvable (their result keys are deleted) —
+        call only after results have been retrieved."""
+        already = self.kv.get(_FINISHED + job_id, worker="scheduler") is not None
+        self.kv.set(_FINISHED + job_id, 1, worker="scheduler")
+        self._remember_finished(job_id)
+        kv_ids = self.kv.lrange(_JOBTASKS + job_id, worker="scheduler")
         with self._lock:
-            task_ids = self._jobs.pop(job_id, set())
+            task_ids = set(self._jobs.pop(job_id, set()))
+            task_ids.update(kv_ids)
             for tid in task_ids:
                 self._specs.pop(tid, None)
                 self._speculated.discard(tid)
             self._start_heaps.pop(job_id, None)
-            if job_id not in self._finished_jobs:
-                self._finished_jobs.add(job_id)
-                self._finished_order.append(job_id)
-                while len(self._finished_order) > _MAX_TOMBSTONES:
-                    self._finished_jobs.discard(self._finished_order.popleft())
+        if already:
+            return 0  # another handle (or an earlier call) already freed it
         # Batched KV cleanup: one amortized round-trip per shard, and the
         # removed-lease count settles the advisory lease accounting that
-        # _drop_lease_record would otherwise pay a get+delete per task for.
+        # per-task fenced drops would otherwise pay a get+eval per task for.
         removed = self.kv.mdel([_LEASE + tid for tid in task_ids], worker="scheduler")
         with self._lock:
             self._active_leases = max(0, self._active_leases - removed)
+            self._hinted.difference_update(task_ids)
         self.kv.mdel(
-            [_ATTEMPTS + tid for tid in task_ids] + [_DURATION + job_id],
+            [_ATTEMPTS + tid for tid in task_ids]
+            + [_EPOCH + tid for tid in task_ids]
+            + [_SPECMARK + tid for tid in task_ids]
+            + [_DURATION + job_id, _JOBTASKS + job_id],
             worker="scheduler",
         )
         self.store.delete_prefix(f"result/{job_id}/", worker="scheduler")
@@ -472,3 +692,7 @@ class Scheduler:
 
     def attempts(self, task: TaskSpec) -> int:
         return int(self.kv.get(_ATTEMPTS + task.task_id, 0, worker="scheduler"))
+
+    def epoch(self, task: TaskSpec) -> int:
+        """Current fencing epoch of a task (0 = never leased)."""
+        return int(self.kv.get(_EPOCH + task.task_id, 0, worker="scheduler"))

@@ -9,6 +9,14 @@ as many stateless functions as there are elements in the list") and mirrors
 Python's native map API.  The executor owns a control loop that reaps dead
 workers' leases and speculates on stragglers until the job drains.
 
+Multi-driver: the ``Scheduler`` is a stateless handle over the KV, so any
+number of executors sharing a ``store``/``kv`` pair — across processes with
+``FileBackend``/``FileKVStore`` — cooperate on one queue: every driver's
+workers lease from it, every driver's control loop reaps and speculates it,
+and epoch fencing (see ``core/scheduler.py``) keeps the concurrent
+reap/speculate/complete transitions exactly-once.  ``examples/
+multi_driver.py`` and ``tests/test_multidriver.py`` exercise exactly this.
+
 The control loop is wakeup-driven: it blocks on the scheduler's activity
 event (set by ``submit*``/``complete``/requeues) and otherwise sleeps until
 ``Scheduler.next_wakeup_s()`` — a deadline-based fallback tick sized to the

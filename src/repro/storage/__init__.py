@@ -17,7 +17,8 @@ fix — see each module's docstring for details):
 Every operation is recorded in a :class:`~repro.storage.object_store.Ledger`
 (one record == one modeled request), which is what benchmarks count."""
 
-from .kv_store import KVStore
+from .file_kv import FileKVStore
+from .kv_store import DELETE, KVStore
 from .object_store import FileBackend, InMemoryBackend, Ledger, ObjectStore, OpRecord
 from .perf_model import (
     DISAGG_2026,
@@ -33,6 +34,8 @@ from .serialization import content_key, digest, dumps, dumps_with_key, loads
 
 __all__ = [
     "KVStore",
+    "FileKVStore",
+    "DELETE",
     "ObjectStore",
     "InMemoryBackend",
     "FileBackend",

@@ -1,0 +1,492 @@
+"""Cross-process KV store over a shared directory.
+
+The in-memory :class:`~repro.storage.kv_store.KVStore` models ElastiCache
+for a single driver process.  A *multi-process* driver — the paper's "N
+concurrent drivers are as elastic as the workers" end state — needs the
+same Redis semantics reachable from every process, so this module gives the
+KV a file substrate with the same public API and the same per-shard
+accounting:
+
+  * **per-shard state files** — each shard is one pickled dict
+    (``shard-N.pkl``), rewritten atomically (temp + ``os.replace``) on
+    every write transaction.  Control-plane state (queues of task specs,
+    lease records, counters) is small, so whole-shard rewrite is the
+    simplest correct granularity;
+  * **cross-process atomicity** — every operation is a transaction under
+    the shard's ``flock`` (``shard-N.lock``): load state, apply, store.
+    The in-process shard lock is taken first (threads serialize on it; a
+    single ``flock`` fd is per open-file-description, not per thread), the
+    file lock second (processes serialize on it).  ``eval`` therefore keeps
+    its server-side-scripting guarantee across processes: the update
+    function runs while the shard is locked machine-wide;
+  * **per-shard seq files** — each write transaction appends one byte to
+    ``shard-N.seq`` *while still holding the flock*; the file's size is the
+    shard's cross-process write sequence.  A waiter-gated
+    :class:`~repro.storage.object_store._PollWatcher` (same exponential-
+    backoff design as ``FileBackend``'s) stats the seq files and converts a
+    foreign process's writes into this process's shard-condition
+    broadcasts, so ``blpop``/``wait_key`` block event-driven across
+    processes — a worker pool in process B wakes on a queue push from
+    process A without any fallback tick;
+  * **snapshot cache** — the shard state is cached per process keyed by
+    seq-file size: a transaction that finds the size unchanged reuses the
+    cached dict instead of re-unpickling, so a busy single process pays
+    pickling only when another process actually wrote.
+
+Durability note: shard files are replaced atomically but *not* fsynced —
+the KV is the coordination plane (leases, queues, counters), all of it
+reconstructible or re-drivable after a crash, unlike the object store's
+checkpoint writes which do fsync.
+
+Virtual-time charging is identical to the in-memory KV (same op names,
+same per-shard amortization), so benchmarks and ledgers compare directly.
+"""
+
+from __future__ import annotations
+
+import fcntl
+import os
+import pickle
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from .kv_store import DELETE, KVStore, _sizeof
+from .object_store import Ledger, _PollWatcher
+from .perf_model import REDIS_2017, StorageProfile
+
+
+class _Txn:
+    """One shard transaction: mutate ``state`` and set ``dirty`` to flush."""
+
+    __slots__ = ("state", "dirty")
+
+    def __init__(self, state: Dict[str, Any]) -> None:
+        self.state = state
+        self.dirty = False
+
+
+class FileKVStore(KVStore):
+    """Sharded KV store over a shared directory (cross-process Redis model).
+
+    Same public API and notification contract as :class:`KVStore`; see the
+    module docstring for the substrate.  Construct one handle per process
+    over the same ``root`` — all handles see one keyspace and wake each
+    other's waiters."""
+
+    def __init__(
+        self,
+        root: str,
+        num_shards: int = 1,
+        profile: StorageProfile = REDIS_2017,
+        ledger: Optional[Ledger] = None,
+    ) -> None:
+        super().__init__(num_shards=num_shards, profile=profile, ledger=ledger)
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self._lock_fds: List[Optional[int]] = [None] * num_shards
+        self._fd_guard = threading.Lock()
+        # per-shard (seq_file_size, state_dict) snapshot, valid under flock
+        self._snap: List[Optional[tuple]] = [None] * num_shards
+        self._watcher: Optional[_PollWatcher] = None
+        self._watch_guard = threading.Lock()
+
+    # ---- files -----------------------------------------------------------
+    def _data_path(self, sidx: int) -> str:
+        return os.path.join(self.root, f"shard-{sidx}.pkl")
+
+    def _seq_path(self, sidx: int) -> str:
+        return os.path.join(self.root, f"shard-{sidx}.seq")
+
+    def _lock_fd(self, sidx: int) -> int:
+        fd = self._lock_fds[sidx]
+        if fd is None:
+            with self._fd_guard:
+                fd = self._lock_fds[sidx]
+                if fd is None:
+                    fd = os.open(
+                        os.path.join(self.root, f"shard-{sidx}.lock"),
+                        os.O_WRONLY | os.O_CREAT,
+                        0o644,
+                    )
+                    self._lock_fds[sidx] = fd
+        return fd
+
+    # ---- transactions ----------------------------------------------------
+    def _load(self, sidx: int) -> Dict[str, Any]:
+        """Load shard state (must hold the flock).  Reuses the process-local
+        snapshot when the seq file hasn't grown since it was taken."""
+        try:
+            size = os.path.getsize(self._seq_path(sidx))
+        except OSError:
+            size = 0
+        snap = self._snap[sidx]
+        if snap is not None and snap[0] == size:
+            return snap[1]
+        try:
+            with open(self._data_path(sidx), "rb") as f:
+                state = pickle.load(f)
+        except (OSError, EOFError):
+            state = {}
+        self._snap[sidx] = (size, state)
+        return state
+
+    def _flush(self, sidx: int, state: Dict[str, Any]) -> None:
+        """Store shard state and advance the cross-process sequence (must
+        hold the flock).  State lands via atomic replace *before* the seq
+        byte is appended, so a remote reader woken by the seq growth always
+        sees the new state."""
+        path = self._data_path(sidx)
+        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            pickle.dump(state, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+        fd = os.open(self._seq_path(sidx), os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, b"x")
+        finally:
+            os.close(fd)
+        try:
+            size = os.path.getsize(self._seq_path(sidx))
+        except OSError:
+            size = 0
+        self._snap[sidx] = (size, state)
+
+    def _txn(self, sidx: int):
+        """Context manager: shard thread lock + cross-process flock around a
+        load → mutate → (flush if dirty) → in-process notify cycle."""
+        store = self
+
+        class _Ctx:
+            def __enter__(self) -> _Txn:
+                self._sh = store._shards[sidx]
+                self._sh.lock.acquire()
+                fd = store._lock_fd(sidx)
+                fcntl.flock(fd, fcntl.LOCK_EX)
+                self._txn = _Txn(store._load(sidx))
+                return self._txn
+
+            def __exit__(self, *exc) -> bool:
+                try:
+                    if exc[0] is None and self._txn.dirty:
+                        store._flush(sidx, self._txn.state)
+                finally:
+                    fcntl.flock(store._lock_fd(sidx), fcntl.LOCK_UN)
+                    if exc[0] is None and self._txn.dirty:
+                        self._sh.touch()  # wake this process's waiters
+                    self._sh.lock.release()
+                return False
+
+        return _Ctx()
+
+    # ---- cross-process watch --------------------------------------------
+    def _ensure_watcher(self) -> _PollWatcher:
+        with self._watch_guard:
+            if self._watcher is None:
+                paths = [self._seq_path(i) for i in range(self.num_shards)]
+
+                def _on_change(changed: List[int]) -> None:
+                    for sidx in changed:
+                        sh = self._shards[sidx]
+                        with sh.lock:
+                            sh.touch()
+
+                self._watcher = _PollWatcher(paths, _on_change)
+            return self._watcher
+
+    def close(self) -> None:
+        """Stop the watch thread and release lock fds (tests)."""
+        with self._watch_guard:
+            if self._watcher is not None:
+                self._watcher.close()
+                self._watcher = None
+        with self._fd_guard:
+            for i, fd in enumerate(self._lock_fds):
+                if fd is not None:
+                    os.close(fd)
+                    self._lock_fds[i] = None
+
+    def wait_key(self, key: str, last_seq: int, timeout_s: float) -> int:
+        """Blocking shard watch, cross-process: while registered, the
+        watcher converts foreign seq-file growth into shard-condition
+        broadcasts, so the inherited condition wait needs no tick."""
+        watcher = self._ensure_watcher()
+        watcher.add_waiter()
+        try:
+            return super().wait_key(key, last_seq, timeout_s)
+        finally:
+            watcher.remove_waiter()
+
+    # ---- atomic single-key ops ------------------------------------------
+    def set(self, key: str, value: Any, *, worker: str = "-") -> None:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            t.state[key] = value
+            t.dirty = True
+            self._charge(self._shards[sidx], worker, "set", key, _sizeof(value), write=True)
+
+    def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            value = t.state.get(key, default)
+            self._charge(self._shards[sidx], worker, "get", key, _sizeof(value), write=False)
+            return value
+
+    def mget(
+        self, keys: List[str], default: Any = None, *, worker: str = "-"
+    ) -> List[Any]:
+        by_shard: Dict[int, List[int]] = {}
+        for i, key in enumerate(keys):
+            by_shard.setdefault(self.shard_of(key), []).append(i)
+        out: List[Any] = [default] * len(keys)
+        for sidx, positions in by_shard.items():
+            with self._txn(sidx) as t:
+                nbytes = 0
+                for i in positions:
+                    value = t.state.get(keys[i], default)
+                    out[i] = value
+                    nbytes += _sizeof(value)
+                self._charge(
+                    self._shards[sidx], worker, "mget",
+                    f"[{len(positions)} keys@s{sidx}]", nbytes, write=False,
+                )
+        return out
+
+    def mset(self, mapping: Dict[str, Any], *, worker: str = "-") -> None:
+        by_shard: Dict[int, List[str]] = {}
+        for key in mapping:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        for sidx, group in by_shard.items():
+            with self._txn(sidx) as t:
+                nbytes = 0
+                for key in group:
+                    t.state[key] = mapping[key]
+                    nbytes += _sizeof(mapping[key])
+                t.dirty = True
+                self._charge(
+                    self._shards[sidx], worker, "mset",
+                    f"[{len(group)} keys@s{sidx}]", nbytes, write=True,
+                )
+
+    def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            self._charge(self._shards[sidx], worker, "setnx", key, _sizeof(value), write=True)
+            if key in t.state:
+                return False
+            t.state[key] = value
+            t.dirty = True
+            return True
+
+    def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            new = t.state.get(key, 0) + amount
+            t.state[key] = new
+            t.dirty = True
+            self._charge(self._shards[sidx], worker, "incr", key, 8, write=True)
+            return new
+
+    def cas(self, key: str, expect: Any, value: Any, *, worker: str = "-") -> bool:
+        sentinel = object()
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            self._charge(self._shards[sidx], worker, "cas", key, _sizeof(value), write=True)
+            cur = t.state.get(key, sentinel)
+            matched = (cur is not sentinel and cur == expect) or (
+                cur is sentinel and expect is None
+            )
+            if matched:
+                t.state[key] = value
+                t.dirty = True
+                return True
+            return False
+
+    def delete(self, key: str, *, worker: str = "-") -> None:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            t.state.pop(key, None)
+            t.dirty = True
+            self._charge(self._shards[sidx], worker, "del", key, 0, write=True)
+
+    def mdel(self, keys: List[str], *, worker: str = "-") -> int:
+        by_shard: Dict[int, List[str]] = {}
+        for key in keys:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        removed = 0
+        sentinel = object()
+        for sidx, group in by_shard.items():
+            with self._txn(sidx) as t:
+                for key in group:
+                    if t.state.pop(key, sentinel) is not sentinel:
+                        removed += 1
+                t.dirty = True
+                self._charge(
+                    self._shards[sidx], worker, "mdel",
+                    f"[{len(group)} keys@s{sidx}]", 0, write=True,
+                )
+        return removed
+
+    def exists(self, key: str, *, worker: str = "-") -> bool:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            self._charge(self._shards[sidx], worker, "exists", key, 0, write=False)
+            return key in t.state
+
+    def scan(self, prefix: str, *, worker: str = "-") -> List[str]:
+        out: List[str] = []
+        for sidx in range(self.num_shards):
+            with self._txn(sidx) as t:
+                found = [k for k in t.state if k.startswith(prefix)]
+                self._charge(
+                    self._shards[sidx], worker, "scan", f"[{prefix}*@s{sidx}]",
+                    sum(len(k.encode()) for k in found), write=False,
+                )
+                out.extend(found)
+        return sorted(out)
+
+    # ---- server-side scripting ------------------------------------------
+    def eval(
+        self,
+        key: str,
+        fn: Callable[[Any], Any],
+        *,
+        default: Any = None,
+        worker: str = "-",
+    ) -> Any:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            new = fn(t.state.get(key, default))
+            if new is DELETE:
+                t.state.pop(key, None)
+                t.dirty = True
+                self._charge(self._shards[sidx], worker, "eval", key, 0, write=True)
+                return None
+            t.state[key] = new
+            t.dirty = True
+            self._charge(self._shards[sidx], worker, "eval", key, _sizeof(new), write=True)
+            return new
+
+    def eval_many(
+        self,
+        updates: Dict[str, Callable[[Any], Any]],
+        *,
+        default: Any = None,
+        worker: str = "-",
+    ) -> Dict[str, Any]:
+        by_shard: Dict[int, List[str]] = {}
+        for key in updates:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        out: Dict[str, Any] = {}
+        for sidx, group in by_shard.items():
+            with self._txn(sidx) as t:
+                nbytes = 0
+                for key in group:
+                    new = updates[key](t.state.get(key, default))
+                    if new is DELETE:
+                        t.state.pop(key, None)
+                        out[key] = None
+                        continue
+                    t.state[key] = new
+                    out[key] = new
+                    nbytes += _sizeof(new)
+                t.dirty = True
+                self._charge(
+                    self._shards[sidx], worker, "meval",
+                    f"[{len(group)} keys@s{sidx}]", nbytes, write=True,
+                )
+        return out
+
+    # ---- lists (queues) --------------------------------------------------
+    def rpush(self, key: str, *values: Any, worker: str = "-") -> int:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            lst = t.state.setdefault(key, [])
+            lst.extend(values)
+            t.dirty = True
+            self._charge(
+                self._shards[sidx], worker, "rpush", key,
+                sum(_sizeof(v) for v in values), write=True,
+            )
+            return len(lst)
+
+    def rpush_many(
+        self, pushes: Dict[str, List[Any]], *, worker: str = "-"
+    ) -> Dict[str, int]:
+        by_shard: Dict[int, List[str]] = {}
+        for key in pushes:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        lengths: Dict[str, int] = {}
+        for sidx, group in by_shard.items():
+            with self._txn(sidx) as t:
+                nbytes = 0
+                for key in group:
+                    values = pushes[key]
+                    lst = t.state.setdefault(key, [])
+                    lst.extend(values)
+                    lengths[key] = len(lst)
+                    nbytes += sum(_sizeof(v) for v in values)
+                t.dirty = True
+                self._charge(
+                    self._shards[sidx], worker, "mrpush",
+                    f"[{len(group)} keys@s{sidx}]", nbytes, write=True,
+                )
+        return lengths
+
+    def lpop(self, key: str, *, worker: str = "-") -> Any:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            lst = t.state.get(key)
+            value = lst.pop(0) if lst else None
+            if value is not None:
+                t.dirty = True
+            self._charge(self._shards[sidx], worker, "lpop", key, _sizeof(value), write=True)
+            return value
+
+    def blpop(self, key: str, timeout_s: float, *, worker: str = "-") -> Any:
+        """Blocking left pop across processes.  The flock is held only for
+        each pop *attempt*, never across the wait — otherwise a waiting
+        consumer would lock every producer out of the shard.  Between
+        attempts the consumer blocks on the shard condition; a local push
+        notifies it directly, a remote push grows the seq file and the
+        watcher relays the notify."""
+        deadline = time.monotonic() + timeout_s
+        sidx = self.shard_of(key)
+        sh = self._shards[sidx]
+        watcher = self._ensure_watcher()
+        watcher.add_waiter()
+        try:
+            while True:
+                with self._txn(sidx) as t:
+                    lst = t.state.get(key)
+                    if lst:
+                        value = lst.pop(0)
+                        t.dirty = True
+                        self._charge(sh, worker, "blpop", key, _sizeof(value), write=True)
+                        return value
+                    seq = sh.seq
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                with sh.lock:
+                    if sh.seq == seq:
+                        sh.cond.wait(remaining)
+        finally:
+            watcher.remove_waiter()
+
+    def lrange(self, key: str, start: int = 0, stop: int = -1, *, worker: str = "-") -> List[Any]:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            lst = list(t.state.get(key, []))
+            out = lst[start:] if stop == -1 else lst[start : stop + 1]
+            self._charge(
+                self._shards[sidx], worker, "lrange", key,
+                sum(_sizeof(v) for v in out), write=False,
+            )
+            return out
+
+    def llen(self, key: str, *, worker: str = "-") -> int:
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            self._charge(self._shards[sidx], worker, "llen", key, 8, write=False)
+            return len(t.state.get(key, []))

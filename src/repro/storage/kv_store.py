@@ -39,9 +39,10 @@ Data plane (batching + per-shard notification):
     Redis blocking-pop on top.  Scheduler queue waits and parameter-server
     pullers block here — per shard, woken only by writes that could matter
     to them — instead of riding a global poll tick.
-  * wakeups are in-process only (this KV is an in-memory model); a client
-    in another process would need its own fallback re-check, exactly as
-    the object store documents for ``FileBackend``.
+  * wakeups from *this* class are in-process (it is an in-memory model);
+    :class:`~repro.storage.file_kv.FileKVStore` extends the identical
+    contract across processes via per-shard seq files and a watch thread,
+    so multi-process drivers get event-driven ``blpop``/``wait_key`` too.
 
 Each op is charged virtual wire time and recorded per shard so benchmarks
 can detect shard saturation exactly like the paper's sort experiment.
@@ -59,6 +60,13 @@ from .object_store import Ledger, OpRecord, _Endpoint
 from .perf_model import REDIS_2017, StorageProfile
 
 _TOMBSTONE = object()
+
+# Sentinel an ``eval``/``eval_many`` update function may return to delete
+# the key atomically instead of storing a value — the Redis-script idiom
+# ``if ok then redis.call('DEL', key) end`` used by fenced lease releases:
+# compare-epoch-then-delete must be one atomic step or a zombie's heartbeat
+# could slip between the compare and the delete.
+DELETE = object()
 
 
 @dataclass
@@ -297,6 +305,23 @@ class KVStore(_Endpoint):
             self._charge(sh, worker, "exists", key, 0, write=False)
             return key in sh.data
 
+    def scan(self, prefix: str, *, worker: str = "-") -> List[str]:
+        """All keys starting with ``prefix`` (Redis SCAN MATCH): one charged
+        round-trip per shard — every shard must be visited, since hashing
+        scatters a prefix across all of them.  Used by stateless scheduler
+        handles to rebuild their lease-index caches from the KV (the KV is
+        the source of truth; local heaps are hints)."""
+        out: List[str] = []
+        for sh in self._shards:
+            with sh.lock:
+                found = [k for k in sh.data if k.startswith(prefix)]
+                self._charge(
+                    sh, worker, "scan", f"[{prefix}*@s{sh.idx}]",
+                    sum(len(k.encode()) for k in found), write=False,
+                )
+                out.extend(found)
+        return sorted(out)
+
     # ---- server-side scripting (Redis EVAL analogue) ---------------------
     def eval(
         self,
@@ -309,11 +334,18 @@ class KVStore(_Endpoint):
         """Atomically ``data[key] = fn(data.get(key, default))`` under the
         shard lock; returns the new value.  This is the paper's 'existing
         support for server-side scripting … to implement features like range
-        updates' — the parameter server's in-place gradient apply."""
+        updates' — the parameter server's in-place gradient apply, and (with
+        the :data:`DELETE` sentinel return) the scheduler's fenced
+        compare-epoch-then-delete lease release."""
         sh = self._shard(key)
         with sh.lock:
             cur = sh.data.get(key, default)
             new = fn(cur)
+            if new is DELETE:
+                sh.data.pop(key, None)
+                self._charge(sh, worker, "eval", key, 0, write=True)
+                sh.touch()
+                return None
             sh.data[key] = new
             self._charge(sh, worker, "eval", key, _sizeof(new), write=True)
             sh.touch()
@@ -342,6 +374,10 @@ class KVStore(_Endpoint):
                 nbytes = 0
                 for key in group:
                     new = updates[key](sh.data.get(key, default))
+                    if new is DELETE:
+                        sh.data.pop(key, None)
+                        out[key] = None
+                        continue
                     sh.data[key] = new
                     out[key] = new
                     nbytes += _sizeof(new)

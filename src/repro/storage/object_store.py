@@ -43,12 +43,21 @@ Data plane (batching + notification):
     existence check and the wait.
   * wakeup guarantee is **per backend**: the watch condition and sequence
     live on the backend, so a publish through *any* store handle sharing
-    that backend wakes every waiter in this process.  Only a *different
-    process* sharing a ``FileBackend`` directory publishes without
-    notifying, so waiters use a short fallback re-check tick
-    (``WATCH_FALLBACK_TICK_S``) **only** when the backend is
-    cross-process (``_Backend.cross_process``); purely in-process
-    backends wait on the condition alone, with no polling.
+    that backend wakes every waiter in this process.  A *different process*
+    sharing a ``FileBackend`` directory publishes without reaching this
+    process's condition directly; ``FileBackend`` closes that gap with a
+    **cross-process watch**: every write appends one byte to a per-root
+    sequence file (size is the cross-process write sequence — monotone and
+    atomic under ``O_APPEND``), and a per-backend watch thread stats that
+    file plus the directory's dirent mtime with exponential poll backoff
+    (``_PollWatcher``; fast after a change, backing off to a small cap when
+    idle, fully parked while nobody waits), converting external writes into
+    in-process ``notify_put`` broadcasts.  ``wait_keys`` therefore no
+    longer needs its fallback re-check tick on any built-in backend; the
+    tick (``WATCH_FALLBACK_TICK_S``) survives only for out-of-tree
+    cross-process backends without a watcher, and every tick-bounded wait
+    is counted in ``ObjectStore.fallback_tick_waits`` so tests can assert
+    the event-driven path really is tick-free.
 
 Every operation is charged virtual wire time from a
 :class:`~repro.storage.perf_model.StorageProfile` and recorded in a
@@ -150,16 +159,113 @@ class KeyExistsError(KeyError):
 
 
 # Fallback re-check interval for key watchers: covers publishes that bypass
-# this store handle's notifications (other processes on a FileBackend).
+# this store handle's notifications on a cross-process backend *without* a
+# watch thread (no built-in backend is one anymore; see _PollWatcher).
 WATCH_FALLBACK_TICK_S = 0.25
+
+# _PollWatcher backoff bounds: fast enough after a change that a
+# cross-process wake is near-immediate, capped so an idle watcher costs a
+# couple of stat() calls per _WATCH_MAX_BACKOFF_S at worst.
+_WATCH_MIN_BACKOFF_S = 0.002
+_WATCH_MAX_BACKOFF_S = 0.05
+
+
+class _PollWatcher:
+    """Watch filesystem signals for cross-process writes.
+
+    Watches a fixed set of paths by ``stat`` signature ``(size, mtime_ns)``
+    — sequence files grow monotonically under ``O_APPEND`` and a POSIX
+    ``rename``/``unlink`` bumps the parent dirent's mtime, so together they
+    cover every mutation a foreign process can make.  Polling is
+    exponential-backoff (reset to ``min_s`` on every observed change) and
+    **waiter-gated**: with zero registered waiters the thread parks on an
+    event and costs nothing.  The comparison baseline persists across idle
+    periods, so a write landing while parked is detected on the first pass
+    after a waiter registers — the snapshot-then-check-then-wait contract
+    of ``wait_put`` does the rest.  When a real inotify binding is
+    importable it could replace the poll loop; none is assumed (the
+    container has no inotify package), so the backoff poll is the portable
+    default."""
+
+    def __init__(
+        self,
+        paths: List[str],
+        on_change,
+        min_s: float = _WATCH_MIN_BACKOFF_S,
+        max_s: float = _WATCH_MAX_BACKOFF_S,
+    ) -> None:
+        self._paths = list(paths)
+        self._on_change = on_change
+        self._min_s = min_s
+        self._max_s = max_s
+        self._lock = threading.Lock()
+        self._waiters = 0
+        self._wake = threading.Event()
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+
+    @staticmethod
+    def _sig(path: str) -> Tuple[int, int]:
+        try:
+            st = os.stat(path)
+        except OSError:
+            return (0, 0)
+        return (st.st_size, st.st_mtime_ns)
+
+    def add_waiter(self) -> None:
+        with self._lock:
+            self._waiters += 1
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._run, daemon=True, name="fs-watch"
+                )
+                self._thread.start()
+            self._wake.set()
+
+    def remove_waiter(self) -> None:
+        with self._lock:
+            self._waiters = max(0, self._waiters - 1)
+
+    def close(self) -> None:
+        self._closed = True
+        self._wake.set()
+
+    def _run(self) -> None:
+        last = [self._sig(p) for p in self._paths]
+        backoff = self._min_s
+        while not self._closed:
+            with self._lock:
+                idle = self._waiters == 0
+                if idle:
+                    self._wake.clear()
+            if idle:
+                # Park until a waiter registers; `last` persists, so writes
+                # landing while parked are seen on the first pass after wake.
+                self._wake.wait()
+                continue
+            changed = []
+            for i, p in enumerate(self._paths):
+                sig = self._sig(p)
+                if sig != last[i]:
+                    last[i] = sig
+                    changed.append(i)
+            if changed:
+                backoff = self._min_s
+                self._on_change(changed)
+            else:
+                backoff = min(backoff * 2.0, self._max_s)
+            time.sleep(backoff)
 
 
 class _Backend:
     # True when writers in *other processes* can mutate the backing state
-    # without going through an in-process store handle (and therefore
-    # without firing ``notify_put``).  Key watchers only need a fallback
-    # re-check tick against such backends.
+    # without going through an in-process store handle.  Backends that also
+    # run a cross-process watcher (``self_watching``) convert those foreign
+    # writes into in-process notifications, so their waiters stay purely
+    # event-driven; only a cross-process backend *without* a watcher needs
+    # the fallback re-check tick.
     cross_process = False
+    self_watching = False
 
     def _init_watch(self) -> None:
         """Watch state lives on the *backend*, not the store handle: two
@@ -266,21 +372,35 @@ class InMemoryBackend(_Backend):
 
 class FileBackend(_Backend):
     """Directory-backed store.  Writes are crash-atomic: write temp file,
-    fsync, ``os.replace``.  ``put_if_absent`` uses O_EXCL on the final name's
-    lock sibling so two processes cannot both win.
+    fsync, then commit — ``os.replace`` for plain puts, ``os.link`` for
+    ``if_absent`` puts.  The link either creates the final dirent atomically
+    or fails ``EEXIST``, so two *processes* racing a ``put_if_absent``
+    cannot both win (the first-writer-wins contract the fenced result
+    publishes ride on), and either way only a complete object ever becomes
+    visible.
 
-    Cross-process: another process sharing the directory writes files this
-    process's store handles never see a ``notify_put`` for, so key watchers
-    keep the fallback re-check tick against this backend (in-memory backends
-    drop it).  Event-driven cross-process wakeups (inotify or lease files)
-    remain a ROADMAP item."""
+    Cross-process watch: every mutation appends one byte to the root's
+    ``.watch-seq`` file after it lands, so the file's *size* is a monotone
+    cross-process write sequence (``O_APPEND`` appends are atomic).  The
+    first ``wait_put`` starts a ``_PollWatcher`` over that file plus the
+    root dirent's mtime (rename/unlink bump it even for writers that skip
+    the seq append); any observed change fires this process's
+    ``notify_put``, so waiters sharing the directory across processes are
+    woken without a fallback re-check tick — the last ROADMAP polling hole.
+    The watcher is waiter-gated and backs off exponentially, so a backend
+    nobody waits on never polls at all."""
 
     cross_process = True
+    self_watching = True
+
+    _SEQ_NAME = ".watch-seq"
 
     def __init__(self, root: str) -> None:
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
         self._lock = threading.Lock()
+        self._seq_path = os.path.join(self.root, self._SEQ_NAME)
+        self._watcher: Optional[_PollWatcher] = None
         self._init_watch()
 
     def _path(self, key: str) -> str:
@@ -289,6 +409,42 @@ class FileBackend(_Backend):
 
     def _unpath(self, name: str) -> str:
         return name.replace("%2F", "/")
+
+    def _bump_cross_seq(self) -> None:
+        """Advance the cross-process write sequence: one atomic O_APPEND
+        byte.  Other processes' watchers detect the size growth."""
+        fd = os.open(self._seq_path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, b"x")
+        finally:
+            os.close(fd)
+
+    def _ensure_watcher(self) -> _PollWatcher:
+        with self._lock:
+            if self._watcher is None:
+                self._watcher = _PollWatcher(
+                    [self._seq_path, self.root],
+                    lambda _changed: self.notify_put(),
+                )
+            return self._watcher
+
+    def wait_put(self, last_seq: int, timeout_s: float) -> int:
+        # Register with the cross-process watcher for the duration of the
+        # wait: foreign writes become in-process notify_put broadcasts, so
+        # the base condition wait needs no fallback tick.
+        watcher = self._ensure_watcher()
+        watcher.add_waiter()
+        try:
+            return super().wait_put(last_seq, timeout_s)
+        finally:
+            watcher.remove_waiter()
+
+    def close(self) -> None:
+        """Stop the watch thread (tests; daemon thread otherwise)."""
+        with self._lock:
+            if self._watcher is not None:
+                self._watcher.close()
+                self._watcher = None
 
     def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
         path = self._path(key)
@@ -300,7 +456,20 @@ class FileBackend(_Backend):
                 f.write(blob)
                 f.flush()
                 os.fsync(f.fileno())
-            os.replace(tmp, path)
+            if if_absent:
+                # Atomic cross-process first-writer-wins: link either
+                # creates the dirent or fails EEXIST — the exists() above is
+                # only a fast path, another process can land between it and
+                # here.
+                try:
+                    os.link(tmp, path)
+                except FileExistsError:
+                    os.remove(tmp)
+                    return False
+                os.remove(tmp)
+            else:
+                os.replace(tmp, path)
+            self._bump_cross_seq()
             return True
 
     def get(self, key: str) -> bytes:
@@ -313,13 +482,15 @@ class FileBackend(_Backend):
     def delete(self, key: str) -> None:
         try:
             os.remove(self._path(key))
+            self._bump_cross_seq()
         except FileNotFoundError:
             pass
 
     def list(self, prefix: str) -> List[str]:
         out = []
         for name in os.listdir(self.root):
-            if name.endswith((".tmp",)) or ".tmp." in name:
+            # skip temp files and watch-plane files (".watch-seq" etc.)
+            if name.startswith(".") or name.endswith((".tmp",)) or ".tmp." in name:
                 continue
             key = self._unpath(name)
             if key.startswith(prefix):
@@ -339,6 +510,12 @@ class ObjectStore(_Endpoint):
         self.backend = backend or InMemoryBackend()
         self.profile = profile
         self.ledger = ledger or Ledger()
+        # How many tick-bounded (non-event-driven) waits wait_keys has done
+        # on this handle.  Built-in backends are all event-driven now, so
+        # tests assert this stays 0; a nonzero count means some waiter fell
+        # back to polling (an out-of-tree cross-process backend, or an
+        # explicit poll_s).
+        self.fallback_tick_waits = 0
         self._register_endpoint()
 
     # ---- key watch (notification plane) --------------------------------
@@ -508,26 +685,30 @@ class ObjectStore(_Endpoint):
     def watch_tick_s(self, poll_s: Optional[float] = None) -> Optional[float]:
         """Fallback re-check interval for key watchers on this store.
 
-        ``None`` means purely event-driven: every writer goes through an
-        in-process handle and fires ``notify_put``, so waiters never need to
-        poll.  Cross-process backends (``FileBackend``) return the fallback
-        tick because a writer in another process bypasses notification.  An
-        explicit ``poll_s`` always wins (backward-compatible knob)."""
+        ``None`` means purely event-driven: every write either goes through
+        an in-process handle (which fires ``notify_put``) or is detected by
+        the backend's own cross-process watcher (``FileBackend``'s seq-file
+        + dirent-mtime ``_PollWatcher``), so waiters never need to poll.
+        Only a cross-process backend *without* a watcher returns the
+        fallback tick.  An explicit ``poll_s`` always wins
+        (backward-compatible knob)."""
         if poll_s is not None:
             return poll_s
-        return WATCH_FALLBACK_TICK_S if self.backend.cross_process else None
+        if self.backend.cross_process and not self.backend.self_watching:
+            return WATCH_FALLBACK_TICK_S
+        return None
 
     def wait_keys(
         self, keys: List[str], *, poll_s: Optional[float] = None, timeout_s: float = 60.0
     ) -> None:
         """Block until all keys exist (PyWren signals completion 'by the
         existence of this key').  Event-driven: woken by ``notify_put`` the
-        moment a publisher on this handle lands a key.  For in-process
-        backends that is the *only* wake source — there is no polling.  For
-        cross-process backends (``FileBackend`` shared between processes)
-        existence is re-checked on a short fallback tick, since an external
-        writer never notifies this handle.  ``poll_s`` is kept for backward
-        compatibility and overrides the fallback tick."""
+        moment a publisher on this handle lands a key; on a ``FileBackend``
+        a publisher in *another process* is converted into the same wake by
+        the backend's watch thread, so there is no polling on any built-in
+        backend.  ``poll_s`` is kept for backward compatibility and forces
+        a re-check tick; tick-bounded waits are counted in
+        ``fallback_tick_waits``."""
         deadline = time.monotonic() + timeout_s
         tick = self.watch_tick_s(poll_s)
         pending = list(keys)
@@ -540,7 +721,11 @@ class ObjectStore(_Endpoint):
             if now > deadline:
                 raise TimeoutError(f"{len(pending)} keys still absent, e.g. {pending[:3]}")
             remaining = deadline - now
-            self.wait_put(seq, remaining if tick is None else min(tick, remaining))
+            if tick is None:
+                self.wait_put(seq, remaining)
+            else:
+                self.fallback_tick_waits += 1
+                self.wait_put(seq, min(tick, remaining))
 
     def iter_prefix(self, prefix: str, *, worker: str = "-") -> Iterator[Tuple[str, Any]]:
         for key in self.list(prefix, worker=worker):

@@ -15,7 +15,8 @@ Pins the PR-2 contract:
   * ``finish_job`` — scheduler maps, KV attempt/duration keys, and
     result/input objects are all freed;
   * ``wait_keys`` fallback tick — dropped for in-process backends (purely
-    event-driven), kept for the cross-process ``FileBackend``.
+    event-driven); PR 4 drops it for ``FileBackend`` too (the backend's
+    own watch thread covers cross-process writers).
 """
 
 import threading
@@ -323,9 +324,12 @@ def test_ps_wait_fresh_wakes_on_push():
 # wait_keys fallback tick: event-driven in-process, tick only cross-process
 # ---------------------------------------------------------------------------
 
-def test_watch_tick_only_for_cross_process_backends(tmp_path):
+def test_watch_tick_gone_for_all_builtin_backends(tmp_path):
+    """PR 4: FileBackend runs its own cross-process watcher, so no built-in
+    backend needs the fallback re-check tick anymore; only an explicit
+    poll_s forces one."""
     assert ObjectStore().watch_tick_s() is None
-    assert ObjectStore(backend=FileBackend(str(tmp_path))).watch_tick_s() == 0.25
+    assert ObjectStore(backend=FileBackend(str(tmp_path))).watch_tick_s() is None
     assert ObjectStore().watch_tick_s(poll_s=0.01) == 0.01
 
 
@@ -400,8 +404,9 @@ def test_finish_job_prefix_does_not_eat_sibling_jobs():
 
 
 def test_file_backend_wait_keys_sees_out_of_band_writer(tmp_path):
-    """A second store handle over the same directory publishes without
-    notifying the first handle — only the fallback tick can catch it."""
+    """A second backend instance over the same directory publishes without
+    reaching the first instance's in-process condition — the waiter's watch
+    thread must catch it, with zero fallback ticks."""
     waiter = ObjectStore(backend=FileBackend(str(tmp_path)))
     writer = ObjectStore(backend=FileBackend(str(tmp_path)))
 
@@ -414,3 +419,4 @@ def test_file_backend_wait_keys_sees_out_of_band_writer(tmp_path):
     waiter.wait_keys(["oob/key"], timeout_s=5.0)  # must not hang
     t.join()
     assert waiter.get("oob/key") == 7
+    assert waiter.fallback_tick_waits == 0  # event-driven, not tick-driven

@@ -1,0 +1,339 @@
+"""Multi-driver control plane: stateless scheduler handles + epoch fencing.
+
+Pins the PR-4 contract:
+  * **epoch fencing** — ``heartbeat``/``complete``/``release`` from a stale
+    attempt epoch are rejected; a zombie's result publish is suppressed by
+    the ``run_task`` fence; ``release`` burns the released epoch;
+  * **statelessness** — a *fresh* ``Scheduler`` handle over an existing KV
+    rebuilds its lease index from storage and reaps a foreign handle's
+    expired lease; two handles racing one completion settle exactly once;
+  * **two-scheduler soak** — 20 consecutive jobs through two executors
+    sharing one KV/store under aggressive concurrent reap + speculate:
+    zero lost tasks, exactly one visible result object per task, and no
+    ``(task, epoch)`` ever completes twice;
+  * **cross-process** — a spawned subprocess worker pool over shared
+    ``FileKVStore``/``FileBackend`` executes a map submitted by this
+    process, event-driven end to end (the driver's fallback-tick counter
+    stays 0 and the job completes well inside the event-driven deadline).
+"""
+
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import (
+    FaultPlan,
+    FunctionSpec,
+    Scheduler,
+    SchedulerConfig,
+    TaskSpec,
+    WrenExecutor,
+    get_all,
+    run_task,
+    stage_input,
+)
+from repro.storage import FileBackend, FileKVStore, KVStore, ObjectStore
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def _mk(**cfg):
+    store = ObjectStore()
+    kv = KVStore(num_shards=2)
+    sched = Scheduler(kv, store, SchedulerConfig(**cfg))
+    func = FunctionSpec.register(store, lambda x: x)
+    return store, kv, sched, func
+
+
+def _submit_one(store, sched, func, job="fence", idx=0, value=1):
+    task = TaskSpec.make(job, func, stage_input(store, job, value), idx)
+    sched.submit(task)
+    return task
+
+
+# ---------------------------------------------------------------------------
+# epoch-fencing primitives
+# ---------------------------------------------------------------------------
+
+def test_lease_assigns_monotonic_epochs():
+    store, kv, sched, func = _mk(lease_timeout_s=0.05)
+    task = _submit_one(store, sched, func)
+    t1 = sched.lease_next("w0")
+    assert t1 is not None and t1.epoch == 1
+    time.sleep(0.1)
+    assert sched.reap() == 1  # expired; requeued
+    t2 = sched.lease_next("w1")
+    assert t2 is not None and t2.epoch == 2
+    assert sched.epoch(task) == 2
+
+
+def test_stale_heartbeat_and_complete_rejected():
+    store, kv, sched, func = _mk(lease_timeout_s=0.05)
+    task = _submit_one(store, sched, func, job="hb")
+    t1 = sched.lease_next("w0")
+    time.sleep(0.1)
+    assert sched.reap() == 1
+    t2 = sched.lease_next("w1")
+    # the zombie's heartbeat must not extend the new attempt's lease
+    assert sched.heartbeat(t1, "w0") is False
+    assert sched.heartbeat(t2, "w1") is True
+    # the zombie's complete must not free the new attempt's lease or
+    # contribute a duration sample
+    assert sched.complete(t1, "w0", 99.0) is False
+    assert kv.get("sched/lease/" + task.task_id) is not None
+    assert kv.get("sched/durations/hb") is None
+    # the owner's complete wins exactly once
+    assert sched.complete(t2, "w1", 0.01) is True
+    assert kv.get("sched/lease/" + task.task_id) is None
+    assert kv.lrange("sched/durations/hb") == [0.01]
+
+
+def test_zombie_result_publish_is_fenced():
+    store, kv, sched, func = _mk(lease_timeout_s=0.05)
+    task = _submit_one(store, sched, func, job="zpub", value=7)
+    t1 = sched.lease_next("w0")
+    time.sleep(0.1)
+    assert sched.reap() == 1  # t1 is now a zombie attempt
+    res1 = run_task(store, t1, worker="w0", fence=lambda: sched.owns_lease(t1))
+    assert res1.fenced and res1.success
+    assert not store.backend.exists(task.result_key)  # publish suppressed
+    t2 = sched.lease_next("w1")
+    res2 = run_task(store, t2, worker="w1", fence=lambda: sched.owns_lease(t2))
+    assert not res2.fenced
+    assert store.get(task.result_key).value == 7
+    assert len(store.list(task.result_key)) == 1
+
+
+def test_release_burns_epoch_and_requeues():
+    store, kv, sched, func = _mk()
+    task = _submit_one(store, sched, func, job="rel")
+    t1 = sched.lease_next("w0")
+    assert t1.epoch == 1 and sched.attempts(task) == 1
+    sched.release(t1, "w0")
+    # epoch burned: the released attempt can no longer act
+    assert sched.epoch(task) == 2
+    assert sched.owns_lease(t1) is False
+    assert sched.heartbeat(t1, "w0") is False
+    # attempt charge undone, task back in the queue with a fresh epoch next
+    assert sched.attempts(task) == 0
+    t2 = sched.lease_next("w1")
+    assert t2 is not None and t2.epoch == 3
+    # double-release from the stale epoch is a fenced no-op
+    sched.release(t1, "w0")
+    assert sched.queue_depth() == 0
+
+
+def test_two_handles_exactly_once_complete():
+    store, kv, sched, func = _mk()
+    sched2 = Scheduler(kv, store, sched.config)
+    task = _submit_one(store, sched, func, job="race")
+    t1 = sched.lease_next("w0")
+    wins = [sched.complete(t1, "w0", 0.01), sched2.complete(t1, "w0", 0.01)]
+    assert wins.count(True) == 1
+    assert kv.lrange("sched/durations/race") == [0.01]  # one sample, not two
+
+
+def test_fresh_handle_recovers_foreign_lease():
+    """Statelessness: a second handle that never saw the submit rebuilds the
+    lease index from the KV and reaps the first handle's dead worker."""
+    store, kv, sched, func = _mk(lease_timeout_s=0.05)
+    task = _submit_one(store, sched, func, job="foreign")
+    assert sched.lease_next("w0") is not None
+    sched2 = Scheduler(kv, store, SchedulerConfig(lease_timeout_s=0.05))
+    time.sleep(0.1)
+    assert sched2.reap() == 1  # refresh_index folded in the foreign lease
+    t2 = sched2.lease_next("w1")
+    assert t2 is not None and t2.task_id == task.task_id and t2.epoch == 2
+
+
+def test_two_handles_speculate_once():
+    """The setnx speculation mark dedupes across handles: one straggler gets
+    exactly one duplicate no matter how many drivers watch the job."""
+    store, kv, sched, func = _mk(
+        lease_timeout_s=30.0,
+        min_completed_for_speculation=1,
+        min_speculation_age_s=0.01,
+        speculation_k=1.0,
+    )
+    sched2 = Scheduler(kv, store, sched.config)
+    task = _submit_one(store, sched, func, job="spec1")
+    assert sched.lease_next("w0") is not None
+    kv.rpush("sched/durations/spec1", 0.001, worker="t")  # tiny q95
+    time.sleep(0.05)  # past the floor: task is now a straggler
+    sched2.refresh_index()  # handle B learns the lease from the KV
+    total = sched.speculate() + sched2.speculate()
+    assert total == 1
+    dups = kv.lrange("sched/queue")
+    assert [d.task_id for d in dups] == [task.task_id]  # exactly one duplicate
+
+
+# ---------------------------------------------------------------------------
+# quantile-adaptive speculation rule
+# ---------------------------------------------------------------------------
+
+def test_straggler_threshold_quantile_vs_legacy():
+    durations = [0.1] * 18 + [0.2, 1.0]  # q95 = 0.2, median = 0.1
+    quantile_cfg = SchedulerConfig(speculation_quantile=0.95, speculation_k=2.0)
+    assert quantile_cfg.straggler_threshold_s(durations) == pytest.approx(0.4)
+    legacy = SchedulerConfig(speculation_factor=3.0)
+    assert legacy.straggler_threshold_s(durations) == pytest.approx(0.3)
+    # the floor wins for microsecond-scale no-op distributions
+    noop = [1e-5] * 20
+    assert quantile_cfg.straggler_threshold_s(noop) == quantile_cfg.min_speculation_age_s
+
+
+# ---------------------------------------------------------------------------
+# two-scheduler soak (shared in-memory KV, concurrent reap/speculate)
+# ---------------------------------------------------------------------------
+
+SOAK_ITERATIONS = 20
+
+
+def test_two_driver_soak_exactly_once_per_epoch():
+    """20 consecutive jobs through two executors sharing one KV/store with
+    aggressive leases + speculation and an injected straggler: no lost
+    tasks, one visible result object per task, and no (task, epoch) pair
+    ever completes twice."""
+    store = ObjectStore()
+    kv = KVStore(num_shards=2)
+    cfg = SchedulerConfig(
+        lease_timeout_s=0.25,  # short: running tasks get reaped under load
+        max_attempts=1000,  # churn must re-attempt, not drop
+        min_completed_for_speculation=3,
+        min_speculation_age_s=0.02,
+        speculation_k=1.0,
+    )
+    completions = []  # (task_id, epoch) of every fenced-complete win
+
+    def _instrument(sched):
+        orig = sched.complete
+
+        def wrapped(task, worker, duration_s):
+            won = orig(task, worker, duration_s)
+            if won:
+                completions.append((task.task_id, task.epoch))
+            return won
+
+        sched.complete = wrapped
+
+    wex_a = WrenExecutor(
+        store=store, kv=kv, num_workers=2, scheduler_config=cfg,
+        fault_plan=FaultPlan(slowdown={"w0000": 200.0}), seed=1,
+    )
+    wex_b = WrenExecutor(store=store, kv=kv, num_workers=2, scheduler_config=cfg, seed=2)
+    _instrument(wex_a.scheduler)
+    _instrument(wex_b.scheduler)
+    try:
+        for i in range(SOAK_ITERATIONS):
+            driver = wex_a if i % 2 == 0 else wex_b
+            job = f"soak-{i}"
+            n = 12
+            futs = driver.map(lambda x: x * 2, list(range(n)), job_id=job)
+            # zero lost tasks: every future resolves with the right value
+            assert get_all(futs, timeout_s=60) == [x * 2 for x in range(n)]
+            # exactly one visible result object per task (duplicates lost
+            # the if_absent race or were fenced)
+            assert len(store.list(f"result/{job}/")) == n
+            driver.finish_job(job)
+        # epoch fencing verified: a (task, epoch) pair never completes twice
+        assert len(completions) == len(set(completions)), (
+            "duplicate fenced completion for the same attempt epoch"
+        )
+    finally:
+        wex_a.shutdown()
+        wex_b.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# cross-process: FileKVStore + FileBackend with a subprocess worker pool
+# ---------------------------------------------------------------------------
+
+# Wall-clock bound for the 16-task cross-process map below.  Event-driven
+# wakes are bounded by the watcher's 50 ms max backoff; with the old 250 ms
+# fallback tick on both the queue pops and the driver's result waits the
+# job serializes into multi-second tick waits.  15 s leaves CI slack while
+# still failing hard on event loss (the pre-watcher behavior measured ~2-4x
+# this bound under load).
+CROSS_PROCESS_DEADLINE_S = 15.0
+
+
+def _spawn_worker_pool(kv_root: str, obj_root: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__), "worker", kv_root, obj_root],
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+    )
+
+
+def test_cross_process_map_is_event_driven(tmp_path):
+    """A subprocess worker pool over shared FileKVStore/FileBackend executes
+    a map submitted here: queue pushes wake the child's blpop, result
+    publishes wake this driver's futures — no fallback ticks anywhere."""
+    kv_root = str(tmp_path / "kv")
+    obj_root = str(tmp_path / "obj")
+    kv = FileKVStore(kv_root, num_shards=2)
+    store = ObjectStore(backend=FileBackend(obj_root))
+    # num_workers=0: every task MUST be executed by the subprocess
+    wex = WrenExecutor(
+        store=store, kv=kv, num_workers=0,
+        scheduler_config=SchedulerConfig(lease_timeout_s=10.0),
+    )
+    proc = _spawn_worker_pool(kv_root, obj_root)
+    try:
+        deadline = time.monotonic() + 30
+        while kv.get("ctl/ready") is None:
+            assert proc.poll() is None, proc.stdout.read().decode()
+            assert time.monotonic() < deadline, "subprocess pool never came up"
+            time.sleep(0.05)
+        n = 16
+        t0 = time.monotonic()
+        futs = wex.map(lambda x: x * 3, list(range(n)), job_id="xproc")
+        assert get_all(futs, timeout_s=60) == [x * 3 for x in range(n)]
+        wall = time.monotonic() - t0
+        # exactly-once visibility across the process boundary
+        assert len(store.list("result/xproc/")) == n
+        # event-driven end to end: the driver never fell back to a tick...
+        assert store.fallback_tick_waits == 0
+        # ...and the job cleared the event-driven deadline
+        assert wall < CROSS_PROCESS_DEADLINE_S, f"map took {wall:.1f}s"
+    finally:
+        kv.rpush("ctl/shutdown", 1, worker="driver")
+        try:
+            proc.wait(timeout=15)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+        wex.shutdown()
+        kv.close()
+
+
+def _worker_pool_main(kv_root: str, obj_root: str) -> None:
+    """Subprocess entry: a worker pool over the shared directory stores.
+    Its Scheduler handle shares *all* state with the parent's through the
+    file KV — it leases tasks the parent submitted and publishes results
+    the parent's futures wake on."""
+    from repro.core import Scheduler, SchedulerConfig, WorkerPool
+    from repro.storage import FileBackend, FileKVStore, ObjectStore
+
+    kv = FileKVStore(kv_root, num_shards=2)
+    store = ObjectStore(backend=FileBackend(obj_root))
+    sched = Scheduler(kv, store, SchedulerConfig(lease_timeout_s=10.0))
+    pool = WorkerPool(store, sched, num_workers=2)
+    kv.set("ctl/ready", 1, worker="child")
+    # blpop is the cross-process event-driven wait under test: the parent's
+    # shutdown push wakes it directly.
+    while kv.blpop("ctl/shutdown", timeout_s=5.0) is None:
+        pass
+    pool.stop_all()
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 4 and sys.argv[1] == "worker":
+        _worker_pool_main(sys.argv[2], sys.argv[3])
+    else:
+        raise SystemExit(f"usage: {sys.argv[0]} worker <kv_root> <obj_root>")

@@ -10,6 +10,9 @@ Pins:
     containers (liveness tracked by a not-stopped predicate, not thread
     aliveness alone);
   * scale-down mid-job loses no tasks;
+  * scale-down *preemption* releases leased-but-unstarted batch tasks back
+    to the queue immediately (epoch-invalidated), instead of stranding
+    them until lease expiry — the PR-4 ``scale_to`` race fix;
   * ``wait_keys`` / futures return promptly (well under the heartbeat
     interval) once a result is published — the event-driven contract.
 """
@@ -19,8 +22,8 @@ import time
 
 import pytest
 
-from repro.core import WrenExecutor, get_all
-from repro.storage import ObjectStore
+from repro.core import SchedulerConfig, WrenExecutor, get_all
+from repro.storage import KVStore, ObjectStore
 
 HEARTBEAT_S = 0.2  # SchedulerConfig.heartbeat_interval_s default
 
@@ -71,6 +74,51 @@ def test_scale_down_mid_job_loses_no_tasks():
         assert get_all(futs, timeout_s=60) == [x * 3 for x in range(60)]
         assert len(wex.pool.runnable_workers()) == 4
     finally:
+        wex.shutdown()
+
+
+def test_scale_down_releases_unstarted_leases_promptly():
+    """A worker that leased a batch right before ``scale_to`` stopped it
+    must hand its unstarted leases straight back with their epochs burned —
+    with a 30 s lease timeout, anything that relied on expiry would stall
+    the queue far past this test's deadlines."""
+    store = ObjectStore()
+    kv = KVStore(num_shards=2)
+    cfg = SchedulerConfig(lease_timeout_s=30.0)  # expiry cannot help in time
+    wex = WrenExecutor(store=store, kv=kv, num_workers=0, scheduler_config=cfg)
+    try:
+        def gated(x):
+            # closures over KV handles pickle by reference, so the test can
+            # gate the first task's completion from outside
+            kv.set(f"started/{x}", 1, worker="task")
+            while kv.get("gate") is None:
+                time.sleep(0.005)
+            return x
+
+        futs = wex.map(gated, list(range(8)), job_id="preempt")
+        wex.scale_to(1)  # one worker leases a batch of 4, starts task 0
+        deadline = time.monotonic() + 10
+        while kv.get("started/0") is None or wex.scheduler.queue_depth() != 4:
+            assert time.monotonic() < deadline, "worker never leased its batch"
+            time.sleep(0.01)
+        wex.scale_to(0)  # preempt while 3 leased tasks are still unstarted
+        kv.set("gate", 1, worker="test")  # let the in-flight task finish
+        # the 3 unstarted leases come back via release, well before expiry
+        deadline = time.monotonic() + 5
+        while wex.scheduler.queue_depth() != 7:
+            assert time.monotonic() < deadline, (
+                f"queue stuck at {wex.scheduler.queue_depth()} — leases stranded"
+            )
+            time.sleep(0.01)
+        assert kv.scan("sched/lease/") == []  # nothing left leased
+        # epochs: task 0 completed on epoch 1; tasks 1-3 were released and
+        # their epoch burned (lease=1, release-invalidate=2); 4-7 unleased
+        epochs = sorted(wex.scheduler.epoch(f.task) for f in futs)
+        assert epochs == [0, 0, 0, 0, 1, 2, 2, 2]
+        wex.scale_to(2)  # the released tasks are immediately re-leasable
+        assert get_all(futs, timeout_s=30) == list(range(8))
+    finally:
+        kv.set("gate", 1, worker="test")
         wex.shutdown()
 
 
