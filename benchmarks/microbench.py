@@ -27,7 +27,14 @@ notify/multi-get traffic dominates.  Reported rows:
     row counts exactly the Fig 5/6 bottleneck.  ``write_ratio`` is the
     map-stage request-count drop (looped ÷ batched; the acceptance floor
     is ≥ 2×), ``stage_requests``/``legacy_stage_requests`` cover the whole
-    write → read → GC shuffle lifecycle.
+    write → read → GC shuffle lifecycle;
+  * ``storage/file_substrate_{engine}_fsync-{policy}`` (``--backend
+    file``) — the PR-5 log-structured engine vs. the PR-4 snapshot engine
+    under the durability-policy sweep, over a realistic resident state.
+    ``ops_per_s`` is the wall-time comparison; ``disk_bytes_per_op`` is
+    the deterministic structural one (O(record) appends vs. O(shard)
+    rewrites — typically two orders of magnitude apart), immune to the
+    host's I/O weather.
 
 Run directly (``python -m benchmarks.microbench``) or via
 ``python -m benchmarks.run`` which includes these rows in the CSV.
@@ -37,19 +44,22 @@ CLI (the CI bench-smoke and multiprocess jobs use all of these):
   python -m benchmarks.microbench --quick --json BENCH_control_plane.json \\
       --floor-tasks-per-s 150 --floor-shuffle-ratio 2.0
   python -m benchmarks.microbench --quick --backend file \\
-      --json BENCH_control_plane_file.json --floor-tasks-per-s 25
+      --json BENCH_file_substrate.json --floor-tasks-per-s 85
 
 ``--quick`` shrinks budgets for CI, ``--json`` writes the rows as a JSON
-artifact (CI uploads it as ``BENCH_control_plane*.json`` so the perf
-trajectory is tracked per commit), ``--floor-tasks-per-s`` exits non-zero
-if the 4-worker map throughput regresses below the floor (any event-loss
-stall — a missed cross-process wake falling back to timeouts — collapses
-throughput and trips this), and ``--floor-shuffle-ratio`` exits non-zero if
-the batched write plane stops beating the looped path by the given factor.
-``--backend file`` runs the map benches over ``FileKVStore`` +
-``FileBackend`` — every queue pop, lease CAS, and result publish crosses
-the filesystem substrate, exercising the cross-process plane end to end
-(the floor is lower: fsync'd puts and flock'd KV transactions dominate).
+artifact (CI uploads ``BENCH_control_plane*.json`` and
+``BENCH_file_substrate*.json`` so the perf trajectory is tracked per
+commit), ``--floor-tasks-per-s`` exits non-zero if the 4-worker map
+throughput regresses below the floor (any event-loss stall — a missed
+cross-process wake falling back to timeouts — collapses throughput and
+trips this), and ``--floor-shuffle-ratio`` exits non-zero if the batched
+write plane stops beating the looped path by the given factor.
+``--backend file`` runs the map + substrate benches over ``FileKVStore``
++ ``FileBackend`` — every queue pop, lease CAS, and result publish
+crosses the filesystem substrate, exercising the cross-process plane end
+to end.  The file floor is 85: 5× the snapshot-per-op engine's ~17
+tasks/s on the reference box, so a regression to O(shard)-per-op costs is
+caught at PR time.
 """
 
 from __future__ import annotations
@@ -60,13 +70,26 @@ import time
 
 def _make_stores(backend: str, workdir: str = None):
     """Storage pair for a bench: in-memory (default) or the cross-process
-    file substrate (FileKVStore + FileBackend over ``workdir``)."""
+    file substrate (FileKVStore + FileBackend over ``workdir``).
+
+    Both file stores run ``fsync="never"`` here — the PR-4 snapshot engine
+    never fsynced the KV (its documented stance: the coordination plane is
+    reconstructible), so an equal-durability configuration is the only
+    apples-to-apples engine comparison; and durability syscalls measure
+    the HOST, not the engine (per-file fsync latency spikes to tens of ms
+    on network filesystems, and the object store's group commit is an
+    ``os.sync()``, whose cost is dominated by whatever else the machine
+    has dirty).  What each durability policy itself costs is priced
+    separately (and deliberately) by the ``file_substrate`` rows' fsync
+    sweep."""
     from repro.storage import FileBackend, FileKVStore, KVStore, ObjectStore
 
     if backend == "file":
         return (
-            ObjectStore(backend=FileBackend(os.path.join(workdir, "obj"))),
-            FileKVStore(os.path.join(workdir, "kv"), num_shards=2),
+            ObjectStore(
+                backend=FileBackend(os.path.join(workdir, "obj"), fsync="never")
+            ),
+            FileKVStore(os.path.join(workdir, "kv"), num_shards=2, fsync="never"),
         )
     return ObjectStore(), KVStore(num_shards=2)
 
@@ -264,13 +287,91 @@ def map_throughput(rep, quick: bool = False) -> None:
 
 def map_throughput_file(rep, quick: bool = False) -> None:
     """Map throughput over the cross-process substrate (FileKVStore +
-    FileBackend): every control-plane op is a flock'd file transaction and
-    every result publish an fsync'd put, so this is the floor-gated canary
-    for event loss in the watcher plane — a missed wake turns into timeout
-    waits and collapses tasks/s."""
+    FileBackend): every control-plane op is a flock'd log transaction and
+    every result publish a file commit, so this is the floor-gated canary
+    for both event loss in the watcher plane (a missed wake turns into
+    timeout waits) and a regression to snapshot-per-op storage costs —
+    either collapses tasks/s."""
     plan = [(4, 64)] if quick else [(4, 128)]
     for num_workers, n_tasks in plan:
         _throughput(rep, num_workers, n_tasks, backend="file")
+
+
+def _file_substrate_ops(kv, n_ops: int) -> None:
+    """A representative KV op mix: batched staging (mset), queue churn
+    (rpush/lpop), counters, and point reads — the shapes the runtime's
+    control and data planes actually issue."""
+    for i in range(n_ops // 8):
+        kv.mset({f"stage/a{i}": i, f"stage/b{i}": [i] * 8}, worker="bench")
+        kv.rpush("queue", {"task": i, "payload": "x" * 64}, worker="bench")
+        kv.incr(f"ctr/{i % 7}", worker="bench")
+        kv.lpop("queue", worker="bench")
+        kv.get(f"stage/a{i}", worker="bench")
+        kv.eval(f"ev/{i % 5}", lambda v: (v or 0) + 1, worker="bench")
+        kv.rpush_many({f"q/{i % 3}": [i], f"q/{(i + 1) % 3}": [i]}, worker="bench")
+        kv.mget([f"stage/a{i}", f"stage/b{i}"], worker="bench")
+
+
+def file_substrate(rep, quick: bool = False) -> None:
+    """Price the two file-KV engines against each other under the
+    durability-policy sweep: ``engine="log"`` (PR 5, append-only per-shard
+    logs + compaction) vs ``engine="snapshot"`` (PR 4, whole-shard pickle
+    per transaction), each under at least two fsync policies.  The log
+    engine's win is structural — O(record) appends vs O(shard) rewrites —
+    while the fsync column isolates what durability itself costs on this
+    host (on network filesystems per-commit fsync dominates everything
+    else, which is why control keys default to it and data keys don't)."""
+    import tempfile
+
+    from repro.storage import FileKVStore
+
+    n_ops = 400 if quick else 1600
+    # Resident state sized like a real job's control plane (hundreds of
+    # lease-record-shaped values): the snapshot engine rewrites ALL of it
+    # on every op, the log engine appends one record — this is exactly the
+    # O(shard) vs O(record) gap the rows exist to show.
+    resident = 400 if quick else 1000
+    policies = ("batch", "commit") if quick else ("batch", "commit", "never")
+    for engine in ("log", "snapshot"):
+        for policy in policies:
+            with tempfile.TemporaryDirectory() as workdir:
+                kv = FileKVStore(
+                    os.path.join(workdir, "kv"), num_shards=2,
+                    engine=engine, fsync=policy,
+                )
+                try:
+                    kv.mset(
+                        {
+                            f"lease/{i}": {
+                                "worker": f"w{i % 16:04d}", "epoch": i,
+                                "expires": float(i), "started": float(i),
+                                "attempt": 0, "spec": list(range(16)),
+                            }
+                            for i in range(resident)
+                        },
+                        worker="bench",
+                    )
+                    _file_substrate_ops(kv, 64)  # warm (files created)
+                    mark = kv.disk_bytes_written()
+                    t0 = time.perf_counter()
+                    _file_substrate_ops(kv, n_ops)
+                    dt = time.perf_counter() - t0
+                    disk_bytes = kv.disk_bytes_written() - mark
+                finally:
+                    kv.close()
+            rep.row(
+                f"storage/file_substrate_{engine}_fsync-{policy}",
+                dt / n_ops * 1e6,
+                ops_per_s=round(n_ops / dt, 1),
+                engine=engine,
+                fsync=policy,
+                ops=n_ops,
+                resident_keys=resident,
+                # Deterministic structural metric: bytes the engine had to
+                # write for the same op mix (snapshot engine: O(shard) per
+                # commit; log engine: O(record) + occasional compaction).
+                disk_bytes_per_op=round(disk_bytes / n_ops, 1),
+            )
 
 
 def job_completion(rep, quick: bool = False) -> None:
@@ -300,7 +401,7 @@ def multi_driver(rep, quick: bool = False) -> None:
 
 
 ALL = [map_throughput, job_completion, speculation_sweep, multi_driver, shuffle_requests]
-FILE_BACKEND_BENCHES = [map_throughput_file]
+FILE_BACKEND_BENCHES = [map_throughput_file, file_substrate]
 
 
 def main(argv=None) -> int:

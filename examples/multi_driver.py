@@ -7,8 +7,21 @@ Here both the storage planes are **file-backed** (`FileBackend` +
 `FileKVStore`), the substrate that also works across real OS processes —
 driver B could be another process on the same filesystem and nothing below
 would change (`tests/test_multidriver.py` runs exactly that topology with
-a spawned subprocess; the cross-process wake is the seq-file watch
-described in docs/ARCHITECTURE.md).
+a spawned subprocess; the cross-process wake is the log-file watch
+described in docs/ARCHITECTURE.md).  Since PR 5 the file KV is
+log-structured: two handles over one directory see one keyspace, and each
+mutation is one appended record, not a shard rewrite:
+
+>>> import tempfile
+>>> from repro.storage import FileKVStore
+>>> root = tempfile.mkdtemp()
+>>> a = FileKVStore(root, num_shards=1)   # "driver A"
+>>> b = FileKVStore(root, num_shards=1)   # "driver B", same directory
+>>> a.rpush("sched/queue", "task-0", worker="A")
+1
+>>> b.lpop("sched/queue", worker="B")     # B replays A's appended frame
+'task-0'
+>>> a.close(); b.close()
 
 Driver A submits a word-count mapreduce; driver B never sees the submit —
 its workers lease map and reduce tasks straight off the shared queue, and

@@ -3,8 +3,11 @@
 Take existing single-machine code (a plain Python function) and run it at
 scale with one call — no cluster, no config.  Mirrors the PyWren README:
 
-    wex = WrenExecutor(num_workers=...)
-    futures = wex.map(my_function, my_data)
+>>> from repro.core import WrenExecutor, get_all
+>>> with WrenExecutor(num_workers=2) as wex:
+...     futures = wex.map(lambda x: x * x, [1, 2, 3])
+...     get_all(futures, timeout_s=60)
+[1, 4, 9]
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """

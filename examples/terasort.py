@@ -3,6 +3,15 @@
 Two-stage TeraSort over stateless functions with Redis-class intermediate
 storage; sweeps Redis shard counts to reproduce the paper's bottleneck
 analysis ('fully leveraging this parallelism requires more Redis shards').
+The shuffle's range partitioner is loss-free and ordered across partitions:
+
+>>> from repro.storage import shuffle as shf
+>>> splitters = shf.sample_splitters([5, 1, 9, 3, 7], 2)
+>>> parts = shf.range_partition([5, 1, 9, 3, 7], splitters)
+>>> sorted(x for p in parts for x in p)
+[1, 3, 5, 7, 9]
+>>> max(parts[0]) <= min(parts[1])
+True
 
 Run:  PYTHONPATH=src python examples/terasort.py
 """

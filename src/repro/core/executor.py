@@ -124,6 +124,11 @@ class Worker(threading.Thread):
         self._stop_evt = threading.Event()
         self._killed = False  # hard kill / injected death: leases dangle
         self._warm = False  # container temperature
+        # Warm-container code cache (paper §4): func blobs are content-
+        # addressed and immutable, so a reused container skips re-fetching
+        # and re-deserializing the function.  User/task state is NOT cached
+        # — statelessness applies to data, not immutable code.
+        self._code_cache: Dict[str, Callable] = {}
 
     # -- lifecycle ---------------------------------------------------------
     @property
@@ -152,13 +157,28 @@ class Worker(threading.Thread):
                 timeout_s=_LEASE_WAIT_S,
                 should_stop=self._stop_evt.is_set,
             )
+            # Prefetch the whole batch's inputs in one amortized multi-get
+            # (the PR-2 read-batching lesson applied to the worker): N leased
+            # tasks cost one request latency, not N.  The cache holds
+            # serialized BYTES, not objects — inputs are content-addressed,
+            # so two tasks with equal inputs share one key, and handing both
+            # the same deserialized object would let one task's mutation
+            # corrupt the other's input.  Each task deserializes its own
+            # copy (exactly what its own fetch would have produced).  A key
+            # that vanished (job GC'd mid-flight) is simply absent and the
+            # task falls back to its own fetch.
+            inputs = {}
+            if len(batch) > 1:
+                inputs = self.store.get_many_bytes(
+                    [t.input_key for t in batch], worker=self.worker_id
+                )
             for i, task in enumerate(batch):
                 if self._stop_evt.is_set():
                     self._drop_leases(batch[i:])
                     return
                 # heartbeat covers the whole held remainder of the batch, so
                 # queued-behind-current leases don't falsely expire
-                self._execute(task, held=batch[i:])
+                self._execute(task, held=batch[i:], inputs=inputs)
                 tasks_done += 1
                 cap = self.fault_plan.max_tasks_per_worker
                 if cap is not None and tasks_done >= cap:
@@ -173,7 +193,12 @@ class Worker(threading.Thread):
         for task in unstarted:
             self.scheduler.release(task, self.worker_id)
 
-    def _execute(self, task: TaskSpec, held: Optional[List[TaskSpec]] = None) -> None:
+    def _execute(
+        self,
+        task: TaskSpec,
+        held: Optional[List[TaskSpec]] = None,
+        inputs: Optional[Dict[str, object]] = None,
+    ) -> None:
         # cold-start accounting (virtual)
         if self._warm:
             setup_vtime = WARM_START_S
@@ -192,13 +217,15 @@ class Worker(threading.Thread):
         hb_tasks = held if held else [task]
 
         def _heartbeat() -> None:
-            while not hb_stop.is_set():
+            # The lease was granted with a full timeout moments ago, so the
+            # first extension is only due after one interval — beating
+            # immediately would add one KV transaction per task for nothing.
+            while not hb_stop.wait(self.scheduler.config.heartbeat_interval_s):
                 if self._killed:
                     return  # dead containers don't heartbeat; a *graceful*
                     # stop keeps the current task's lease alive to the end
                 for t in hb_tasks:
                     self.scheduler.heartbeat(t, self.worker_id)
-                hb_stop.wait(self.scheduler.config.heartbeat_interval_s)
 
         hb = threading.Thread(target=_heartbeat, daemon=True)
         hb.start()
@@ -238,6 +265,8 @@ class Worker(threading.Thread):
                 # the lease (zombie publishes are suppressed; scheduler.py
                 # documents the protocol).
                 fence=lambda: self.scheduler.owns_lease(task),
+                code_cache=self._code_cache,
+                input_cache=inputs,
             )
             vtotal = sum(result.phases.values())
             try:

@@ -32,6 +32,9 @@ import cloudpickle  # the paper's serializer [7]
 
 from repro.storage import ObjectStore, serialization
 
+# Bound on a warm container's deserialized-function cache (entries).
+_CODE_CACHE_MAX = 32
+
 
 @dataclass(frozen=True)
 class FunctionSpec:
@@ -156,6 +159,8 @@ def run_task(
     setup_vtime: float = 0.0,
     compute_time_fn: Optional[Callable[[float], float]] = None,
     fence: Optional[Callable[[], bool]] = None,
+    code_cache: Optional[Dict[str, Callable]] = None,
+    input_cache: Optional[Dict[str, Any]] = None,
 ) -> TaskResult:
     """The generic container entry point (the single registered Lambda).
 
@@ -197,9 +202,29 @@ def run_task(
 
     try:
         with _span("fetch_code"):
-            fn = pickle.loads(store.get_bytes(task.func_key, worker=worker))
+            # Warm-container code cache (paper §4: container reuse keeps the
+            # deserialized function around).  Safe because func keys are
+            # content-addressed and immutable — a hit is byte-identical to a
+            # re-fetch, it just skips the storage round trip (and its
+            # charge: a cached fetch moves no wire bytes).
+            fn = code_cache.get(task.func_key) if code_cache is not None else None
+            if fn is None:
+                fn = pickle.loads(store.get_bytes(task.func_key, worker=worker))
+                if code_cache is not None:
+                    code_cache[task.func_key] = fn
+                    while len(code_cache) > _CODE_CACHE_MAX:
+                        code_cache.pop(next(iter(code_cache)))
         with _span("fetch_input"):
-            arg = store.get(task.input_key, worker=worker)
+            # A worker that leased a batch prefetched all its inputs in one
+            # multi-get (already charged there).  The cache holds serialized
+            # bytes: deserializing here gives this task a private object, so
+            # sibling tasks sharing a content-addressed input can't observe
+            # each other's mutations.  Absent entries fall back to an
+            # individual fetch.
+            if input_cache is not None and task.input_key in input_cache:
+                arg = serialization.loads(input_cache[task.input_key])
+            else:
+                arg = store.get(task.input_key, worker=worker)
         t0 = time.perf_counter()
         value = fn(arg)
         real_compute = time.perf_counter() - t0

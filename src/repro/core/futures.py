@@ -40,15 +40,20 @@ class ResultFuture:
         self.store = store
         self.task = task
         self._cached: Optional[TaskResult] = None
+        self._seen_done = False  # result key observed present (sticky:
+        # publishes are if_absent, so a done future can never un-done)
 
     @property
     def result_key(self) -> str:
         return self.task.result_key
 
     def done(self) -> bool:
-        if self._cached is not None:
+        if self._cached is not None or self._seen_done:
             return True
-        return self.store.backend.exists(self.task.result_key)
+        if self.store.backend.exists(self.task.result_key):
+            self._seen_done = True
+            return True
+        return False
 
     def peek(self) -> Optional[TaskResult]:
         if self._cached is None and self.done():
@@ -93,7 +98,14 @@ def wait(
     put notifications, so a completing task re-evaluates the condition
     immediately instead of after a poll interval.  Purely event-driven for
     in-process backends; cross-process backends re-check on the store's
-    fallback tick (see ``ObjectStore.watch_tick_s``)."""
+    fallback tick (see ``ObjectStore.watch_tick_s``).
+
+    Each wake re-checks only the still-pending futures, in ONE batched
+    existence probe per store handle (``ObjectStore.exists_many``) — a
+    completion burst over an N-task map costs O(N) probes total, not
+    O(N²) per-key stats (a real round-trip each on a file/network
+    backend).  Doneness is sticky on the future (publishes are
+    ``if_absent``), so nothing already seen done is ever probed again."""
     deadline = time.monotonic() + timeout_s
     store = futures[0].store if futures else None
     backends = {id(f.store.backend) for f in futures}
@@ -105,20 +117,46 @@ def wait(
         tick = WATCH_FALLBACK_TICK_S if poll_s is None else poll_s
     else:
         tick = store.watch_tick_s(poll_s) if store is not None else poll_s
+    pending = [f for f in futures if not (f._cached is not None or f._seen_done)]
+    seq: Optional[int] = None
+    single_store = len({id(f.store) for f in futures}) <= 1 and len(backends) <= 1
     while True:
-        seq = store.put_seq() if store is not None else 0
-        done = [f for f in futures if f.done()]
-        not_done = [f for f in futures if not f.done()]
-        if return_when == ALWAYS:
-            return done, not_done
-        if return_when == ANY_COMPLETED and done:
-            return done, not_done
-        if return_when == ALL_COMPLETED and not not_done:
+        landed = None
+        if store is not None and single_store and tick is None and seq is not None:
+            # Incremental: recent put events name their keys, so pending
+            # futures retire with no backend probe at all (puts_since).
+            seq, landed = store.puts_since(seq)
+        elif store is not None:
+            seq = store.put_seq()
+        by_store: dict = {}
+        for f in pending:
+            by_store.setdefault(id(f.store), (f.store, []))[1].append(f)
+        still = []
+        for st, group in by_store.values():
+            if landed is not None:
+                present = landed
+            else:
+                present = st.exists_many(
+                    [f.result_key for f in group], worker="driver"
+                )
+            for f in group:
+                if f.result_key in present:
+                    f._seen_done = True
+                else:
+                    still.append(f)
+        pending = still
+        if (
+            return_when == ALWAYS
+            or (return_when == ANY_COMPLETED and len(pending) < len(futures))
+            or (return_when == ALL_COMPLETED and not pending)
+        ):
+            done = [f for f in futures if f._cached is not None or f._seen_done]
+            not_done = [f for f in futures if not (f._cached is not None or f._seen_done)]
             return done, not_done
         now = time.monotonic()
         if now > deadline:
             raise TimeoutError(
-                f"wait timed out with {len(not_done)}/{len(futures)} pending"
+                f"wait timed out with {len(pending)}/{len(futures)} pending"
             )
         remaining = deadline - now
         if store is not None:

@@ -94,6 +94,8 @@ _EPOCH = "sched/epoch/"  # fencing-token generator: sched/epoch/<task_id>
 _SPECMARK = "sched/specmark/"  # speculation dedupe marks (setnx)
 _FINISHED = "sched/finished/"  # per-job GC tombstones
 _JOBTASKS = "sched/jobtasks/"  # per-job task-id membership list
+_SPECCOUNT = "sched/speccount/"  # per-job duplicates enqueued (budget gate)
+_FENCED = "sched/fenced/"  # per-job fenced-zombie completions (feedback)
 
 # Cap for an untimed lease wait; workers are woken by writes/wake_workers,
 # so this only bounds how long a fully idle, never-notified wait can hold.
@@ -130,6 +132,17 @@ class SchedulerConfig:
     ``min_speculation_age_s`` floors both rules: with no-op tasks the
     distribution is microseconds wide and a millisecond-scale threshold
     would duplicate any task that merely hit a scheduler blip.
+
+    The duplicate *budget* (``speculation_budget_frac``) caps how many
+    duplicates one job may ever enqueue — ``max(1, frac × job size)`` —
+    across every driver (the count is a shared KV counter), so a sick job
+    cannot turn the cluster into a duplicate factory.  And fenced zombies
+    feed back: every attempt whose completion was fenced (it had been
+    reaped or superseded while actually still running) multiplies the
+    job's threshold by ``(1 + speculation_zombie_backoff × count)`` — a
+    job that keeps producing zombies was speculating on tasks that were
+    *alive*, so its threshold was too tight, and backing it off stops the
+    thrash.
     """
 
     lease_timeout_s: float = 1.0
@@ -139,15 +152,23 @@ class SchedulerConfig:
     speculation_k: float = 1.5
     min_completed_for_speculation: int = 5
     min_speculation_age_s: float = 0.05
+    speculation_budget_frac: float = 0.10
+    speculation_zombie_backoff: float = 1.0
     heartbeat_interval_s: float = 0.2
     idle_tick_s: float = 0.5  # control-loop fallback when no work in flight
 
-    def straggler_threshold_s(self, durations: List[float]) -> float:
+    def straggler_threshold_s(self, durations: List[float], fenced: int = 0) -> float:
         if self.speculation_factor is not None:
             base = self.speculation_factor * quantile(durations, 0.5)
         else:
             base = self.speculation_k * quantile(durations, self.speculation_quantile)
-        return max(base, self.min_speculation_age_s)
+        backoff = 1.0 + self.speculation_zombie_backoff * max(0, fenced)
+        return max(base, self.min_speculation_age_s) * backoff
+
+    def speculation_budget(self, n_tasks: int) -> int:
+        """Max duplicates a job of ``n_tasks`` may enqueue (≥ 1 so small
+        jobs can still hedge one straggler)."""
+        return max(1, int(self.speculation_budget_frac * n_tasks))
 
 
 class Scheduler:
@@ -178,6 +199,10 @@ class Scheduler:
         # the per-lease KV probe for jobs this handle already saw finish.
         self._finished_jobs: Set[str] = set()
         self._finished_order: Deque[str] = deque()
+        # Per-job (durations, fenced-zombie count) cache for speculate():
+        # one KV read set per heartbeat interval per job, not one per
+        # control-loop pass.  Entries: (read_at, durations, fenced).
+        self._dur_cache: Dict[str, Tuple[float, List[float], int]] = {}
         # Lease-index caches (lazy heaps; see module docstring).  Guarded by
         # self._lock.  KV lease records remain the source of truth.
         self._lease_heap: List[Tuple[float, str]] = []  # (expires, task_id)
@@ -319,58 +344,130 @@ class Scheduler:
     # ---- worker protocol --------------------------------------------------
     def _try_lease(self, worker: str) -> Optional[TaskSpec]:
         """Non-blocking: pop a task and take a fenced lease, or None."""
+        batch = self._try_lease_batch(worker, 1)
+        return batch[0] if batch else None
+
+    def _try_lease_batch(self, worker: str, max_n: int) -> List[TaskSpec]:
+        """Non-blocking: pop up to ``max_n`` tasks and take fenced leases,
+        in THREE pipelined KV round-trips per batch — ``lpop_n`` (one queue
+        transaction), one ``eval_many`` drawing every attempt counter and
+        fencing epoch, one ``eval_many`` installing every lease record —
+        plus one batched result-existence probe.  The pre-PR-5 path paid
+        four round-trips per *task*; on a file substrate each round-trip is
+        a real disk transaction, so batch leasing is what keeps worker
+        wake-to-running latency flat as batches widen.  Fencing semantics
+        are unchanged: every lease still draws its own epoch and installs
+        via the same higher-epoch-wins CAS, and a lost install race refunds
+        the attempt charge exactly as before."""
         while True:
-            task: Optional[TaskSpec] = self.kv.lpop(_Q, worker=worker)
-            if task is None:
-                return None
-            if self._job_finished(task.job_id):
-                continue  # stale duplicate of a GC'd job: drop, don't resurrect
-            if self.store.backend.exists(task.result_key):
-                continue  # already done (speculative duplicate became moot)
-            attempts = self.kv.incr(_ATTEMPTS + task.task_id, 1, worker=worker)
-            if attempts > self.config.max_attempts:
-                continue  # dropped; driver will surface missing-result error
-            epoch = int(self.kv.incr(_EPOCH + task.task_id, 1, worker=worker))
+            popped: List[TaskSpec] = self.kv.lpop_n(_Q, max_n, worker=worker)
+            if not popped:
+                return []
+            # A batch can pop two queue entries of ONE task (a straggler and
+            # its speculative duplicate): one lease is enough, the extra
+            # entry is simply consumed.
+            seen: Set[str] = set()
+            live: List[TaskSpec] = []
+            for t in popped:
+                if t.task_id in seen or self._job_finished(t.job_id):
+                    continue  # stale duplicate of a GC'd job: drop, don't resurrect
+                seen.add(t.task_id)
+                live.append(t)
+            if not live:
+                continue
+
+            def _incr(v):
+                return int(v or 0) + 1
+
+            counters: Dict[str, Callable] = {}
+            for t in live:
+                counters[_ATTEMPTS + t.task_id] = _incr
+            for t in live:
+                counters[_EPOCH + t.task_id] = _incr
+            res = self.kv.eval_many(counters, default=0, worker=worker)
+            # Result-existence probe, for RETRIES AND DUPLICATES ONLY (one
+            # batched round-trip): a first attempt (attempts == 1) cannot
+            # have a published result — releases refund their charge and GC
+            # tombstones drop stale entries above — so the common fresh-task
+            # path skips the probe entirely.
+            maybe_done = [
+                t for t in live if int(res[_ATTEMPTS + t.task_id]) > 1
+            ]
+            done = (
+                self.store.backend.exists_many([t.result_key for t in maybe_done])
+                if maybe_done
+                else set()
+            )
             now = time.monotonic()
             expires = now + self.config.lease_timeout_s
-            spec = task.unleased()
-            record = {
-                "worker": worker,
-                "epoch": epoch,
-                "expires": expires,
-                "started": now,
-                "attempt": int(attempts) - 1,
-                "spec": spec,
-            }
+            candidates = []
+            installs: Dict[str, Callable] = {}
+            for t in live:
+                attempts = int(res[_ATTEMPTS + t.task_id])
+                if t.result_key in done:
+                    # already done (speculative duplicate became moot): undo
+                    # the attempt charge — nothing will execute
+                    self.kv.incr(_ATTEMPTS + t.task_id, -1, worker=worker)
+                    continue
+                if attempts > self.config.max_attempts:
+                    # dropped; driver will surface missing-result error (the
+                    # epoch drawn above is burned, which fences nothing real)
+                    continue
+                epoch = int(res[_EPOCH + t.task_id])
+                spec = t.unleased()
+                record = {
+                    "worker": worker,
+                    "epoch": epoch,
+                    "expires": expires,
+                    "started": now,
+                    "attempt": attempts - 1,
+                    "spec": spec,
+                }
 
-            def _install(cur, record=record):
-                # Two handles can pop duplicate queue entries of one task
-                # concurrently; the higher epoch wins the record (it fenced
-                # the lower at the epoch counter), never the later writer.
-                if cur is not None and int(cur.get("epoch", 0)) > record["epoch"]:
-                    return cur
-                return record
+                def _install(cur, record=record):
+                    # Two handles can pop duplicate queue entries of one task
+                    # concurrently; the higher epoch wins the record (it
+                    # fenced the lower at the epoch counter), never the
+                    # later writer.
+                    if cur is not None and int(cur.get("epoch", 0)) > record["epoch"]:
+                        return cur
+                    return record
 
-            installed = self.kv.eval(_LEASE + task.task_id, _install, worker=worker)
-            if int(installed.get("epoch", 0)) != epoch:
-                # Lost the duplicate race; that attempt owns it.  Undo the
-                # attempt charge — this pop executed nothing, and burned
-                # charges would let race losses push a task over
-                # max_attempts without max_attempts real executions.
-                self.kv.incr(_ATTEMPTS + task.task_id, -1, worker=worker)
-                continue
-            with self._lock:
-                self._specs[task.task_id] = spec
-                self._jobs.setdefault(task.job_id, set()).add(task.task_id)
-                self._active_leases += 1
-                self._hinted.add(task.task_id)
-                heapq.heappush(self._lease_heap, (expires, task.task_id))
-                heapq.heappush(
-                    self._start_heaps.setdefault(task.job_id, []),
-                    (now, task.task_id),
-                )
-            leased = task if attempts == 1 else task.retry()
-            return leased.with_epoch(epoch)
+                installs[_LEASE + t.task_id] = _install
+                candidates.append((t, spec, epoch, attempts))
+            leased: List[TaskSpec] = []
+            if installs:
+                out = self.kv.eval_many(installs, worker=worker)
+                refunds = []
+                for t, spec, epoch, attempts in candidates:
+                    if int(out[_LEASE + t.task_id].get("epoch", 0)) != epoch:
+                        # Lost the duplicate race; that attempt owns it.
+                        # Undo the attempt charge — this pop executed
+                        # nothing, and burned charges would let race losses
+                        # push a task over max_attempts without max_attempts
+                        # real executions.
+                        refunds.append(t.task_id)
+                        continue
+                    with self._lock:
+                        self._specs[t.task_id] = spec
+                        self._jobs.setdefault(t.job_id, set()).add(t.task_id)
+                        self._active_leases += 1
+                        self._hinted.add(t.task_id)
+                        heapq.heappush(self._lease_heap, (expires, t.task_id))
+                        heapq.heappush(
+                            self._start_heaps.setdefault(t.job_id, []),
+                            (now, t.task_id),
+                        )
+                    won = t if attempts == 1 else t.retry()
+                    leased.append(won.with_epoch(epoch))
+                if refunds:
+                    self.kv.eval_many(
+                        {_ATTEMPTS + tid: (lambda v: int(v or 0) - 1) for tid in refunds},
+                        default=0,
+                        worker=worker,
+                    )
+            if leased:
+                return leased
 
     def lease_next(self, worker: str) -> Optional[TaskSpec]:
         """Atomically pop a task and take its lease (non-blocking)."""
@@ -391,12 +488,7 @@ class Scheduler:
         re-checks its own state and may call again."""
         deadline = None if timeout_s is None else time.monotonic() + timeout_s
         while True:
-            batch: List[TaskSpec] = []
-            while len(batch) < max_n:
-                task = self._try_lease(worker)
-                if task is None:
-                    break
-                batch.append(task)
+            batch = self._try_lease_batch(worker, max_n)
             if batch:
                 return batch
             # Snapshot the shard sequence *before* checking should_stop and
@@ -473,6 +565,12 @@ class Scheduler:
             won = False
         elif won:
             self.kv.rpush(_DURATION + task.job_id, duration_s, worker=worker)
+        else:
+            # A fenced zombie ran to completion: it was reaped or superseded
+            # while actually alive.  Count it per job — the speculation rule
+            # reads this back and raises the job's threshold, so a job that
+            # keeps fencing zombies stops speculating (see SchedulerConfig).
+            self.kv.incr(_FENCED + task.job_id, 1, worker=worker)
         self._activity_evt.set()
         return won
 
@@ -587,9 +685,12 @@ class Scheduler:
         """Enqueue duplicates of straggling tasks. Returns count.
 
         Per-job start heaps pop exactly the candidates whose elapsed time
-        crossed the straggler threshold (quantile-adaptive; see
-        ``SchedulerConfig``).  The duplicate mark is a KV ``setnx`` —
-        N drivers speculating the same job enqueue each straggler once."""
+        crossed the straggler threshold (quantile-adaptive, multiplied by
+        the job's fenced-zombie backoff; see ``SchedulerConfig``).  The
+        duplicate mark is a KV ``setnx`` — N drivers speculating the same
+        job enqueue each straggler once — and the per-job duplicate BUDGET
+        is a shared KV counter gated by an atomic ``incr``, so all drivers
+        together never exceed ``speculation_budget(job size)``."""
         n = 0
         now = time.monotonic()
         with self._lock:
@@ -602,11 +703,19 @@ class Scheduler:
                 # the heap on the next lease).
                 if not self._start_heaps.get(job_id):
                     self._start_heaps.pop(job_id, None)
+                    self._dur_cache.pop(job_id, None)  # don't leak foreign jobs
                     continue
-            durations: List[float] = self.kv.lrange(_DURATION + job_id, worker="scheduler")
+            cached = self._dur_cache.get(job_id)
+            if cached is not None and now - cached[0] < self.config.heartbeat_interval_s:
+                durations, fenced = cached[1], cached[2]
+            else:
+                durations = self.kv.lrange(_DURATION + job_id, worker="scheduler")
+                fenced = int(self.kv.get(_FENCED + job_id, 0, worker="scheduler") or 0)
+                self._dur_cache[job_id] = (now, durations, fenced)
             if len(durations) < self.config.min_completed_for_speculation:
                 continue
-            cutoff = now - self.config.straggler_threshold_s(durations)
+            cutoff = now - self.config.straggler_threshold_s(durations, fenced=fenced)
+            budget: Optional[int] = None  # resolved lazily, on first candidate
             while True:
                 with self._lock:
                     heap = self._start_heaps.get(job_id)
@@ -626,11 +735,28 @@ class Scheduler:
                     continue
                 if self.store.backend.exists(spec.result_key):
                     continue
+                if budget is None:
+                    # Resolved once per job pass (two KV reads), on the first
+                    # real candidate; within the pass the atomic incr below
+                    # is the only gate — it alone is what's race-free across
+                    # drivers anyway.
+                    n_tasks = self.kv.llen(_JOBTASKS + job_id, worker="scheduler")
+                    budget = self.config.speculation_budget(n_tasks)
+                    used = int(
+                        self.kv.get(_SPECCOUNT + job_id, 0, worker="scheduler") or 0
+                    )
+                    if used >= budget:
+                        break  # job's duplicate budget spent (across all drivers)
                 if not self.kv.setnx(_SPECMARK + task_id, 1, worker="scheduler"):
                     # Another driver already duplicated this straggler.
                     with self._lock:
                         self._speculated.add(task_id)
                     continue
+                # The atomic incr is the budget gate across drivers: whoever
+                # pushes the count past the budget undoes its own duplicate.
+                if self.kv.incr(_SPECCOUNT + job_id, 1, worker="scheduler") > budget:
+                    self.kv.incr(_SPECCOUNT + job_id, -1, worker="scheduler")
+                    break
                 with self._lock:
                     self._speculated.add(task_id)
                 self.kv.rpush(_Q, spec, worker="scheduler")
@@ -659,6 +785,7 @@ class Scheduler:
                 self._specs.pop(tid, None)
                 self._speculated.discard(tid)
             self._start_heaps.pop(job_id, None)
+            self._dur_cache.pop(job_id, None)
         if already:
             return 0  # another handle (or an earlier call) already freed it
         # Batched KV cleanup: one amortized round-trip per shard, and the
@@ -672,7 +799,8 @@ class Scheduler:
             [_ATTEMPTS + tid for tid in task_ids]
             + [_EPOCH + tid for tid in task_ids]
             + [_SPECMARK + tid for tid in task_ids]
-            + [_DURATION + job_id, _JOBTASKS + job_id],
+            + [_DURATION + job_id, _JOBTASKS + job_id]
+            + [_SPECCOUNT + job_id, _FENCED + job_id],
             worker="scheduler",
         )
         self.store.delete_prefix(f"result/{job_id}/", worker="scheduler")

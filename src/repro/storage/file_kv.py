@@ -1,42 +1,67 @@
-"""Cross-process KV store over a shared directory.
+"""Cross-process KV store over a shared directory — log-structured.
 
 The in-memory :class:`~repro.storage.kv_store.KVStore` models ElastiCache
 for a single driver process.  A *multi-process* driver — the paper's "N
 concurrent drivers are as elastic as the workers" end state — needs the
 same Redis semantics reachable from every process, so this module gives the
 KV a file substrate with the same public API and the same per-shard
-accounting:
+accounting.  Since PR 5 the substrate is **log-structured**: the whole-shard
+``pickle.dump``-per-transaction engine (PR 4) paid O(shard size) for every
+op; this one pays O(record):
 
-  * **per-shard state files** — each shard is one pickled dict
-    (``shard-N.pkl``), rewritten atomically (temp + ``os.replace``) on
-    every write transaction.  Control-plane state (queues of task specs,
-    lease records, counters) is small, so whole-shard rewrite is the
-    simplest correct granularity;
-  * **cross-process atomicity** — every operation is a transaction under
-    the shard's ``flock`` (``shard-N.lock``): load state, apply, store.
-    The in-process shard lock is taken first (threads serialize on it; a
-    single ``flock`` fd is per open-file-description, not per thread), the
-    file lock second (processes serialize on it).  ``eval`` therefore keeps
-    its server-side-scripting guarantee across processes: the update
-    function runs while the shard is locked machine-wide;
-  * **per-shard seq files** — each write transaction appends one byte to
-    ``shard-N.seq`` *while still holding the flock*; the file's size is the
-    shard's cross-process write sequence.  A waiter-gated
-    :class:`~repro.storage.object_store._PollWatcher` (same exponential-
-    backoff design as ``FileBackend``'s) stats the seq files and converts a
-    foreign process's writes into this process's shard-condition
-    broadcasts, so ``blpop``/``wait_key`` block event-driven across
-    processes — a worker pool in process B wakes on a queue push from
-    process A without any fallback tick;
-  * **snapshot cache** — the shard state is cached per process keyed by
-    seq-file size: a transaction that finds the size unchanged reuses the
-    cached dict instead of re-unpickling, so a busy single process pays
-    pickling only when another process actually wrote.
+  * **per-shard append-only logs** — every commit appends one framed record
+    batch (:func:`~repro.storage.kv_store.encode_frame`) to ``shard-N.log``
+    under the shard's ``flock``.  A batched op (``mset``/``rpush_many``/
+    ``eval_many``/``mdel``) is **one multi-record frame** — one disk append
+    per shard touched, not N snapshot rewrites;
+  * **replay-the-tail reads** — each process keeps a materialized snapshot
+    of the shard keyed by ``(generation, log offset)``; a transaction that
+    finds the log unchanged reuses it outright, one that finds it grown
+    replays only the tail it hasn't seen.  Deltas (not operations) are
+    logged, so replay is pure assignment — see ``apply_record``;
+  * **the log file is the seq** — the log's stat signature *is* the shard's
+    cross-process write sequence (PR 4's separate ``.seq`` file and its
+    double write are gone).  The same waiter-gated watcher
+    (:class:`~repro.storage.object_store._PollWatcher`, inotify-backed on
+    Linux) watches log sizes directly and converts foreign appends into
+    this process's shard-condition broadcasts, so ``blpop``/``wait_key``
+    block event-driven across processes;
+  * **compaction** — when a shard's log outgrows
+    ``max(compact_min_bytes, compact_ratio × last snapshot size)``, the
+    live state is rewritten as the generation-suffixed
+    ``shard-N.snap.{G+1}`` (pickled ``(G+1, state)``, fsynced, atomic
+    rename) and the log is replaced by a fresh one carrying G+1 in its
+    header (the G snapshot is unlinked).  Every step is crash-safe: a
+    reader pairs a log strictly with its own generation's snapshot, so a
+    crash between the two renames leaves the new snapshot inert — the old
+    log (and anything a live peer appends to it afterwards) keeps reading
+    correctly, and the stale snapshot is overwritten by the next
+    successful compaction;
+  * **crash safety at the record level** — a writer killed mid-append
+    leaves a torn tail; length/CRC framing detects it, replay stops at the
+    committed prefix, and the next writer truncates the garbage before
+    appending (it holds the exclusive flock, so this is race-free).
 
-Durability note: shard files are replaced atomically but *not* fsynced —
-the KV is the coordination plane (leases, queues, counters), all of it
-reconstructible or re-drivable after a crash, unlike the object store's
-checkpoint writes which do fsync.
+Durability is a **policy**, not a constant (``fsync=``):
+
+  ========== =========================================================
+  ``auto``    (default) fsync per commit for control keys — any key
+              under ``durable_prefixes`` (``sched/``) — batched for
+              data-plane keys: control transitions survive a machine
+              crash, bulk churn rides the page cache
+  ``commit``  fsync after every commit
+  ``batch``   fsync after every ``fsync_batch_n`` commits (group
+              commit; also flushed at compaction and ``close``)
+  ``never``   OS-buffered only (the PR-4 behavior)
+  ========== =========================================================
+
+Note that *visibility* is independent of fsync — commits are in the page
+cache the instant the flock drops, so other processes always see them;
+the policy only decides what survives a machine (not process) crash.
+
+The PR-4 snapshot-per-transaction engine survives as ``engine="snapshot"``
+for measurement (``benchmarks/microbench.py file_substrate`` prices both);
+``engine="log"`` is the default.
 
 Virtual-time charging is identical to the in-memory KV (same op names,
 same per-shard amortization), so benchmarks and ledgers compare directly.
@@ -49,30 +74,410 @@ import os
 import pickle
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-from .kv_store import DELETE, KVStore, _sizeof
+from .kv_store import (
+    DELETE,
+    LOG_HEADER_SIZE,
+    KVStore,
+    _sizeof,
+    apply_record,
+    decode_log_header,
+    encode_frame,
+    encode_log_header,
+    iter_frames,
+)
 from .object_store import Ledger, _PollWatcher
 from .perf_model import REDIS_2017, StorageProfile
 
+# Commit fsync modes an engine understands (derived from the store policy).
+_SYNC, _LAZY, _NONE = "sync", "lazy", "none"
+
 
 class _Txn:
-    """One shard transaction: mutate ``state`` and set ``dirty`` to flush."""
+    """One shard transaction: a mutable ``state`` dict plus the framed
+    state-delta ``records`` that describe every mutation made to it.  The
+    helpers mutate and record in one step so state and log can't drift."""
 
-    __slots__ = ("state", "dirty")
+    __slots__ = ("state", "records")
 
     def __init__(self, state: Dict[str, Any]) -> None:
         self.state = state
-        self.dirty = False
+        self.records: List[Tuple[str, str, Any]] = []
+
+    def put(self, key: str, value: Any) -> None:
+        self.state[key] = value
+        self.records.append(("s", key, value))
+
+    def drop(self, key: str) -> bool:
+        existed = self.state.pop(key, _MISS) is not _MISS
+        if existed:
+            self.records.append(("d", key, None))
+        return existed
+
+    def extend(self, key: str, values: List[Any]) -> List[Any]:
+        lst = self.state.setdefault(key, [])
+        lst.extend(values)
+        self.records.append(("a", key, list(values)))
+        return lst
+
+    def popleft(self, key: str) -> Any:
+        """Pop the head, or the ``_MISS`` sentinel when the list is empty —
+        a stored ``None`` is a real element and must round-trip (Redis LPOP
+        nil vs. stored-empty distinction)."""
+        lst = self.state.get(key)
+        if not lst:
+            return _MISS
+        value = lst.pop(0)
+        self.records.append(("p", key, 1))
+        return value
+
+    def popleft_n(self, key: str, max_n: int) -> List[Any]:
+        lst = self.state.get(key)
+        out = list(lst[:max_n]) if lst else []
+        if out:
+            del lst[: len(out)]
+            self.records.append(("p", key, len(out)))
+        return out
+
+
+_MISS = object()
+
+
+class _LogShard:
+    """One shard's log-structured engine.  Every method runs under the
+    shard's exclusive ``flock`` (the store guarantees it), so file mutations
+    never race; the generation header makes cross-process cache validation
+    exact (see module docstring for the protocol)."""
+
+    def __init__(
+        self,
+        root: str,
+        sidx: int,
+        *,
+        compact_min_bytes: int,
+        compact_ratio: float,
+        fsync_batch_n: int,
+    ) -> None:
+        self.log_path = os.path.join(root, f"shard-{sidx}.log")
+        # Snapshots are GENERATION-SUFFIXED (shard-N.snap.G): recovery pairs
+        # a log strictly with its own generation's snapshot, so a crash
+        # between compaction's two renames leaves a gen-G+1 snapshot that is
+        # simply ignored (and later overwritten) while the gen-G log — and
+        # any frames a live peer appended to it after the crash — replays
+        # over the gen-G snapshot with nothing lost.
+        self.snap_base = os.path.join(root, f"shard-{sidx}.snap")
+        self._compact_min_bytes = compact_min_bytes
+        self._compact_ratio = compact_ratio
+        self._fsync_batch_n = fsync_batch_n
+        self._fd: Optional[int] = None
+        self._ino = -1
+        self._gen = 0
+        self._state: Optional[Dict[str, Any]] = None
+        self._valid_end = 0  # committed prefix: absolute offset of last whole frame
+        self._file_size = 0  # actual size (== _valid_end unless the tail is torn)
+        self._snap_bytes = 0
+        self._pending_syncs = 0
+        self.bytes_written = 0  # real bytes this process wrote to disk (bench metric)
+
+    # The log's stat signature is the cross-process write sequence.
+    @property
+    def watch_path(self) -> str:
+        return self.log_path
+
+    # ---- file plumbing --------------------------------------------------
+    def _open_fd(self) -> None:
+        if self._fd is not None:
+            os.close(self._fd)
+        self._fd = os.open(self.log_path, os.O_RDWR)
+        self._ino = os.fstat(self._fd).st_ino
+
+    def _write_fresh_log(self, generation: int) -> None:
+        """Install an empty log carrying ``generation`` via atomic rename
+        (a log file is *always* whole: it either exists with a full header
+        or not at all)."""
+        tmp = f"{self.log_path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(encode_log_header(generation))
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self.log_path)
+        self._open_fd()
+        self._gen = generation
+        self._valid_end = self._file_size = LOG_HEADER_SIZE
+        self._pending_syncs = 0
+
+    def _snap_path(self, generation: int) -> str:
+        return f"{self.snap_base}.{generation}"
+
+    def _read_snapshot(self, generation: int) -> Dict[str, Any]:
+        """State at ``generation``'s compaction point.  Generation 0 has no
+        snapshot by construction.  Absence of the file is legitimate (never
+        compacted at this generation); any OTHER error is re-raised — a
+        transient EMFILE/EIO treated as "empty" would rebuild wrong state
+        and then commit deltas against it."""
+        if generation == 0:
+            self._snap_bytes = 0
+            return {}
+        try:
+            with open(self._snap_path(generation), "rb") as f:
+                blob = f.read()
+        except FileNotFoundError:
+            self._snap_bytes = 0
+            return {}
+        gen, state = pickle.loads(blob)
+        if int(gen) != generation:  # pragma: no cover - naming guarantees it
+            raise RuntimeError(
+                f"snapshot {self._snap_path(generation)} carries gen {gen}"
+            )
+        self._snap_bytes = len(blob)
+        return dict(state)
+
+    def _latest_snapshot_gen(self) -> int:
+        """Highest generation with a snapshot on disk (0 if none) — the
+        fallback anchor when a log header is unreadable."""
+        best = 0
+        prefix = os.path.basename(self.snap_base) + "."
+        try:
+            names = os.listdir(os.path.dirname(self.snap_base))
+        except OSError:
+            return 0
+        for name in names:
+            if name.startswith(prefix):
+                try:
+                    best = max(best, int(name[len(prefix):]))
+                except ValueError:
+                    continue
+        return best
+
+    # ---- load / replay --------------------------------------------------
+    def load(self) -> Dict[str, Any]:
+        """Current shard state (must hold the flock).  Fast path: log inode
+        and size unchanged → reuse the materialized snapshot; grown → replay
+        only the tail; anything else (compaction by a peer, first touch,
+        crash leftovers) → full reload."""
+        try:
+            pst = os.stat(self.log_path)
+        except FileNotFoundError:
+            return self._reload()
+        if (
+            self._state is not None
+            and pst.st_ino == self._ino
+            and self._file_size == self._valid_end  # no torn tail on record
+        ):
+            if pst.st_size == self._file_size:
+                return self._state  # unchanged: reuse outright
+            if pst.st_size > self._valid_end:
+                self._replay_tail(pst.st_size)  # grown: replay only the tail
+                return self._state
+            # Shrunk: offsets can't be trusted — reload.
+        # Note the cached-torn-tail case always reloads: size alone can't
+        # distinguish "garbage still there" from "a peer truncated it and
+        # committed exactly as many bytes" — trusting the stale offsets
+        # there would let our next commit ftruncate a peer's frame away.
+        return self._reload()
+
+    def _replay_tail(self, size: int) -> None:
+        tail = os.pread(self._fd, size - self._valid_end, self._valid_end)
+        end = 0
+        for records, end in iter_frames(tail):
+            for rec in records:
+                apply_record(self._state, rec)
+        self._valid_end += end
+        self._file_size = size  # > _valid_end iff the tail is torn
+
+    def _reload(self) -> Dict[str, Any]:
+        try:
+            with open(self.log_path, "rb") as f:
+                buf = f.read()
+        except FileNotFoundError:
+            buf = None
+        log_gen = decode_log_header(buf) if buf is not None else None
+        if log_gen is None:
+            # Log missing or header unreadable (external truncation; our own
+            # log creation is atomic).  Anchor on the newest snapshot — the
+            # log's post-snapshot frames are unrecoverable without a header,
+            # but the snapshot state is — and install a fresh log there.
+            gen = self._latest_snapshot_gen()
+            self._state = self._read_snapshot(gen)
+            self._write_fresh_log(gen)
+            return self._state
+        # The log's own generation names its snapshot: a crashed compaction
+        # may have left a NEWER snapshot (gen+1) behind, but this log — and
+        # anything a live peer appended to it since — pairs with gen's, so
+        # nothing committed is ever discarded.  The stale gen+1 snapshot is
+        # overwritten by the next successful compaction.
+        self._state = self._read_snapshot(log_gen)
+        self._open_fd()
+        self._gen = log_gen
+        # Replay from the buffer already in hand (one read, not a second
+        # pread of the same bytes through the fd).
+        end = LOG_HEADER_SIZE
+        for records, end in iter_frames(buf, LOG_HEADER_SIZE):
+            for rec in records:
+                apply_record(self._state, rec)
+        self._valid_end = end
+        self._file_size = len(buf)
+        return self._state
+
+    # ---- commit / compaction -------------------------------------------
+    def commit(self, state: Dict[str, Any], records: List[tuple], mode: str) -> None:
+        """Append one frame for this transaction's records (must hold the
+        flock; ``state`` is the dict ``load`` returned, already mutated)."""
+        if self._file_size > self._valid_end:
+            # A crashed writer's torn tail sits after the committed prefix;
+            # drop it so our frame lands contiguously (flock makes this safe).
+            os.ftruncate(self._fd, self._valid_end)
+            self._file_size = self._valid_end
+        frame = encode_frame(records)
+        written = 0
+        while written < len(frame):
+            # pwrite may write short (ENOSPC mid-frame returns a count, not
+            # an exception): advancing offsets on a short write would record
+            # a phantom commit that replay drops at the torn frame.
+            n = os.pwrite(self._fd, frame[written:], self._valid_end + written)
+            if n <= 0:
+                raise OSError(f"short log append: {written}/{len(frame)} bytes")
+            written += n
+        self._valid_end += len(frame)
+        self._file_size = self._valid_end
+        self.bytes_written += len(frame)
+        self._pending_syncs += 1
+        if mode == _SYNC or (
+            mode == _LAZY and self._pending_syncs >= self._fsync_batch_n
+        ):
+            self.sync()
+        log_bytes = self._valid_end - LOG_HEADER_SIZE
+        if log_bytes >= max(
+            self._compact_min_bytes, self._compact_ratio * self._snap_bytes
+        ):
+            self._compact(state)
+
+    def sync(self) -> None:
+        if self._fd is not None and self._pending_syncs:
+            os.fsync(self._fd)
+            self._pending_syncs = 0
+
+    def _publish_snapshot(self, state: Dict[str, Any]) -> int:
+        """Step 1 of compaction: land ``(gen+1, state)`` as the gen+1
+        snapshot via fsync + atomic rename.  Split out so crash tests can
+        stop here — until step 2 swaps the log, the gen+1 snapshot is inert
+        (readers pair the gen-G log with the gen-G snapshot), so the state
+        must read back identically, including later appends by live
+        peers."""
+        new_gen = self._gen + 1
+        blob = pickle.dumps((new_gen, state), protocol=pickle.HIGHEST_PROTOCOL)
+        tmp = f"{self.snap_base}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, self._snap_path(new_gen))
+        self._snap_bytes = len(blob)
+        self.bytes_written += len(blob)
+        return new_gen
+
+    def _compact(self, state: Dict[str, Any]) -> None:
+        """Rewrite live state as a snapshot and truncate the log (both via
+        atomic rename).  Crash-safe: until step 2 installs the gen+1 log,
+        the gen+1 snapshot is ignored by every reader; after it, the old
+        generation's snapshot is garbage and is unlinked best-effort."""
+        old_gen = self._gen
+        new_gen = self._publish_snapshot(state)
+        self._write_fresh_log(new_gen)
+        if old_gen:
+            try:
+                os.unlink(self._snap_path(old_gen))
+            except OSError:
+                pass
+
+    def invalidate(self) -> None:
+        """Drop the materialized snapshot (a transaction body raised after
+        mutating it): the next load replays from disk."""
+        self._state = None
+
+    def close(self) -> None:
+        if self._fd is not None:
+            self.sync()
+            os.close(self._fd)
+            self._fd = None
+        self._state = None  # a reused handle reloads (and reopens) cleanly
+
+
+class _SnapshotShard:
+    """The PR-4 engine: whole-shard pickle per transaction, per-shard seq
+    file appended under the flock.  O(shard size) per op — kept only so the
+    microbench can price the log engine against it (``engine="snapshot"``)."""
+
+    def __init__(self, root: str, sidx: int, *, fsync_batch_n: int) -> None:
+        self.data_path = os.path.join(root, f"shard-{sidx}.pkl")
+        self.seq_path = os.path.join(root, f"shard-{sidx}.seq")
+        self._fsync_batch_n = fsync_batch_n
+        self._snap: Optional[Tuple[int, Dict[str, Any]]] = None
+        self._pending_syncs = 0
+        self.bytes_written = 0  # real bytes this process wrote to disk (bench metric)
+
+    @property
+    def watch_path(self) -> str:
+        return self.seq_path
+
+    def load(self) -> Dict[str, Any]:
+        try:
+            size = os.path.getsize(self.seq_path)
+        except OSError:
+            size = 0
+        if self._snap is not None and self._snap[0] == size:
+            return self._snap[1]
+        try:
+            with open(self.data_path, "rb") as f:
+                state = pickle.load(f)
+        except (OSError, EOFError):
+            state = {}
+        self._snap = (size, state)
+        return state
+
+    def commit(self, state: Dict[str, Any], records: List[tuple], mode: str) -> None:
+        tmp = f"{self.data_path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        self._pending_syncs += 1
+        durable = mode == _SYNC or (
+            mode == _LAZY and self._pending_syncs >= self._fsync_batch_n
+        )
+        with open(tmp, "wb") as f:
+            pickle.dump(state, f, protocol=pickle.HIGHEST_PROTOCOL)
+            if durable:
+                f.flush()
+                os.fsync(f.fileno())
+                self._pending_syncs = 0
+            self.bytes_written += f.tell() + 1  # whole snapshot + the seq byte
+        os.replace(tmp, self.data_path)
+        fd = os.open(self.seq_path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            os.write(fd, b"x")
+        finally:
+            os.close(fd)
+        try:
+            size = os.path.getsize(self.seq_path)
+        except OSError:
+            size = 0
+        self._snap = (size, state)
+
+    def sync(self) -> None:
+        self._pending_syncs = 0
+
+    def invalidate(self) -> None:
+        self._snap = None
+
+    def close(self) -> None:
+        pass
 
 
 class FileKVStore(KVStore):
     """Sharded KV store over a shared directory (cross-process Redis model).
 
     Same public API and notification contract as :class:`KVStore`; see the
-    module docstring for the substrate.  Construct one handle per process
-    over the same ``root`` — all handles see one keyspace and wake each
-    other's waiters."""
+    module docstring for the log-structured substrate and the durability
+    policy.  Construct one handle per process over the same ``root`` — all
+    handles see one keyspace and wake each other's waiters."""
 
     def __init__(
         self,
@@ -80,24 +485,62 @@ class FileKVStore(KVStore):
         num_shards: int = 1,
         profile: StorageProfile = REDIS_2017,
         ledger: Optional[Ledger] = None,
+        *,
+        engine: str = "log",
+        fsync: str = "auto",
+        durable_prefixes: Tuple[str, ...] = ("sched/",),
+        fsync_batch_n: int = 64,
+        compact_min_bytes: int = 64 * 1024,
+        compact_ratio: float = 4.0,
     ) -> None:
+        if engine not in ("log", "snapshot"):
+            raise ValueError(f"engine must be 'log' or 'snapshot', got {engine!r}")
+        if fsync == "always":
+            fsync = "commit"  # FileBackend's name for the same policy
+        if fsync not in ("auto", "commit", "batch", "never"):
+            raise ValueError(f"unknown fsync policy {fsync!r}")
         super().__init__(num_shards=num_shards, profile=profile, ledger=ledger)
         self.root = os.path.abspath(root)
+        self.engine = engine
+        self.fsync = fsync
+        self.durable_prefixes = tuple(durable_prefixes)
         os.makedirs(self.root, exist_ok=True)
+        if engine == "log":
+            self._engines = [
+                _LogShard(
+                    self.root,
+                    i,
+                    compact_min_bytes=compact_min_bytes,
+                    compact_ratio=compact_ratio,
+                    fsync_batch_n=fsync_batch_n,
+                )
+                for i in range(num_shards)
+            ]
+        else:
+            self._engines = [
+                _SnapshotShard(self.root, i, fsync_batch_n=fsync_batch_n)
+                for i in range(num_shards)
+            ]
         self._lock_fds: List[Optional[int]] = [None] * num_shards
         self._fd_guard = threading.Lock()
-        # per-shard (seq_file_size, state_dict) snapshot, valid under flock
-        self._snap: List[Optional[tuple]] = [None] * num_shards
         self._watcher: Optional[_PollWatcher] = None
         self._watch_guard = threading.Lock()
 
-    # ---- files -----------------------------------------------------------
-    def _data_path(self, sidx: int) -> str:
-        return os.path.join(self.root, f"shard-{sidx}.pkl")
+    # ---- durability policy ----------------------------------------------
+    def _commit_mode(self, records: List[tuple]) -> str:
+        if self.fsync == "commit":
+            return _SYNC
+        if self.fsync == "never":
+            return _NONE
+        if self.fsync == "batch":
+            return _LAZY
+        # auto: control keys fsync per commit, data-plane keys batch
+        for _op, key, _val in records:
+            if key.startswith(self.durable_prefixes):
+                return _SYNC
+        return _LAZY
 
-    def _seq_path(self, sidx: int) -> str:
-        return os.path.join(self.root, f"shard-{sidx}.seq")
-
+    # ---- locks -----------------------------------------------------------
     def _lock_fd(self, sidx: int) -> int:
         fd = self._lock_fds[sidx]
         if fd is None:
@@ -113,48 +556,9 @@ class FileKVStore(KVStore):
         return fd
 
     # ---- transactions ----------------------------------------------------
-    def _load(self, sidx: int) -> Dict[str, Any]:
-        """Load shard state (must hold the flock).  Reuses the process-local
-        snapshot when the seq file hasn't grown since it was taken."""
-        try:
-            size = os.path.getsize(self._seq_path(sidx))
-        except OSError:
-            size = 0
-        snap = self._snap[sidx]
-        if snap is not None and snap[0] == size:
-            return snap[1]
-        try:
-            with open(self._data_path(sidx), "rb") as f:
-                state = pickle.load(f)
-        except (OSError, EOFError):
-            state = {}
-        self._snap[sidx] = (size, state)
-        return state
-
-    def _flush(self, sidx: int, state: Dict[str, Any]) -> None:
-        """Store shard state and advance the cross-process sequence (must
-        hold the flock).  State lands via atomic replace *before* the seq
-        byte is appended, so a remote reader woken by the seq growth always
-        sees the new state."""
-        path = self._data_path(sidx)
-        tmp = f"{path}.tmp.{os.getpid()}.{threading.get_ident()}"
-        with open(tmp, "wb") as f:
-            pickle.dump(state, f, protocol=pickle.HIGHEST_PROTOCOL)
-        os.replace(tmp, path)
-        fd = os.open(self._seq_path(sidx), os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
-        try:
-            os.write(fd, b"x")
-        finally:
-            os.close(fd)
-        try:
-            size = os.path.getsize(self._seq_path(sidx))
-        except OSError:
-            size = 0
-        self._snap[sidx] = (size, state)
-
     def _txn(self, sidx: int):
         """Context manager: shard thread lock + cross-process flock around a
-        load → mutate → (flush if dirty) → in-process notify cycle."""
+        load → mutate → (append frame if dirty) → in-process notify cycle."""
         store = self
 
         class _Ctx:
@@ -163,16 +567,43 @@ class FileKVStore(KVStore):
                 self._sh.lock.acquire()
                 fd = store._lock_fd(sidx)
                 fcntl.flock(fd, fcntl.LOCK_EX)
-                self._txn = _Txn(store._load(sidx))
+                eng = store._engines[sidx]
+                try:
+                    self._txn = _Txn(eng.load())
+                except BaseException:
+                    fcntl.flock(fd, fcntl.LOCK_UN)
+                    self._sh.lock.release()
+                    raise
                 return self._txn
 
             def __exit__(self, *exc) -> bool:
+                eng = store._engines[sidx]
+                dirty = bool(self._txn.records)
+                committed = False
                 try:
-                    if exc[0] is None and self._txn.dirty:
-                        store._flush(sidx, self._txn.state)
+                    if exc[0] is None and dirty:
+                        try:
+                            eng.commit(
+                                self._txn.state,
+                                self._txn.records,
+                                store._commit_mode(self._txn.records),
+                            )
+                            committed = True
+                        except BaseException:
+                            # The append failed (unpicklable value, ENOSPC,
+                            # …): the materialized state was already mutated
+                            # and now diverges from disk — drop it, or every
+                            # later read in this process would return the
+                            # phantom write no other process can see.
+                            eng.invalidate()
+                            raise
+                    elif dirty:
+                        # The body raised after mutating the materialized
+                        # state: it no longer matches disk — drop it.
+                        eng.invalidate()
                 finally:
                     fcntl.flock(store._lock_fd(sidx), fcntl.LOCK_UN)
-                    if exc[0] is None and self._txn.dirty:
+                    if committed:
                         self._sh.touch()  # wake this process's waiters
                     self._sh.lock.release()
                 return False
@@ -183,7 +614,7 @@ class FileKVStore(KVStore):
     def _ensure_watcher(self) -> _PollWatcher:
         with self._watch_guard:
             if self._watcher is None:
-                paths = [self._seq_path(i) for i in range(self.num_shards)]
+                paths = [eng.watch_path for eng in self._engines]
 
                 def _on_change(changed: List[int]) -> None:
                     for sidx in changed:
@@ -194,12 +625,33 @@ class FileKVStore(KVStore):
                 self._watcher = _PollWatcher(paths, _on_change)
             return self._watcher
 
+    def disk_bytes_written(self) -> int:
+        """Real bytes this handle wrote to disk (logs + snapshots, or
+        whole-shard pickles for the snapshot engine).  The deterministic
+        half of the engine comparison: wall time varies with the host's
+        I/O weather, write volume does not."""
+        return sum(eng.bytes_written for eng in self._engines)
+
+    def sync(self) -> None:
+        """Flush every shard's pending lazy fsyncs (durability barrier)."""
+        for sidx in range(self.num_shards):
+            sh = self._shards[sidx]
+            with sh.lock:
+                fd = self._lock_fd(sidx)
+                fcntl.flock(fd, fcntl.LOCK_EX)
+                try:
+                    self._engines[sidx].sync()
+                finally:
+                    fcntl.flock(fd, fcntl.LOCK_UN)
+
     def close(self) -> None:
-        """Stop the watch thread and release lock fds (tests)."""
+        """Stop the watch thread, flush lazy fsyncs, release fds (tests)."""
         with self._watch_guard:
             if self._watcher is not None:
                 self._watcher.close()
                 self._watcher = None
+        for eng in self._engines:
+            eng.close()
         with self._fd_guard:
             for i, fd in enumerate(self._lock_fds):
                 if fd is not None:
@@ -208,7 +660,7 @@ class FileKVStore(KVStore):
 
     def wait_key(self, key: str, last_seq: int, timeout_s: float) -> int:
         """Blocking shard watch, cross-process: while registered, the
-        watcher converts foreign seq-file growth into shard-condition
+        watcher converts foreign log growth into shard-condition
         broadcasts, so the inherited condition wait needs no tick."""
         watcher = self._ensure_watcher()
         watcher.add_waiter()
@@ -221,8 +673,7 @@ class FileKVStore(KVStore):
     def set(self, key: str, value: Any, *, worker: str = "-") -> None:
         sidx = self.shard_of(key)
         with self._txn(sidx) as t:
-            t.state[key] = value
-            t.dirty = True
+            t.put(key, value)
             self._charge(self._shards[sidx], worker, "set", key, _sizeof(value), write=True)
 
     def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
@@ -260,9 +711,8 @@ class FileKVStore(KVStore):
             with self._txn(sidx) as t:
                 nbytes = 0
                 for key in group:
-                    t.state[key] = mapping[key]
+                    t.put(key, mapping[key])
                     nbytes += _sizeof(mapping[key])
-                t.dirty = True
                 self._charge(
                     self._shards[sidx], worker, "mset",
                     f"[{len(group)} keys@s{sidx}]", nbytes, write=True,
@@ -274,16 +724,14 @@ class FileKVStore(KVStore):
             self._charge(self._shards[sidx], worker, "setnx", key, _sizeof(value), write=True)
             if key in t.state:
                 return False
-            t.state[key] = value
-            t.dirty = True
+            t.put(key, value)
             return True
 
     def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
         sidx = self.shard_of(key)
         with self._txn(sidx) as t:
             new = t.state.get(key, 0) + amount
-            t.state[key] = new
-            t.dirty = True
+            t.put(key, new)
             self._charge(self._shards[sidx], worker, "incr", key, 8, write=True)
             return new
 
@@ -297,16 +745,14 @@ class FileKVStore(KVStore):
                 cur is sentinel and expect is None
             )
             if matched:
-                t.state[key] = value
-                t.dirty = True
+                t.put(key, value)
                 return True
             return False
 
     def delete(self, key: str, *, worker: str = "-") -> None:
         sidx = self.shard_of(key)
         with self._txn(sidx) as t:
-            t.state.pop(key, None)
-            t.dirty = True
+            t.drop(key)
             self._charge(self._shards[sidx], worker, "del", key, 0, write=True)
 
     def mdel(self, keys: List[str], *, worker: str = "-") -> int:
@@ -314,13 +760,11 @@ class FileKVStore(KVStore):
         for key in keys:
             by_shard.setdefault(self.shard_of(key), []).append(key)
         removed = 0
-        sentinel = object()
         for sidx, group in by_shard.items():
             with self._txn(sidx) as t:
                 for key in group:
-                    if t.state.pop(key, sentinel) is not sentinel:
+                    if t.drop(key):
                         removed += 1
-                t.dirty = True
                 self._charge(
                     self._shards[sidx], worker, "mdel",
                     f"[{len(group)} keys@s{sidx}]", 0, write=True,
@@ -358,12 +802,10 @@ class FileKVStore(KVStore):
         with self._txn(sidx) as t:
             new = fn(t.state.get(key, default))
             if new is DELETE:
-                t.state.pop(key, None)
-                t.dirty = True
+                t.drop(key)
                 self._charge(self._shards[sidx], worker, "eval", key, 0, write=True)
                 return None
-            t.state[key] = new
-            t.dirty = True
+            t.put(key, new)
             self._charge(self._shards[sidx], worker, "eval", key, _sizeof(new), write=True)
             return new
 
@@ -384,13 +826,12 @@ class FileKVStore(KVStore):
                 for key in group:
                     new = updates[key](t.state.get(key, default))
                     if new is DELETE:
-                        t.state.pop(key, None)
+                        t.drop(key)
                         out[key] = None
                         continue
-                    t.state[key] = new
+                    t.put(key, new)
                     out[key] = new
                     nbytes += _sizeof(new)
-                t.dirty = True
                 self._charge(
                     self._shards[sidx], worker, "meval",
                     f"[{len(group)} keys@s{sidx}]", nbytes, write=True,
@@ -401,9 +842,7 @@ class FileKVStore(KVStore):
     def rpush(self, key: str, *values: Any, worker: str = "-") -> int:
         sidx = self.shard_of(key)
         with self._txn(sidx) as t:
-            lst = t.state.setdefault(key, [])
-            lst.extend(values)
-            t.dirty = True
+            lst = t.extend(key, list(values))
             self._charge(
                 self._shards[sidx], worker, "rpush", key,
                 sum(_sizeof(v) for v in values), write=True,
@@ -422,11 +861,9 @@ class FileKVStore(KVStore):
                 nbytes = 0
                 for key in group:
                     values = pushes[key]
-                    lst = t.state.setdefault(key, [])
-                    lst.extend(values)
+                    lst = t.extend(key, list(values))
                     lengths[key] = len(lst)
                     nbytes += sum(_sizeof(v) for v in values)
-                t.dirty = True
                 self._charge(
                     self._shards[sidx], worker, "mrpush",
                     f"[{len(group)} keys@s{sidx}]", nbytes, write=True,
@@ -436,19 +873,29 @@ class FileKVStore(KVStore):
     def lpop(self, key: str, *, worker: str = "-") -> Any:
         sidx = self.shard_of(key)
         with self._txn(sidx) as t:
-            lst = t.state.get(key)
-            value = lst.pop(0) if lst else None
-            if value is not None:
-                t.dirty = True
+            popped = t.popleft(key)
+            value = None if popped is _MISS else popped
             self._charge(self._shards[sidx], worker, "lpop", key, _sizeof(value), write=True)
             return value
+
+    def lpop_n(self, key: str, max_n: int, *, worker: str = "-") -> List[Any]:
+        """Batched left pop: one flock transaction, one framed ``("p", key,
+        n)`` record — a worker leasing a batch pays one disk append."""
+        sidx = self.shard_of(key)
+        with self._txn(sidx) as t:
+            out = t.popleft_n(key, max_n)
+            self._charge(
+                self._shards[sidx], worker, "lpopn", key,
+                sum(_sizeof(v) for v in out), write=True,
+            )
+            return out
 
     def blpop(self, key: str, timeout_s: float, *, worker: str = "-") -> Any:
         """Blocking left pop across processes.  The flock is held only for
         each pop *attempt*, never across the wait — otherwise a waiting
         consumer would lock every producer out of the shard.  Between
         attempts the consumer blocks on the shard condition; a local push
-        notifies it directly, a remote push grows the seq file and the
+        notifies it directly, a remote push grows the shard log and the
         watcher relays the notify."""
         deadline = time.monotonic() + timeout_s
         sidx = self.shard_of(key)
@@ -458,12 +905,11 @@ class FileKVStore(KVStore):
         try:
             while True:
                 with self._txn(sidx) as t:
-                    lst = t.state.get(key)
-                    if lst:
-                        value = lst.pop(0)
-                        t.dirty = True
-                        self._charge(sh, worker, "blpop", key, _sizeof(value), write=True)
-                        return value
+                    popped = t.popleft(key)
+                    if popped is not _MISS:
+                        # a stored None is a real element: pop and return it
+                        self._charge(sh, worker, "blpop", key, _sizeof(popped), write=True)
+                        return popped
                     seq = sh.seq
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:

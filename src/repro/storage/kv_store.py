@@ -50,11 +50,13 @@ can detect shard saturation exactly like the paper's sort experiment.
 
 from __future__ import annotations
 
+import pickle
+import struct
 import threading
 import time
 import zlib
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 from .object_store import Ledger, OpRecord, _Endpoint
 from .perf_model import REDIS_2017, StorageProfile
@@ -109,6 +111,95 @@ def _sizeof(value: Any) -> int:
     if isinstance(value, dict):
         return sum(_sizeof(k) + _sizeof(v) for k, v in value.items()) + 8
     return 64  # opaque
+
+
+# ---------------------------------------------------------------------------
+# Record framing for append-only logs (shared by FileKVStore's per-shard
+# logs and FileBackend's watch ledger).
+#
+# One *frame* is one commit: a length/CRC header followed by a pickled list
+# of state-delta records.  The header makes torn tails self-detecting — a
+# writer killed mid-append leaves either a short header, a short payload, or
+# a CRC mismatch, and replay stops at the last whole frame (the committed
+# prefix).  Records are state *deltas*, not operations, so replaying a log
+# over the snapshot it was appended after reconstructs the exact state:
+#
+#   ("s", key, value)   set key to value          (set/incr/cas/eval/mset …)
+#   ("d", key, None)    delete key                (delete/mdel/eval→DELETE)
+#   ("a", key, [v, …])  extend key's list         (rpush/rpush_many)
+#   ("p", key, n)       drop n items from the left of key's list (lpop/blpop)
+#
+# List ops get their own compact deltas because queues are the hottest keys:
+# an rpush frame carries only the pushed values, never the whole list.
+# ---------------------------------------------------------------------------
+
+_FRAME_HDR = struct.Struct("<II")  # (payload length, crc32(payload))
+
+# Log files open with a fixed header naming the *generation* — bumped by
+# every compaction, so a snapshot and the log it supersedes can never be
+# replayed together (see file_kv.py's compaction protocol).
+LOG_MAGIC = b"WKV1"
+_LOG_HDR = struct.Struct("<4sQ")  # (magic, generation)
+LOG_HEADER_SIZE = _LOG_HDR.size
+
+
+def encode_log_header(generation: int) -> bytes:
+    return _LOG_HDR.pack(LOG_MAGIC, generation)
+
+
+def decode_log_header(buf: bytes) -> Optional[int]:
+    """Generation from a log header, or None if short/corrupt."""
+    if len(buf) < _LOG_HDR.size:
+        return None
+    magic, gen = _LOG_HDR.unpack_from(buf)
+    if magic != LOG_MAGIC:
+        return None
+    return gen
+
+
+def encode_frame(records: List[Tuple[str, str, Any]]) -> bytes:
+    """Frame one commit's delta records: ``[len][crc32][pickle(records)]``."""
+    payload = pickle.dumps(records, protocol=pickle.HIGHEST_PROTOCOL)
+    return _FRAME_HDR.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def iter_frames(
+    buf: bytes, start: int = 0
+) -> Iterator[Tuple[List[Tuple[str, str, Any]], int]]:
+    """Yield ``(records, end_offset)`` for every whole frame in ``buf``.
+
+    Stops silently at the first torn frame (short header, short payload, or
+    CRC mismatch): everything before it is the committed prefix, everything
+    from it on is a crashed writer's garbage."""
+    off = start
+    n = len(buf)
+    while off + _FRAME_HDR.size <= n:
+        length, crc = _FRAME_HDR.unpack_from(buf, off)
+        end = off + _FRAME_HDR.size + length
+        if end > n:
+            return  # torn payload
+        payload = buf[off + _FRAME_HDR.size : end]
+        if zlib.crc32(payload) != crc:
+            return  # torn/corrupt frame
+        yield pickle.loads(payload), end
+        off = end
+
+
+def apply_record(state: Dict[str, Any], rec: Tuple[str, str, Any]) -> None:
+    """Apply one framed state-delta record to ``state`` (replay)."""
+    op, key, val = rec
+    if op == "s":
+        state[key] = val
+    elif op == "d":
+        state.pop(key, None)
+    elif op == "a":
+        state.setdefault(key, []).extend(val)
+    elif op == "p":
+        lst = state.get(key)
+        if lst:
+            del lst[:val]
+    else:  # pragma: no cover - forward-compat guard
+        raise ValueError(f"unknown log record op {op!r}")
 
 
 class KVStore(_Endpoint):
@@ -434,6 +525,23 @@ class KVStore(_Endpoint):
             value = lst.pop(0) if lst else None
             self._charge(sh, worker, "lpop", key, _sizeof(value), write=True)
             return value
+
+    def lpop_n(self, key: str, max_n: int, *, worker: str = "-") -> List[Any]:
+        """Pop up to ``max_n`` items off the left of ``key``'s list in ONE
+        locked pass / one charged round-trip (Redis ``LPOP key count``).
+        The queue-consumer mirror of ``rpush_many``: a worker leasing a
+        batch pays one request, not one per task."""
+        sh = self._shard(key)
+        with sh.lock:
+            lst = sh.data.get(key)
+            out = list(lst[:max_n]) if lst else []
+            if out:
+                del lst[: len(out)]
+            self._charge(
+                sh, worker, "lpopn", key,
+                sum(_sizeof(v) for v in out), write=True,
+            )
+            return out
 
     def blpop(self, key: str, timeout_s: float, *, worker: str = "-") -> Any:
         """Blocking left pop (Redis BLPOP): pop the head of ``key``'s list,

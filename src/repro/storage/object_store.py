@@ -43,21 +43,28 @@ Data plane (batching + notification):
     existence check and the wait.
   * wakeup guarantee is **per backend**: the watch condition and sequence
     live on the backend, so a publish through *any* store handle sharing
-    that backend wakes every waiter in this process.  A *different process*
-    sharing a ``FileBackend`` directory publishes without reaching this
-    process's condition directly; ``FileBackend`` closes that gap with a
-    **cross-process watch**: every write appends one byte to a per-root
-    sequence file (size is the cross-process write sequence — monotone and
-    atomic under ``O_APPEND``), and a per-backend watch thread stats that
-    file plus the directory's dirent mtime with exponential poll backoff
-    (``_PollWatcher``; fast after a change, backing off to a small cap when
-    idle, fully parked while nobody waits), converting external writes into
-    in-process ``notify_put`` broadcasts.  ``wait_keys`` therefore no
-    longer needs its fallback re-check tick on any built-in backend; the
-    tick (``WATCH_FALLBACK_TICK_S``) survives only for out-of-tree
-    cross-process backends without a watcher, and every tick-bounded wait
-    is counted in ``ObjectStore.fallback_tick_waits`` so tests can assert
-    the event-driven path really is tick-free.
+    that backend wakes every waiter in this process.  Put events carry the
+    *keys* that landed (``puts_since``): completion waits retire exactly
+    those keys with O(1) bookkeeping per event instead of re-probing the
+    backend per wake (and when they must probe — first pass, unknown-key
+    events — they use the batched ``exists_many``, one readdir per key
+    directory, never one stat per key).  A *different process* sharing a
+    ``FileBackend`` directory publishes without reaching this process's
+    condition directly; ``FileBackend`` closes that gap with a
+    **cross-process watch**: every mutation appends one framed ``op, key``
+    record to a per-root ledger (size is the cross-process write sequence
+    — monotone and atomic under ``O_APPEND``; rotated atomically past a
+    cap), and a per-backend watch thread (``_PollWatcher``) blocks on
+    inotify where available — zero wakeups between events — falling back
+    to an exponential-backoff stat poll (fast after a change, backing off
+    to a small cap when idle, fully parked while nobody waits), converting
+    external writes into in-process ``notify_put`` broadcasts.
+    ``wait_keys`` therefore no longer needs its fallback re-check tick on
+    any built-in backend; the tick (``WATCH_FALLBACK_TICK_S``) survives
+    only for out-of-tree cross-process backends without a watcher, and
+    every tick-bounded wait is counted in
+    ``ObjectStore.fallback_tick_waits`` so tests can assert the
+    event-driven path really is tick-free.
 
 Every operation is charged virtual wire time from a
 :class:`~repro.storage.perf_model.StorageProfile` and recorded in a
@@ -72,7 +79,7 @@ import threading
 import time
 import uuid
 import weakref
-from collections import defaultdict
+from collections import defaultdict, deque
 from dataclasses import dataclass
 from typing import Any, Dict, Iterator, List, Optional, Tuple
 
@@ -174,18 +181,29 @@ class _PollWatcher:
     """Watch filesystem signals for cross-process writes.
 
     Watches a fixed set of paths by ``stat`` signature ``(size, mtime_ns)``
-    — sequence files grow monotonically under ``O_APPEND`` and a POSIX
-    ``rename``/``unlink`` bumps the parent dirent's mtime, so together they
-    cover every mutation a foreign process can make.  Polling is
-    exponential-backoff (reset to ``min_s`` on every observed change) and
-    **waiter-gated**: with zero registered waiters the thread parks on an
-    event and costs nothing.  The comparison baseline persists across idle
-    periods, so a write landing while parked is detected on the first pass
-    after a waiter registers — the snapshot-then-check-then-wait contract
-    of ``wait_put`` does the rest.  When a real inotify binding is
-    importable it could replace the poll loop; none is assumed (the
-    container has no inotify package), so the backoff poll is the portable
-    default."""
+    — log/sequence files grow monotonically and a POSIX ``rename``/
+    ``unlink`` bumps the parent dirent's mtime, so together they cover
+    every mutation a foreign process can make.
+
+    Two modes, picked at thread start:
+
+    * **inotify** (Linux, the default where it works) — a ctypes binding
+      (:mod:`repro.storage.inotify`) watches the paths' parent directories
+      and the thread blocks in ``poll()`` on the inotify fd: *zero* timed
+      wakeups between events (``poll_wakeups`` stays 0), wake latency is
+      the kernel's, not a backoff bound.  Every event is resolved back to
+      changed paths by the same stat-signature comparison, so the contract
+      is identical to poll mode.
+    * **backoff poll** (portable fallback, ``mode == "poll"``) —
+      exponential backoff (reset to ``min_s`` on every observed change)
+      and **waiter-gated**: with zero registered waiters the thread parks
+      on an event and costs nothing.  Each timed scan increments
+      ``poll_wakeups`` (tests assert inotify mode keeps it 0).
+
+    In both modes the comparison baseline persists across idle periods, so
+    a write landing while parked is detected on the first pass after a
+    waiter registers — the snapshot-then-check-then-wait contract of
+    ``wait_put`` does the rest."""
 
     def __init__(
         self,
@@ -193,24 +211,36 @@ class _PollWatcher:
         on_change,
         min_s: float = _WATCH_MIN_BACKOFF_S,
         max_s: float = _WATCH_MAX_BACKOFF_S,
+        use_inotify: Optional[bool] = None,
     ) -> None:
         self._paths = list(paths)
         self._on_change = on_change
         self._min_s = min_s
         self._max_s = max_s
+        self._use_inotify = use_inotify  # None = auto-detect
         self._lock = threading.Lock()
         self._waiters = 0
         self._wake = threading.Event()
         self._closed = False
         self._thread: Optional[threading.Thread] = None
+        self._pipe_r, self._pipe_w = os.pipe()  # close() → wake the poll()
+        self.mode = "poll"  # "inotify" once the event loop takes over
+        self.poll_wakeups = 0  # timed scans in poll mode (0 under inotify)
 
     @staticmethod
-    def _sig(path: str) -> Tuple[int, int]:
+    def _sig(path: str) -> Tuple[int, int, int]:
+        """Change signature: (inode, size, mtime).  The inode matters since
+        PR 5 made watched files non-monotone across replacement — KV
+        compaction and ledger rotation shrink the file via atomic rename —
+        so a shrink-then-regrow to the same size inside one mtime granule
+        would collide on (size, mtime) alone; the rename always installs a
+        new inode, which cannot collide.  Within one inode the files are
+        append-only, so size growth covers the rest."""
         try:
             st = os.stat(path)
         except OSError:
-            return (0, 0)
-        return (st.st_size, st.st_mtime_ns)
+            return (0, 0, 0)
+        return (st.st_ino, st.st_size, st.st_mtime_ns)
 
     def add_waiter(self) -> None:
         with self._lock:
@@ -229,8 +259,92 @@ class _PollWatcher:
     def close(self) -> None:
         self._closed = True
         self._wake.set()
+        with self._lock:
+            started = self._thread is not None
+            if self._pipe_w is not None:
+                try:
+                    os.write(self._pipe_w, b"x")
+                except OSError:
+                    pass
+        if not started:
+            self._close_pipe()
+
+    def _close_pipe(self) -> None:
+        with self._lock:
+            for attr in ("_pipe_r", "_pipe_w"):
+                fd = getattr(self, attr)
+                if fd is not None:
+                    try:
+                        os.close(fd)
+                    except OSError:
+                        pass
+                    setattr(self, attr, None)
+
+    def _scan(self, last: List[Tuple[int, int]]) -> List[int]:
+        """Compare every path's stat signature against ``last`` (updated in
+        place); returns the indexes that changed."""
+        changed = []
+        for i, p in enumerate(self._paths):
+            sig = self._sig(p)
+            if sig != last[i]:
+                last[i] = sig
+                changed.append(i)
+        return changed
+
+    def _try_inotify(self):
+        if self._use_inotify is False:
+            return None
+        try:
+            from .inotify import Inotify
+
+            if not Inotify.available():
+                return None
+            ino = Inotify()
+            seen = set()
+            for p in self._paths:
+                d = p if os.path.isdir(p) else (os.path.dirname(p) or ".")
+                if d not in seen:
+                    seen.add(d)
+                    ino.add_watch(d)
+            return ino
+        except Exception:
+            return None
 
     def _run(self) -> None:
+        if self._closed:
+            self._close_pipe()  # close() deferred cleanup to us
+            return
+        ino = self._try_inotify()
+        try:
+            if ino is not None:
+                self._run_inotify(ino)
+            else:
+                self._run_poll()
+        finally:
+            if ino is not None:
+                ino.close()
+            self._close_pipe()
+
+    def _run_inotify(self, ino) -> None:
+        import select
+
+        self.mode = "inotify"
+        last = [self._sig(p) for p in self._paths]
+        poller = select.poll()
+        poller.register(ino.fileno(), select.POLLIN)
+        poller.register(self._pipe_r, select.POLLIN)
+        # The baseline above races the mode flip: a write that landed just
+        # before is already folded in; one landing after raises an event.
+        while not self._closed:
+            poller.poll()  # block: no timeout, no timed wakeups
+            if self._closed:
+                return
+            ino.read_events()  # drain the kernel queue (names unused)
+            changed = self._scan(last)
+            if changed:
+                self._on_change(changed)
+
+    def _run_poll(self) -> None:
         last = [self._sig(p) for p in self._paths]
         backoff = self._min_s
         while not self._closed:
@@ -243,12 +357,8 @@ class _PollWatcher:
                 # landing while parked are seen on the first pass after wake.
                 self._wake.wait()
                 continue
-            changed = []
-            for i, p in enumerate(self._paths):
-                sig = self._sig(p)
-                if sig != last[i]:
-                    last[i] = sig
-                    changed.append(i)
+            self.poll_wakeups += 1
+            changed = self._scan(last)
             if changed:
                 backoff = self._min_s
                 self._on_change(changed)
@@ -267,21 +377,60 @@ class _Backend:
     cross_process = False
     self_watching = False
 
+    # How many recent put events carry their key lists before waiters must
+    # fall back to an existence probe (bounds memory, not correctness).
+    _RECENT_PUTS = 512
+
     def _init_watch(self) -> None:
         """Watch state lives on the *backend*, not the store handle: two
         ``ObjectStore`` handles sharing one backend must wake each other's
         waiters (subclass ``__init__`` calls this)."""
         self._watch_cv = threading.Condition()
         self._watch_seq = 0
+        # Ring of (seq, keys-or-None): which keys each recent put event
+        # covered.  None = unknown (a cross-process write relayed by a
+        # watcher) — consumers must re-probe.
+        self._recent_puts: "deque" = deque(maxlen=self._RECENT_PUTS)
 
-    def notify_put(self) -> None:
+    def notify_put(self, keys: Optional[List[str]] = None) -> None:
+        """Advance the put sequence and wake waiters.  ``keys`` names what
+        just became visible; waiters then retire exactly those keys instead
+        of re-probing the backend (``puts_since``).  Pass None when the set
+        is unknown (out-of-band/cross-process writes)."""
         with self._watch_cv:
             self._watch_seq += 1
+            self._recent_puts.append(
+                (self._watch_seq, tuple(keys) if keys is not None else None)
+            )
             self._watch_cv.notify_all()
 
     def put_seq(self) -> int:
         with self._watch_cv:
             return self._watch_seq
+
+    def puts_since(self, last_seq: int) -> Tuple[int, Optional[set]]:
+        """(current seq, keys that landed after ``last_seq``) — or
+        ``(seq, None)`` when the set is unknown (ring overflow, or any
+        event without keys), in which case the caller re-probes.  This is
+        what makes an N-task completion wait O(1) bookkeeping per event
+        instead of a backend probe per wake."""
+        with self._watch_cv:
+            cur = self._watch_seq
+            if cur == last_seq:
+                return cur, set()
+            # Ring seqs are contiguous (one entry per bump): complete
+            # coverage of (last_seq, cur] iff the ring reaches back far
+            # enough and every covered event knows its keys.
+            if not self._recent_puts or self._recent_puts[0][0] > last_seq + 1:
+                return cur, None
+            keys: set = set()
+            for seq, ks in self._recent_puts:
+                if seq <= last_seq:
+                    continue
+                if ks is None:
+                    return cur, None
+                keys.update(ks)
+            return cur, keys
 
     def wait_put(self, last_seq: int, timeout_s: float) -> int:
         with self._watch_cv:
@@ -318,6 +467,13 @@ class _Backend:
 
     def exists(self, key: str) -> bool:
         raise NotImplementedError
+
+    def exists_many(self, keys: List[str]) -> set:
+        """Batched existence: the subset of ``keys`` present.  Backends
+        override to answer the whole batch in one pass — completion waits
+        (futures, ``wait_keys``) re-check every pending key on every wake,
+        so per-key probes turn an N-task fan-in into O(N²) stats."""
+        return {k for k in keys if self.exists(k)}
 
     def delete(self, key: str) -> None:
         raise NotImplementedError
@@ -361,6 +517,10 @@ class InMemoryBackend(_Backend):
         with self._lock:
             return key in self._data
 
+    def exists_many(self, keys: List[str]) -> set:
+        with self._lock:
+            return {k for k in keys if k in self._data}
+
     def delete(self, key: str) -> None:
         with self._lock:
             self._data.pop(key, None)
@@ -372,52 +532,178 @@ class InMemoryBackend(_Backend):
 
 class FileBackend(_Backend):
     """Directory-backed store.  Writes are crash-atomic: write temp file,
-    fsync, then commit — ``os.replace`` for plain puts, ``os.link`` for
+    then commit — ``os.replace`` for plain puts, ``os.link`` for
     ``if_absent`` puts.  The link either creates the final dirent atomically
     or fails ``EEXIST``, so two *processes* racing a ``put_if_absent``
     cannot both win (the first-writer-wins contract the fenced result
     publishes ride on), and either way only a complete object ever becomes
     visible.
 
-    Cross-process watch: every mutation appends one byte to the root's
-    ``.watch-seq`` file after it lands, so the file's *size* is a monotone
-    cross-process write sequence (``O_APPEND`` appends are atomic).  The
-    first ``wait_put`` starts a ``_PollWatcher`` over that file plus the
-    root dirent's mtime (rename/unlink bump it even for writers that skip
-    the seq append); any observed change fires this process's
+    Durability is a policy (``fsync=``), mirroring ``FileKVStore``'s:
+    ``auto`` (default) fsyncs per put for keys under ``durable_prefixes``
+    (``ckpt/`` — checkpoints must survive a machine crash) and
+    group-commits the rest — one ``os.sync()`` every ``fsync_batch_n``
+    puts (objects are distinct files, so a per-file fsync could not flush
+    its predecessors; the single syscall flushes them all) and one more on
+    ``close()``; ``always`` restores the PR-4 every-put fsync; ``batch``
+    group-commits everything; ``never`` is OS-buffered.  *Visibility* is unaffected — the rename/link commit makes
+    an object readable by every process immediately; the policy only
+    decides what survives a machine (not process) crash.  Data-plane puts
+    (``input/``, ``result/``, shuffle intermediates) are re-drivable from
+    the job, exactly the paper's recovery story, so they default batched.
+
+    Cross-process watch: every mutation appends one framed record
+    (``op, key`` — :func:`repro.storage.kv_store.encode_frame`, the same
+    framing as the KV's shard logs) to the root's ``.watch-seq`` ledger
+    after it lands, so the ledger's *size* is a monotone cross-process
+    write sequence (``O_APPEND`` appends are atomic) and its tail says
+    *which* keys moved (debuggability).  The ledger is an event channel,
+    not state: when it outgrows a cap it is swapped for a fresh one via
+    atomic rename (itself a watchable dirent change).  The first
+    ``wait_put`` starts a ``_PollWatcher`` over the ledger plus the root
+    dirent's mtime (rename/unlink bump it even for writers that skip the
+    ledger append); any observed change fires this process's
     ``notify_put``, so waiters sharing the directory across processes are
-    woken without a fallback re-check tick — the last ROADMAP polling hole.
-    The watcher is waiter-gated and backs off exponentially, so a backend
-    nobody waits on never polls at all."""
+    woken without a fallback re-check tick.  The watcher blocks on inotify
+    where available and otherwise backoff-polls, waiter-gated."""
 
     cross_process = True
     self_watching = True
 
     _SEQ_NAME = ".watch-seq"
+    _SEQ_ROTATE_BYTES = 1 << 20  # swap the event ledger past 1 MiB
 
-    def __init__(self, root: str) -> None:
+    def __init__(
+        self,
+        root: str,
+        *,
+        fsync: str = "auto",
+        durable_prefixes: Tuple[str, ...] = ("ckpt/",),
+        fsync_batch_n: int = 32,
+    ) -> None:
+        if fsync == "commit":
+            fsync = "always"  # FileKVStore's name for the same policy
+        if fsync not in ("auto", "always", "batch", "never"):
+            raise ValueError(f"unknown fsync policy {fsync!r}")
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
+        self.fsync = fsync
+        self.durable_prefixes = tuple(durable_prefixes)
+        self.fsync_batch_n = fsync_batch_n
+        self._puts_since_sync = 0
         self._lock = threading.Lock()
         self._seq_path = os.path.join(self.root, self._SEQ_NAME)
+        self._seq_fd: Optional[int] = None  # cached O_APPEND ledger fd
+        self._made_dirs: set = set()  # subdirs known created (saves a mkdir RPC)
+        self._io_pool = None  # lazy thread pool for batched get/put fan-out
         self._watcher: Optional[_PollWatcher] = None
         self._init_watch()
 
+    # Batches below this size aren't worth the thread-pool handoff.
+    _PARALLEL_BATCH_MIN = 8
+
+    def _pool(self):
+        """Small worker pool for batched I/O: on a network filesystem each
+        open/write/rename is a round trip that releases the GIL, so a
+        64-object batch completes in ~8 round-trip times instead of 64."""
+        if self._io_pool is None:
+            from concurrent.futures import ThreadPoolExecutor
+
+            with self._lock:
+                if self._io_pool is None:
+                    self._io_pool = ThreadPoolExecutor(
+                        max_workers=8, thread_name_prefix="fb-io"
+                    )
+        return self._io_pool
+
+    # Keys are sharded into one subdirectory per key *directory* (everything
+    # up to the last "/", %2F-encoded): ``result/job/t3`` lives at
+    # ``root/result%2Fjob/t3``.  A flat directory makes every batched
+    # existence probe / prefix list pay a readdir of the WHOLE store — on a
+    # network filesystem that turns an N-task completion wait into
+    # O(total objects) per wake.  Sharded, a job's probes list only the
+    # job's own directory.
+    def _split(self, key: str) -> Tuple[str, str]:
+        if "/" in key:
+            head, base = key.rsplit("/", 1)
+            return head.replace("/", "%2F"), base
+        return "", key
+
     def _path(self, key: str) -> str:
-        safe = key.replace("/", "%2F")
-        return os.path.join(self.root, safe)
+        sub, base = self._split(key)
+        if not sub:
+            return os.path.join(self.root, base)
+        return os.path.join(self.root, sub, base)
 
-    def _unpath(self, name: str) -> str:
-        return name.replace("%2F", "/")
+    def _ensure_dir(self, key: str) -> None:
+        sub, _ = self._split(key)
+        if sub and sub not in self._made_dirs:
+            os.makedirs(os.path.join(self.root, sub), exist_ok=True)
+            self._made_dirs.add(sub)
 
-    def _bump_cross_seq(self) -> None:
+    def _durable(self, key: str) -> bool:
+        """Does this put fsync before commit?  (Policy; module docstring.)
+        Non-durable puts are group-committed by :meth:`_note_lazy_puts` —
+        an ``os.sync()`` every ``fsync_batch_n`` puts — because objects are
+        DISTINCT files: fsyncing the Nth file would not flush the N-1
+        before it, so per-file fsync cannot implement a group commit."""
+        if self.fsync == "always":
+            return True
+        if self.fsync == "never":
+            return False
+        return self.fsync == "auto" and key.startswith(self.durable_prefixes)
+
+    def _note_lazy_puts(self, n: int) -> None:
+        """Group commit for non-fsynced puts (caller holds the lock): one
+        ``os.sync()`` flushes every file the batch dirtied in a single
+        syscall, bounding machine-crash data loss to ``fsync_batch_n``
+        puts.  ``never`` opts out entirely (OS-buffered)."""
+        if self.fsync == "never" or n <= 0:
+            return
+        self._puts_since_sync += n
+        if self._puts_since_sync >= self.fsync_batch_n:
+            self._puts_since_sync = 0
+            os.sync()
+
+    def _bump_cross_seq(self, op: str, keys) -> None:
         """Advance the cross-process write sequence: one atomic O_APPEND
-        byte.  Other processes' watchers detect the size growth."""
-        fd = os.open(self._seq_path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
-        try:
-            os.write(fd, b"x")
-        finally:
-            os.close(fd)
+        frame naming the mutated keys (one frame per batch; caller holds
+        ``self._lock``).  Other processes' watchers detect the size growth;
+        the ledger is rotated (atomic rename — itself a watchable event)
+        once it outgrows the cap, so it never accretes unboundedly.  The fd
+        is cached — one write + one fstat per mutation, not open/close round
+        trips; the fstat's ``st_nlink`` doubles as the detector for a peer's
+        rotation (our append went to the unlinked ledger: re-append to the
+        fresh one)."""
+        from .kv_store import encode_frame  # late: kv_store imports us
+
+        frame = encode_frame([(op, k, None) for k in keys])
+        st = None
+        for _attempt in range(2):
+            if self._seq_fd is None:
+                self._seq_fd = os.open(
+                    self._seq_path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644
+                )
+            os.write(self._seq_fd, frame)
+            # The fstat doubles as the rotation-due check AND the detector
+            # for a peer having rotated underneath us: st_nlink == 0 means
+            # our frame just went to the unlinked ledger where no watcher
+            # would ever see it — a lost cross-process wake — so re-append
+            # to the live one.  One write + one fstat per mutation (the
+            # cached fd already saved the open/close round trips); skipping
+            # the fstat would trade a real liveness hole for ~0.4 ms.
+            st = os.fstat(self._seq_fd)
+            if st.st_nlink > 0:
+                break
+            os.close(self._seq_fd)
+            self._seq_fd = None
+        if st is not None and st.st_nlink > 0 and st.st_size > self._SEQ_ROTATE_BYTES:
+            os.close(self._seq_fd)
+            self._seq_fd = None
+            tmp = f"{self._seq_path}.tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "wb"):
+                pass
+            os.replace(tmp, self._seq_path)
 
     def _ensure_watcher(self) -> _PollWatcher:
         with self._lock:
@@ -440,61 +726,182 @@ class FileBackend(_Backend):
             watcher.remove_waiter()
 
     def close(self) -> None:
-        """Stop the watch thread (tests; daemon thread otherwise)."""
+        """Stop the watch thread, flush pending group commits, and release
+        cached fds/pools (tests; daemon threads otherwise)."""
         with self._lock:
             if self._watcher is not None:
                 self._watcher.close()
                 self._watcher = None
+            if self._seq_fd is not None:
+                os.close(self._seq_fd)
+                self._seq_fd = None
+            if self._io_pool is not None:
+                self._io_pool.shutdown(wait=False)
+                self._io_pool = None
+            if self._puts_since_sync and self.fsync in ("auto", "batch"):
+                self._puts_since_sync = 0
+                os.sync()
 
-    def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
+    def _put_one(self, key: str, blob: bytes, *, if_absent: bool, durable: bool) -> bool:
+        """Land one object (caller holds the lock, decided durability, and
+        bumps the seq; thread-safe given distinct keys — batched puts fan
+        out over the I/O pool)."""
+        self._ensure_dir(key)
         path = self._path(key)
-        with self._lock:
-            if if_absent and os.path.exists(path):
-                return False
-            tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
-            with open(tmp, "wb") as f:
-                f.write(blob)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            if durable:
                 f.flush()
                 os.fsync(f.fileno())
-            if if_absent:
-                # Atomic cross-process first-writer-wins: link either
-                # creates the dirent or fails EEXIST — the exists() above is
-                # only a fast path, another process can land between it and
-                # here.
-                try:
-                    os.link(tmp, path)
-                except FileExistsError:
-                    os.remove(tmp)
-                    return False
+        if if_absent:
+            # Atomic cross-process first-writer-wins: link either creates
+            # the dirent or fails EEXIST — no pre-check needed (a racing
+            # process could land between a check and the link anyway, and
+            # on the common first-publish path the check is a wasted round
+            # trip; a duplicate just pays its tmp write and loses here).
+            try:
+                os.link(tmp, path)
+            except FileExistsError:
                 os.remove(tmp)
-            else:
-                os.replace(tmp, path)
-            self._bump_cross_seq()
-            return True
+                return False
+            os.remove(tmp)
+        else:
+            os.replace(tmp, path)
+        return True
+
+    def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
+        # The object commit itself is lock-free: the tmp name is unique per
+        # thread and the final link/replace is atomic, so concurrent puts —
+        # even of the same key — race safely (first link wins).  The lock
+        # guards only the policy counter and the ledger fd, so N workers
+        # publish results concurrently instead of queueing on each other's
+        # network-fs round trips.
+        durable = self._durable(key)
+        if not self._put_one(key, blob, if_absent=if_absent, durable=durable):
+            return False
+        with self._lock:
+            self._note_lazy_puts(0 if durable else 1)
+            self._bump_cross_seq("put", [key])
+        return True
+
+    def put_many(self, items: Dict[str, bytes], *, if_absent: bool) -> int:
+        """Batched write: every object lands (fanned out over the I/O pool —
+        each commit is an independent round trip on its own key), then ONE
+        framed ledger append covers the whole batch — the disk-append
+        mirror of the one coalesced ``notify_put`` the store layer fires."""
+        durable = {k: self._durable(k) for k in items}
+        if len(items) < self._PARALLEL_BATCH_MIN:
+            won_keys = [
+                k
+                for k, blob in items.items()
+                if self._put_one(k, blob, if_absent=if_absent, durable=durable[k])
+            ]
+        else:
+            results = list(
+                self._pool().map(
+                    lambda kv: (
+                        kv[0],
+                        self._put_one(
+                            kv[0], kv[1], if_absent=if_absent, durable=durable[kv[0]]
+                        ),
+                    ),
+                    items.items(),
+                )
+            )
+            won_keys = [k for k, won in results if won]
+        if won_keys:
+            with self._lock:
+                self._note_lazy_puts(sum(1 for k in won_keys if not durable[k]))
+                self._bump_cross_seq("put", won_keys)
+        return len(won_keys)
 
     def get(self, key: str) -> bytes:
         with open(self._path(key), "rb") as f:
             return f.read()
 
+    def get_many(self, keys: List[str]) -> Dict[str, bytes]:
+        """Batched fetch, fanned out over the I/O pool: N network-fs opens
+        overlap instead of serializing (each is a GIL-releasing round
+        trip).  Missing keys are omitted, as in the base contract."""
+        if len(keys) < self._PARALLEL_BATCH_MIN:
+            return super().get_many(keys)
+
+        def _read(key: str):
+            try:
+                return key, self.get(key)
+            except (KeyError, FileNotFoundError):
+                return key, None
+
+        out: Dict[str, bytes] = {}
+        for key, blob in self._pool().map(_read, keys):
+            if blob is not None:
+                out[key] = blob
+        return out
+
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))
+
+    def exists_many(self, keys: List[str]) -> set:
+        """One directory listing per key-directory answers the whole batch:
+        N stats collapse into a few readdirs — on a network filesystem each
+        stat is a round trip, so this is what keeps an N-task completion
+        wait O(N) total instead of O(N²).  Thanks to subdirectory sharding
+        each readdir covers only the probed keys' own directory (a job's
+        results), not the whole store."""
+        by_dir: Dict[str, List[Tuple[str, str]]] = {}
+        for k in keys:
+            sub, base = self._split(k)
+            by_dir.setdefault(sub, []).append((k, base))
+        present = set()
+        for sub, group in by_dir.items():
+            if len(group) < 8:
+                present.update(k for k, _ in group if self.exists(k))
+                continue
+            try:
+                names = set(os.listdir(os.path.join(self.root, sub)))
+            except OSError:
+                continue  # directory never created: none of these exist
+            present.update(k for k, base in group if base in names)
+        return present
 
     def delete(self, key: str) -> None:
         try:
             os.remove(self._path(key))
-            self._bump_cross_seq()
         except FileNotFoundError:
-            pass
+            return
+        with self._lock:
+            self._bump_cross_seq("del", [key])
+
+    @staticmethod
+    def _is_plane_file(name: str) -> bool:
+        # temp files and watch-plane files (".watch-seq" etc.)
+        return name.startswith(".") or name.endswith(".tmp") or ".tmp." in name
 
     def list(self, prefix: str) -> List[str]:
         out = []
-        for name in os.listdir(self.root):
-            # skip temp files and watch-plane files (".watch-seq" etc.)
-            if name.startswith(".") or name.endswith((".tmp",)) or ".tmp." in name:
+        try:
+            entries = list(os.scandir(self.root))
+        except OSError:
+            return out
+        for entry in entries:
+            name = entry.name
+            if self._is_plane_file(name):
                 continue
-            key = self._unpath(name)
-            if key.startswith(prefix):
-                out.append(key)
+            if entry.is_dir():
+                decoded = name.replace("%2F", "/")
+                # Prune subdirectories that can't hold matching keys.
+                head = decoded + "/"
+                if not (head.startswith(prefix) or prefix.startswith(head)):
+                    continue
+                for fname in os.listdir(entry.path):
+                    if self._is_plane_file(fname):
+                        continue
+                    key = head + fname
+                    if key.startswith(prefix):
+                        out.append(key)
+            elif name.startswith(prefix):
+                out.append(name)
         return sorted(out)
 
 
@@ -522,15 +929,20 @@ class ObjectStore(_Endpoint):
     # Watch state lives on the backend so that two store handles sharing
     # one backend (e.g. two ObjectStores over the same InMemoryBackend)
     # wake each other's waiters; these methods delegate.
-    def notify_put(self, key: str) -> None:
+    def notify_put(self, key: Optional[str] = None) -> None:
         """Wake every watcher of this store's backend: ``key`` just became
         visible.  Called by ``put_bytes`` on each successful write; external
-        feeders writing to the backend out of band may call it too."""
-        self.backend.notify_put()
+        feeders writing to the backend out of band may call it too (with no
+        key if they don't know what changed — waiters then re-probe)."""
+        self.backend.notify_put([key] if key is not None else None)
 
     def put_seq(self) -> int:
         """Snapshot of the backend's put counter; pass to :meth:`wait_put`."""
         return self.backend.put_seq()
+
+    def puts_since(self, last_seq: int):
+        """Delegates to the backend: see ``_Backend.puts_since``."""
+        return self.backend.puts_since(last_seq)
 
     def wait_put(self, last_seq: int, timeout_s: float) -> int:
         """Block until any put lands on the backend after the ``last_seq``
@@ -569,7 +981,9 @@ class ObjectStore(_Endpoint):
             OpRecord(worker, "mput", f"[{len(items)} keys]", total, vt, time.monotonic())
         )
         if won:
-            self.backend.notify_put()
+            # All batch keys are visible now (if_absent losers existed
+            # already), so the single coalesced wakeup can name them all.
+            self.backend.notify_put(list(items.keys()))
         return won
 
     def get_bytes(self, key: str, *, worker: str = "-") -> bytes:
@@ -599,6 +1013,19 @@ class ObjectStore(_Endpoint):
             OpRecord(worker, "head", key, 0, self.profile.read_latency_s, time.monotonic())
         )
         return ok
+
+    def exists_many(self, keys: List[str], *, worker: str = "-") -> set:
+        """Batched existence probe: the subset of ``keys`` present, charged
+        as one amortized round-trip (HEADs are request-bound, exactly like
+        ``mdel``).  Completion waits ride this — see ``wait_keys``."""
+        present = self.backend.exists_many(list(keys))
+        self.ledger.record(
+            OpRecord(
+                worker, "mhead", f"[{len(keys)} keys]", 0,
+                self.profile.read_latency_s, time.monotonic(),
+            )
+        )
+        return present
 
     def delete(self, key: str, *, worker: str = "-") -> None:
         self.backend.delete(key)
@@ -712,9 +1139,24 @@ class ObjectStore(_Endpoint):
         deadline = time.monotonic() + timeout_s
         tick = self.watch_tick_s(poll_s)
         pending = list(keys)
+        seq: Optional[int] = None
         while True:
-            seq = self.put_seq()
-            pending = [k for k in pending if not self.backend.exists(k)]
+            if seq is None or tick is not None:
+                # Full probe: first pass, tick mode (out-of-band writers),
+                # or an event whose key set was unknown.  One batched
+                # existence check per wake — a completion burst costs one
+                # readdir, not one stat per still-pending key.
+                seq = self.put_seq()
+                present = self.backend.exists_many(pending)
+            else:
+                # Incremental: consume exactly the keys recent put events
+                # named — O(1) bookkeeping per event, no backend probe.
+                seq, landed = self.puts_since(seq)
+                if landed is None:
+                    present = self.backend.exists_many(pending)
+                else:
+                    present = landed
+            pending = [k for k in pending if k not in present]
             if not pending:
                 return
             now = time.monotonic()

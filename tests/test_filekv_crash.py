@@ -1,0 +1,476 @@
+"""Crash safety of the log-structured ``FileKVStore`` (PR 5).
+
+Pins the contract the substrate's recovery story rests on:
+
+  * **committed prefix** — killing a writer process at an arbitrary point
+    (including mid-append and mid-compaction) loses at most the one
+    uncommitted transaction: a reopened store replays exactly the committed
+    prefix, with zero lost and zero duplicated records;
+  * **torn tails** — garbage or a half-written frame at the end of a log is
+    detected by the length/CRC framing, dropped on replay, and truncated by
+    the next writer;
+  * **compaction atomicity** — the generation header fences a snapshot
+    against the log it superseded, so the crash window between the two
+    renames (snapshot landed, log not yet swapped) reads back exactly the
+    same state and never double-applies non-idempotent records (rpush);
+  * **no half-compacted reads** — a concurrent reader in another handle
+    never observes a shard mid-compaction (multi-key transactions are
+    all-or-nothing across handles);
+  * **inotify watcher** — where inotify is available, a cross-handle wake
+    is delivered with ZERO timed poll wakeups (the poll backoff is only a
+    fallback).
+"""
+
+import glob
+import os
+import signal
+import struct
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.storage import FileKVStore
+from repro.storage.kv_store import encode_frame
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+# ---------------------------------------------------------------------------
+# subprocess writer harness
+# ---------------------------------------------------------------------------
+
+def _spawn_writer(root: str, compact_min_bytes: int) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(
+        [
+            sys.executable,
+            os.path.abspath(__file__),
+            "writer",
+            root,
+            str(compact_min_bytes),
+        ],
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+    )
+
+
+def _writer_main(root: str, compact_min_bytes: int) -> None:
+    """Write transactions as fast as possible until killed.  Each iteration
+    appends ``i`` to the ``log`` list and mirrors it into two keys that a
+    validator requires to be equal — so any replay divergence, lost commit,
+    or double-applied record is visible in the final state."""
+    kv = FileKVStore(
+        root, num_shards=1, fsync="never", compact_min_bytes=compact_min_bytes
+    )
+    i = kv.llen("log", worker="w")  # resume the sequence across restarts
+    while True:
+        kv.rpush("log", i, worker="w")
+        kv.mset({"a": i, "b": i}, worker="w")
+        i += 1
+
+
+def _run_kill_cycle(root: str, compact_min_bytes: int, min_entries: int) -> list:
+    """Spawn the writer, wait for progress, SIGKILL it, reopen, and return
+    the recovered ``log`` list."""
+    proc = _spawn_writer(root, compact_min_bytes)
+    watcher = FileKVStore(root, num_shards=1)
+    try:
+        deadline = time.monotonic() + 60
+        baseline = watcher.llen("log")
+        while watcher.llen("log") < baseline + min_entries:
+            assert proc.poll() is None, proc.stdout.read().decode()
+            assert time.monotonic() < deadline, "writer made no progress"
+            time.sleep(0.01)
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=15)
+        watcher.close()
+    fresh = FileKVStore(root, num_shards=1)
+    try:
+        entries = fresh.lrange("log")
+        a, b = fresh.mget(["a", "b"])
+        # the mirror keys land in one frame: both or neither
+        assert a == b, f"half-applied transaction after kill: a={a} b={b}"
+        # iteration i runs rpush(i) then mset(a=i): a kill between the two
+        # leaves the mirror exactly one behind the log head, never more
+        if entries:
+            assert a in (None, entries[-1], entries[-1] - 1), (
+                f"mirror diverged from log: a={a}, head={entries[-1]}"
+            )
+        return entries
+    finally:
+        fresh.close()
+
+
+def _assert_exact_prefix(entries: list) -> None:
+    """The recovered log must be 0..n-1 with no holes and no duplicates."""
+    assert entries == list(range(len(entries))), (
+        f"lost or duplicated records: len={len(entries)}, "
+        f"head={entries[:5]}, tail={entries[-5:]}"
+    )
+
+
+def test_kill_writer_midstream_recovers_committed_prefix(tmp_path):
+    """SIGKILL during steady appends: the committed prefix survives
+    exactly (compaction effectively disabled by a huge threshold)."""
+    entries = _run_kill_cycle(str(tmp_path / "kv"), 1 << 30, min_entries=40)
+    assert len(entries) >= 40
+    _assert_exact_prefix(entries)
+
+
+def test_kill_writer_mid_compaction_storm(tmp_path):
+    """SIGKILL under constant compaction churn (tiny threshold: the writer
+    compacts every few commits), repeated: recovery is still exact."""
+    root = str(tmp_path / "kv")
+    for _cycle in range(3):
+        entries = _run_kill_cycle(root, 2048, min_entries=30)
+        _assert_exact_prefix(entries)
+    # compaction actually ran: a generation snapshot exists
+    assert glob.glob(os.path.join(root, "shard-0.snap.*"))
+
+
+# ---------------------------------------------------------------------------
+# torn tails (crafted, deterministic)
+# ---------------------------------------------------------------------------
+
+def _shard_log(root: str) -> str:
+    (path,) = glob.glob(os.path.join(root, "shard-0.log"))
+    return path
+
+
+def test_torn_garbage_tail_dropped_and_truncated(tmp_path):
+    root = str(tmp_path / "kv")
+    kv = FileKVStore(root, num_shards=1)
+    kv.set("k", "keep", worker="t")
+    kv.rpush("q", 1, 2, worker="t")
+    kv.close()
+    with open(_shard_log(root), "ab") as f:
+        f.write(b"\xde\xad\xbe\xef torn garbage")
+    size_torn = os.path.getsize(_shard_log(root))
+    kv2 = FileKVStore(root, num_shards=1)
+    try:
+        assert kv2.get("k") == "keep"  # committed prefix intact
+        assert kv2.lrange("q") == [1, 2]
+        kv2.set("after", 1, worker="t")  # next commit truncates the garbage
+        assert os.path.getsize(_shard_log(root)) < size_torn + 64
+    finally:
+        kv2.close()
+    kv3 = FileKVStore(root, num_shards=1)
+    try:
+        assert kv3.get("after") == 1
+        assert kv3.get("k") == "keep"
+    finally:
+        kv3.close()
+
+
+def test_torn_half_frame_dropped(tmp_path):
+    """A frame with a valid header but truncated payload (writer died mid
+    ``pwrite``) is dropped; so is one with a corrupted payload (bad CRC)."""
+    root = str(tmp_path / "kv")
+    kv = FileKVStore(root, num_shards=1)
+    kv.set("k", 42, worker="t")
+    kv.close()
+    frame = encode_frame([("s", "lost", "value-that-never-committed")])
+    with open(_shard_log(root), "ab") as f:
+        f.write(frame[: len(frame) - 3])  # truncated payload
+    kv2 = FileKVStore(root, num_shards=1)
+    try:
+        assert kv2.get("k") == 42
+        assert kv2.get("lost") is None
+    finally:
+        kv2.close()
+    # corrupt CRC: flip a payload byte of a whole appended frame
+    bad = bytearray(frame)
+    bad[-1] ^= 0xFF
+    with open(_shard_log(root), "ab") as f:
+        f.write(bytes(bad))
+    kv3 = FileKVStore(root, num_shards=1)
+    try:
+        assert kv3.get("k") == 42
+        assert kv3.get("lost") is None
+    finally:
+        kv3.close()
+
+
+def test_truncated_log_header_recovers_from_snapshot(tmp_path):
+    """A log whose header itself is torn (crash during initial creation
+    models) falls back to the snapshot generation cleanly."""
+    root = str(tmp_path / "kv")
+    kv = FileKVStore(root, num_shards=1, compact_min_bytes=64)
+    for i in range(20):
+        kv.set(f"k{i}", i, worker="t")  # forces at least one compaction
+    kv.close()
+    assert glob.glob(os.path.join(root, "shard-0.snap.*"))
+    with open(_shard_log(root), "wb") as f:
+        f.write(b"\x00\x01")  # 2-byte husk: not even a whole header
+    kv2 = FileKVStore(root, num_shards=1)
+    try:
+        # everything up to the last compaction is in the snapshot; the
+        # husk is discarded, not misread
+        assert kv2.get("k0") == 0
+        kv2.set("post", 1, worker="t")
+        assert kv2.get("post") == 1
+    finally:
+        kv2.close()
+
+
+# ---------------------------------------------------------------------------
+# mid-compaction crash window (deterministic, via the engine seam)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_published_but_log_not_swapped_reads_back_identically(tmp_path):
+    """The compaction crash window: the gen+1 snapshot renamed but the log
+    still at gen with ALL its records — including non-idempotent list
+    appends.  Generation-suffixed snapshots make the new snapshot inert
+    until the log swap, so the state must read back identically (never
+    doubled), and — the subtle half — a live WARM peer that keeps
+    committing to the old-generation log after the compactor died must not
+    have those commits discarded by a later recovery."""
+    root = str(tmp_path / "kv")
+    kv = FileKVStore(root, num_shards=1)
+    peer = FileKVStore(root, num_shards=1)
+    for i in range(10):
+        kv.rpush("q", i, worker="t")  # replaying these twice would duplicate
+    kv.incr("ctr", 5, worker="t")
+    assert peer.llen("q") == 10  # peer is warm on the current log
+    engine = kv._engines[0]
+    state_before = dict(engine.load())
+    # simulate the crash: step 1 of compaction only, then "die"
+    engine._publish_snapshot(state_before)
+    kv.close()
+    # the warm peer keeps working against the old-generation log: its
+    # acknowledged commit must survive any subsequent recovery
+    peer.rpush("q", 10, worker="peer")
+    peer.close()
+    fresh = FileKVStore(root, num_shards=1)
+    try:
+        assert fresh.lrange("q") == list(range(11))  # not 0..9,0..9; incl. 10
+        assert fresh.get("ctr") == 5
+        fresh.rpush("q", 11, worker="t")
+        assert fresh.lrange("q") == list(range(12))
+    finally:
+        fresh.close()
+    again = FileKVStore(root, num_shards=1)
+    try:
+        assert again.lrange("q") == list(range(12))
+    finally:
+        again.close()
+
+
+def test_stored_none_is_a_real_queue_element(tmp_path):
+    """Redis LPOP nil-vs-stored distinction: a queued None round-trips
+    instead of being silently dropped."""
+    kv = FileKVStore(str(tmp_path / "kv"), num_shards=1)
+    try:
+        kv.rpush("q", None, 7, worker="t")
+        assert kv.blpop("q", timeout_s=5.0) is None  # the stored None
+        assert kv.lpop("q") == 7  # ...was actually consumed, not dropped
+        assert kv.llen("q") == 0
+    finally:
+        kv.close()
+
+
+def test_input_prefetch_does_not_share_mutable_objects():
+    """Two tasks whose equal inputs dedupe to one content-addressed key
+    must each get a private deserialized copy — a mutating task function
+    cannot corrupt its sibling's argument."""
+    from repro.core import WrenExecutor, get_all
+
+    with WrenExecutor(num_workers=1) as wex:
+
+        def pop_last(lst):
+            return lst.pop()
+
+        futs = wex.map(pop_last, [[1, 2], [1, 2], [1, 2], [1, 2]])
+        assert get_all(futs, timeout_s=60) == [2, 2, 2, 2]
+
+
+def test_concurrent_reader_never_observes_half_compacted_shard(tmp_path):
+    """A reader handle polls ``a``/``b`` (always written in one frame)
+    while a writer subprocess churns commits and compactions: every read
+    must be internally consistent."""
+    root = str(tmp_path / "kv")
+    proc = _spawn_writer(root, 2048)
+    reader = FileKVStore(root, num_shards=1)
+    try:
+        deadline = time.monotonic() + 60
+        while reader.llen("log") < 5:
+            assert proc.poll() is None, proc.stdout.read().decode()
+            assert time.monotonic() < deadline
+            time.sleep(0.01)
+        for _ in range(300):
+            a, b = reader.mget(["a", "b"])
+            assert a == b, f"reader saw a half-applied state: a={a} b={b}"
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=15)
+        reader.close()
+
+
+# ---------------------------------------------------------------------------
+# log-structure mechanics worth pinning directly
+# ---------------------------------------------------------------------------
+
+def test_compaction_bounds_log_and_preserves_state(tmp_path):
+    root = str(tmp_path / "kv")
+    kv = FileKVStore(root, num_shards=1, compact_min_bytes=4096)
+    for i in range(500):
+        kv.set(f"k{i % 7}", "v" * 100, worker="t")
+    kv.close()
+    # the log was repeatedly truncated: far smaller than 500 × frame size
+    assert os.path.getsize(_shard_log(root)) < 20_000
+    fresh = FileKVStore(root, num_shards=1)
+    try:
+        for i in range(7):
+            assert fresh.get(f"k{i}") == "v" * 100
+    finally:
+        fresh.close()
+
+
+def test_log_and_snapshot_engines_agree(tmp_path):
+    """Differential check: the same op sequence through both engines ends
+    in the same visible state."""
+    stores = {
+        "log": FileKVStore(str(tmp_path / "log"), num_shards=2, engine="log",
+                           compact_min_bytes=512),
+        "snapshot": FileKVStore(str(tmp_path / "snap"), num_shards=2,
+                                engine="snapshot"),
+    }
+    from repro.storage import DELETE
+
+    for kv in stores.values():
+        kv.mset({"a": 1, "b": [1, 2], "c": "x"}, worker="t")
+        kv.rpush("q", 1, 2, 3, worker="t")
+        assert kv.lpop("q") == 1
+        kv.incr("ctr", 2.5, worker="t")
+        kv.eval("b", lambda v: v + [3], worker="t")
+        kv.eval("c", lambda v: DELETE, worker="t")
+        kv.delete("a", worker="t")
+        kv.setnx("nx", 9, worker="t")
+        assert kv.lpop_n("q", 5) == [2, 3]
+    views = {}
+    for name, kv in stores.items():
+        reopened = FileKVStore(kv.root, num_shards=2, engine=kv.engine)
+        views[name] = {
+            k: reopened.get(k) for k in ["a", "b", "c", "ctr", "nx", "q"]
+        }
+        reopened.close()
+        kv.close()
+    assert views["log"] == views["snapshot"]
+    assert views["log"]["b"] == [1, 2, 3] and views["log"]["a"] is None
+
+
+def test_disk_bytes_written_is_o_record_not_o_shard(tmp_path):
+    """The structural claim behind the perf win, pinned deterministically:
+    with a large resident state, the log engine's bytes-per-op stay flat
+    while the snapshot engine rewrites the whole shard every commit."""
+    # distinct values per key (pickle memoizes repeated identical objects,
+    # which would shrink the snapshot engine's rewrite artificially)
+    resident = {f"key{i}": f"v{i:04d}" * 20 for i in range(300)}
+    log_kv = FileKVStore(str(tmp_path / "log"), num_shards=1, engine="log")
+    snap_kv = FileKVStore(str(tmp_path / "snap"), num_shards=1, engine="snapshot")
+    for kv in (log_kv, snap_kv):
+        kv.mset(resident, worker="t")
+        mark = kv.disk_bytes_written()
+        for i in range(50):
+            kv.set("hot", i, worker="t")
+        kv.per_op = (kv.disk_bytes_written() - mark) / 50
+        kv.close()
+    assert log_kv.per_op < 100  # one small frame per op
+    assert snap_kv.per_op > 10_000  # whole-shard pickle per op
+    assert snap_kv.per_op / log_kv.per_op > 100
+
+
+def test_frame_header_is_length_crc(tmp_path):
+    """The framing layout is a cross-process contract (another process may
+    be a different build): pin it."""
+    frame = encode_frame([("s", "k", 1)])
+    length, crc = struct.unpack_from("<II", frame)
+    assert length == len(frame) - 8
+    import zlib
+
+    assert crc == zlib.crc32(frame[8:])
+
+
+# ---------------------------------------------------------------------------
+# inotify watcher: event-driven, zero poll wakeups
+# ---------------------------------------------------------------------------
+
+def test_inotify_wake_has_zero_poll_wakeups(tmp_path):
+    """Where inotify is available, a cross-handle blpop wake rides kernel
+    events: the watcher runs in inotify mode and its timed-poll counter
+    stays exactly 0 (the exponential backoff is only the fallback)."""
+    from repro.storage.inotify import Inotify
+
+    if not Inotify.available():
+        pytest.skip("inotify not available on this platform")
+    root = str(tmp_path / "kv")
+    consumer = FileKVStore(root, num_shards=1)
+    producer = FileKVStore(root, num_shards=1)
+    try:
+        import threading
+
+        got = []
+        th = threading.Thread(
+            target=lambda: got.append(consumer.blpop("q", timeout_s=20.0))
+        )
+        th.start()
+        time.sleep(0.3)  # let the consumer park on the shard condition
+        producer.rpush("q", "wake", worker="t")
+        th.join(timeout=20)
+        assert got == ["wake"]
+        watcher = consumer._watcher
+        assert watcher is not None
+        assert watcher.mode == "inotify"
+        assert watcher.poll_wakeups == 0
+    finally:
+        consumer.close()
+        producer.close()
+
+
+def test_poll_fallback_still_works_when_inotify_disabled(tmp_path):
+    """Forcing the fallback (use_inotify=False) must still deliver the
+    cross-handle wake — via timed backoff polls this time."""
+    from repro.storage.object_store import _PollWatcher
+
+    root = str(tmp_path / "kv")
+    consumer = FileKVStore(root, num_shards=1)
+    producer = FileKVStore(root, num_shards=1)
+    # pre-build the watcher with inotify forced off
+    paths = [eng.watch_path for eng in consumer._engines]
+
+    def _on_change(changed):
+        for sidx in changed:
+            sh = consumer._shards[sidx]
+            with sh.lock:
+                sh.touch()
+
+    consumer._watcher = _PollWatcher(paths, _on_change, use_inotify=False)
+    try:
+        import threading
+
+        got = []
+        th = threading.Thread(
+            target=lambda: got.append(consumer.blpop("q", timeout_s=20.0))
+        )
+        th.start()
+        time.sleep(0.2)
+        producer.rpush("q", "wake", worker="t")
+        th.join(timeout=20)
+        assert got == ["wake"]
+        assert consumer._watcher.mode == "poll"
+        assert consumer._watcher.poll_wakeups > 0
+    finally:
+        consumer.close()
+        producer.close()
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 4 and sys.argv[1] == "writer":
+        _writer_main(sys.argv[2], int(sys.argv[3]))
+    else:
+        raise SystemExit(f"usage: {sys.argv[0]} writer <root> <compact_min_bytes>")

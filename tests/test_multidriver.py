@@ -185,6 +185,118 @@ def test_straggler_threshold_quantile_vs_legacy():
     assert quantile_cfg.straggler_threshold_s(noop) == quantile_cfg.min_speculation_age_s
 
 
+def test_straggler_threshold_fenced_zombie_backoff():
+    """Every fenced zombie multiplies the threshold: a job that keeps
+    fencing live workers was speculating too eagerly, so it backs off
+    (and with enough zombies, effectively stops)."""
+    durations = [0.1] * 20
+    cfg = SchedulerConfig(speculation_quantile=0.95, speculation_k=2.0)
+    base = cfg.straggler_threshold_s(durations)
+    assert cfg.straggler_threshold_s(durations, fenced=1) == pytest.approx(2 * base)
+    assert cfg.straggler_threshold_s(durations, fenced=9) == pytest.approx(10 * base)
+    # the backoff multiplies the *floored* threshold too
+    noop = [1e-5] * 20
+    assert cfg.straggler_threshold_s(noop, fenced=3) == pytest.approx(
+        4 * cfg.min_speculation_age_s
+    )
+    # knob off → no backoff
+    off = SchedulerConfig(speculation_zombie_backoff=0.0)
+    assert off.straggler_threshold_s(durations, fenced=50) == pytest.approx(
+        off.straggler_threshold_s(durations)
+    )
+
+
+def test_speculation_budget_formula():
+    cfg = SchedulerConfig(speculation_budget_frac=0.10)
+    assert cfg.speculation_budget(1) == 1  # small jobs may still hedge once
+    assert cfg.speculation_budget(9) == 1
+    assert cfg.speculation_budget(20) == 2
+    assert cfg.speculation_budget(100) == 10
+
+
+def test_speculation_budget_caps_duplicates():
+    """A job of 20 tasks with a 10% budget gets at most 2 duplicates no
+    matter how many tasks look like stragglers."""
+    store, kv, sched, func = _mk(
+        lease_timeout_s=30.0,
+        min_completed_for_speculation=1,
+        min_speculation_age_s=0.01,
+        speculation_k=1.0,
+        speculation_budget_frac=0.10,
+    )
+    n = 20
+    tasks = [
+        TaskSpec.make("budget", func, stage_input(store, "budget", i), i)
+        for i in range(n)
+    ]
+    sched.submit_many(tasks)
+    for i in range(n):
+        assert sched.lease_next(f"w{i}") is not None
+    kv.rpush("sched/durations/budget", 0.001, worker="t")  # tiny q95
+    time.sleep(0.05)  # every leased task is past the floor: all stragglers
+    assert sched.speculate() == 2  # 10% of 20, not 20
+    assert kv.get("sched/speccount/budget") == 2
+    assert kv.llen("sched/queue") == 2
+    # later passes add nothing: the budget is spent for the job's lifetime
+    time.sleep(0.25)  # durations cache expires; candidates still pending
+    assert sched.speculate() == 0
+    assert kv.llen("sched/queue") == 2
+
+
+def test_fenced_zombies_stop_speculation():
+    """With fenced-zombie completions recorded, the same straggler that
+    would have been duplicated is left alone (threshold backed off)."""
+    store, kv, sched, func = _mk(
+        lease_timeout_s=30.0,
+        min_completed_for_speculation=1,
+        min_speculation_age_s=0.01,
+        speculation_k=1.0,
+    )
+    task = _submit_one(store, sched, func, job="zfb")
+    assert sched.lease_next("w0") is not None
+    kv.rpush("sched/durations/zfb", 0.001, worker="t")
+    kv.incr("sched/fenced/zfb", 50, worker="t")  # job kept fencing zombies
+    time.sleep(0.05)  # past the un-backed-off floor
+    assert sched.speculate() == 0  # threshold now 51x the floor: no dup
+    assert kv.llen("sched/queue") == 0
+    # scrub the feedback → the straggler is duplicated after all
+    kv.delete("sched/fenced/zfb", worker="t")
+    sched._dur_cache.clear()  # drop the cached (durations, fenced) read
+    total = sched.speculate()
+    assert total == 1
+    dups = kv.lrange("sched/queue")
+    assert [d.task_id for d in dups] == [task.task_id]
+
+
+def test_fenced_complete_increments_zombie_counter():
+    store, kv, sched, func = _mk(lease_timeout_s=0.05)
+    _submit_one(store, sched, func, job="zc")
+    t1 = sched.lease_next("w0")
+    time.sleep(0.1)
+    assert sched.reap() == 1
+    t2 = sched.lease_next("w1")
+    # the zombie's complete is fenced AND counted as feedback
+    assert sched.complete(t1, "w0", 9.9) is False
+    assert kv.get("sched/fenced/zc") == 1
+    # the owner's complete is not counted
+    assert sched.complete(t2, "w1", 0.01) is True
+    assert kv.get("sched/fenced/zc") == 1
+
+
+def test_finish_job_gcs_speculation_feedback_keys():
+    store, kv, sched, func = _mk()
+    task = _submit_one(store, sched, func, job="gcf")
+    t1 = sched.lease_next("w0")
+    run_task(store, t1, worker="w0")
+    sched.complete(t1, "w0", 0.01)
+    kv.incr("sched/speccount/gcf", 1, worker="t")
+    kv.incr("sched/fenced/gcf", 1, worker="t")
+    sched.finish_job("gcf")
+    assert kv.get("sched/speccount/gcf") is None
+    assert kv.get("sched/fenced/gcf") is None
+    assert kv.get("sched/attempts/" + task.task_id) is None
+
+
 # ---------------------------------------------------------------------------
 # two-scheduler soak (shared in-memory KV, concurrent reap/speculate)
 # ---------------------------------------------------------------------------

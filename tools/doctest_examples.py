@@ -1,0 +1,62 @@
+"""Doctest the module docstrings (file headers) of example scripts.
+
+The examples are runnable programs, some of which import JAX and spin up
+real worker pools — importing them just to doctest their headers would be
+slow and side-effectful.  So this tool parses each file with ``ast``,
+extracts ONLY the module docstring, and runs doctest over it with a clean
+namespace (each docstring must import what it uses, exactly what a reader
+pasting the snippet would do).
+
+CI runs this over ``examples/*.py`` (docs job): a renamed API or a stale
+snippet in an example header fails the build instead of rotting.
+
+Usage:  PYTHONPATH=src python tools/doctest_examples.py examples/*.py
+"""
+
+from __future__ import annotations
+
+import ast
+import doctest
+import sys
+
+
+def run_file(path: str) -> tuple:
+    """(attempted, failed) doctest examples in ``path``'s module docstring."""
+    with open(path, "r", encoding="utf-8") as f:
+        source = f.read()
+    doc = ast.get_docstring(ast.parse(source))
+    if not doc:
+        return 0, 0
+    parser = doctest.DocTestParser()
+    test = parser.get_doctest(doc, {}, name=path, filename=path, lineno=0)
+    if not test.examples:
+        return 0, 0
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS)
+    runner.run(test)
+    return runner.tries, runner.failures
+
+
+def main(paths) -> int:
+    total = failed = files_with_tests = 0
+    for path in paths:
+        tries, fails = run_file(path)
+        if tries:
+            files_with_tests += 1
+            status = "FAIL" if fails else "ok"
+            print(f"{status:4s} {path}: {tries} examples, {fails} failures")
+        total += tries
+        failed += fails
+    print(
+        f"doctested {files_with_tests} example headers: "
+        f"{total} examples, {failed} failures"
+    )
+    if failed:
+        return 1
+    if not total:
+        print("error: no doctest examples found in any header", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
