@@ -228,8 +228,10 @@ def terasort(
 def verify_sorted(store: ObjectStore, output_prefix: str) -> bool:
     """Global order check across output partitions."""
     prev_last: Optional[bytes] = None
-    for key in store.list(output_prefix):
-        recs: np.ndarray = store.get(key)
+    keys = store.list(output_prefix)
+    parts = store.get_many(keys, missing="error")
+    for key in keys:
+        recs: np.ndarray = parts[key]
         if len(recs) == 0:
             continue
         keys = [shf.record_sort_key(r) for r in recs]

@@ -81,11 +81,11 @@ class ResultFuture:
         return self._unwrap(res)
 
     def errors(self) -> List[TaskResult]:
-        """All published failed attempts (for diagnostics)."""
-        out = []
-        for key in self.store.backend.list(self.task.result_key + ".err"):
-            out.append(self.store.get(key))
-        return out
+        """All published failed attempts (for diagnostics), fetched in one
+        batched round-trip."""
+        keys = self.store.backend.list(self.task.result_key + ".err")
+        got = self.store.get_many(keys, worker="driver")
+        return [got[k] for k in keys if k in got]
 
 
 def wait(
@@ -166,6 +166,7 @@ def wait(
                 store.fallback_tick_waits += 1
                 store.wait_put(seq, min(tick, remaining))
         else:
+            # reprolint: disable=EVENT001(no store handle to watch in the storeless path; bounded fallback tick)
             time.sleep(min(tick or 0.05, remaining))
 
 

@@ -122,6 +122,7 @@ class ParameterServer:
         deadline = time.monotonic() + timeout_s
         while True:
             seq = self.kv.shard_seq(vkey)
+            # reprolint: disable=BATCH001(single-key recheck between shard-condition waits; there is no fan-out to batch)
             ver = int(self.kv.get(vkey, 0, worker=worker))
             if ver > seen_version:
                 return ver

@@ -143,6 +143,14 @@ class SchedulerConfig:
     job that keeps producing zombies was speculating on tasks that were
     *alive*, so its threshold was too tight, and backing it off stops the
     thrash.
+
+    The backoff also *heals*: each subsequent completion that wins its
+    fence un-fenced decays the job's zombie counter by
+    ``speculation_zombie_decay`` (deleting the key at zero), so a
+    transient blip — one slow heartbeat that fenced a batch of live
+    attempts — doesn't suppress speculation for the rest of a long job.
+    Set the decay to 0 to keep the counter sticky (the pre-decay
+    behavior).
     """
 
     lease_timeout_s: float = 1.0
@@ -154,6 +162,7 @@ class SchedulerConfig:
     min_speculation_age_s: float = 0.05
     speculation_budget_frac: float = 0.10
     speculation_zombie_backoff: float = 1.0
+    speculation_zombie_decay: float = 1.0
     heartbeat_interval_s: float = 0.2
     idle_tick_s: float = 0.5  # control-loop fallback when no work in flight
 
@@ -199,6 +208,9 @@ class Scheduler:
         # the per-lease KV probe for jobs this handle already saw finish.
         self._finished_jobs: Set[str] = set()
         self._finished_order: Deque[str] = deque()
+        # Jobs this handle saw fence a zombie: gates the decay eval in
+        # complete() so the common zero-fenced path pays no extra KV op.
+        self._fenced_hint: Set[str] = set()
         # Per-job (durations, fenced-zombie count) cache for speculate():
         # one KV read set per heartbeat interval per job, not one per
         # control-loop pass.  Entries: (read_at, durations, fenced).
@@ -565,14 +577,42 @@ class Scheduler:
             won = False
         elif won:
             self.kv.rpush(_DURATION + task.job_id, duration_s, worker=worker)
+            self._maybe_decay_fenced(task.job_id, worker)
         else:
             # A fenced zombie ran to completion: it was reaped or superseded
             # while actually alive.  Count it per job — the speculation rule
             # reads this back and raises the job's threshold, so a job that
             # keeps fencing zombies stops speculating (see SchedulerConfig).
             self.kv.incr(_FENCED + task.job_id, 1, worker=worker)
+            with self._lock:
+                self._fenced_hint.add(task.job_id)
         self._activity_evt.set()
         return won
+
+    def _maybe_decay_fenced(self, job_id: str, worker: str) -> None:
+        """Decay the job's fenced-zombie counter on a clean (won) completion
+        — the backoff heals once attempts stop getting fenced while alive
+        (see ``SchedulerConfig``).  Gated on having *seen* a fence for this
+        job (local hint, or a nonzero count in the speculate() cache, which
+        covers fences raised by other drivers) so the common zero-fenced
+        path costs no extra KV round-trip per completion."""
+        decay = self.config.speculation_zombie_decay
+        if decay <= 0:
+            return
+        with self._lock:
+            hinted = job_id in self._fenced_hint
+            cached = self._dur_cache.get(job_id)
+        if not hinted and not (cached is not None and cached[2] > 0):
+            return
+
+        def _decay(v: object) -> object:
+            cur = float(v or 0) - decay
+            return cur if cur > 1e-9 else DELETE
+
+        new = self.kv.eval(_FENCED + job_id, _decay, worker=worker)
+        if new is None:
+            with self._lock:
+                self._fenced_hint.discard(job_id)
 
     # ---- index cache maintenance ----------------------------------------
     def refresh_index(self) -> int:
@@ -638,6 +678,7 @@ class Scheduler:
                 if not self._lease_heap or self._lease_heap[0][0] > now:
                     break
                 _, task_id = heapq.heappop(self._lease_heap)
+            # reprolint: disable=BATCH001(lazy heap revalidation is inherently per-candidate: each pop's read gates the next pop)
             lease = self.kv.get(_LEASE + task_id, worker="scheduler")
             if lease is None:
                 with self._lock:
@@ -659,6 +700,7 @@ class Scheduler:
                 # heartbeat slipped in — re-hint if a record is still there;
                 # otherwise drop the hint marker too, or refresh_index would
                 # skip every future lease of this task on this handle.
+                # reprolint: disable=BATCH001(per-candidate re-hint after a lost reap race; no batch exists)
                 fresh = self.kv.get(_LEASE + task_id, worker="scheduler")
                 with self._lock:
                     if fresh is not None:
@@ -673,9 +715,11 @@ class Scheduler:
             if (
                 spec is None
                 or self._job_finished(spec.job_id)
+                # reprolint: disable=BATCH001(one probe per actually-expired lease, gated by the eval win above)
                 or self.store.backend.exists(spec.result_key)
             ):
                 continue
+            # reprolint: disable=BATCH001(requeue must be visible before the next pop's revalidation; one push per won reap)
             self.kv.rpush(_Q, spec, worker="scheduler")
             self._signal_work()
             n += 1
@@ -710,6 +754,7 @@ class Scheduler:
                 durations, fenced = cached[1], cached[2]
             else:
                 durations = self.kv.lrange(_DURATION + job_id, worker="scheduler")
+                # reprolint: disable=BATCH001(time-gated cache refill: one read per heartbeat interval per job, not per tick)
                 fenced = int(self.kv.get(_FENCED + job_id, 0, worker="scheduler") or 0)
                 self._dur_cache[job_id] = (now, durations, fenced)
             if len(durations) < self.config.min_completed_for_speculation:
@@ -723,6 +768,7 @@ class Scheduler:
                         break
                     started, task_id = heapq.heappop(heap)
                     already = task_id in self._speculated
+                # reprolint: disable=BATCH001(lazy heap revalidation is inherently per-candidate: each pop's read gates the next pop)
                 lease = self.kv.get(_LEASE + task_id, worker="scheduler")
                 if lease is None:
                     continue  # finished or reaped; a re-lease pushes a fresh hint
@@ -733,6 +779,7 @@ class Scheduler:
                 spec = lease.get("spec")
                 if spec is None or already:
                     continue
+                # reprolint: disable=BATCH001(one probe per straggler candidate that survived revalidation)
                 if self.store.backend.exists(spec.result_key):
                     continue
                 if budget is None:
@@ -743,6 +790,7 @@ class Scheduler:
                     n_tasks = self.kv.llen(_JOBTASKS + job_id, worker="scheduler")
                     budget = self.config.speculation_budget(n_tasks)
                     used = int(
+                        # reprolint: disable=BATCH001(resolved once per job pass, on the first real candidate only)
                         self.kv.get(_SPECCOUNT + job_id, 0, worker="scheduler") or 0
                     )
                     if used >= budget:
@@ -759,6 +807,7 @@ class Scheduler:
                     break
                 with self._lock:
                     self._speculated.add(task_id)
+                # reprolint: disable=BATCH001(each duplicate push is individually gated by its setnx mark and budget incr)
                 self.kv.rpush(_Q, spec, worker="scheduler")
                 self._signal_work()
                 n += 1
@@ -810,10 +859,9 @@ class Scheduler:
 
     def pending(self) -> int:
         with self._lock:
-            specs = dict(self._specs)
-        return sum(
-            0 if self.store.backend.exists(s.result_key) else 1 for s in specs.values()
-        )
+            specs = list(self._specs.values())
+        done = self.store.backend.exists_many([s.result_key for s in specs])
+        return sum(1 for s in specs if s.result_key not in done)
 
     def queue_depth(self) -> int:
         return self.kv.llen(_Q, worker="scheduler")

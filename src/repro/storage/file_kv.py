@@ -566,6 +566,7 @@ class FileKVStore(KVStore):
                 self._sh = store._shards[sidx]
                 self._sh.lock.acquire()
                 fd = store._lock_fd(sidx)
+                # reprolint: disable=LOCK001(thread-lock-then-flock is the txn protocol's fixed lock order; every shard txn takes both)
                 fcntl.flock(fd, fcntl.LOCK_EX)
                 eng = store._engines[sidx]
                 try:
@@ -638,6 +639,7 @@ class FileKVStore(KVStore):
             sh = self._shards[sidx]
             with sh.lock:
                 fd = self._lock_fd(sidx)
+                # reprolint: disable=LOCK001(durability barrier takes the same thread-lock-then-flock order as _txn)
                 fcntl.flock(fd, fcntl.LOCK_EX)
                 try:
                     self._engines[sidx].sync()

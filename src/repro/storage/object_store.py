@@ -740,6 +740,7 @@ class FileBackend(_Backend):
                 self._io_pool = None
             if self._puts_since_sync and self.fsync in ("auto", "batch"):
                 self._puts_since_sync = 0
+                # reprolint: disable=LOCK001(shutdown-only flush; no concurrent critical section contends for this lock by then)
                 os.sync()
 
     def _put_one(self, key: str, blob: bytes, *, if_absent: bool, durable: bool) -> bool:
@@ -1038,6 +1039,7 @@ class ObjectStore(_Endpoint):
         (cf. :meth:`get_many_bytes` — per-request latency, not bytes,
         dominates deletes)."""
         for k in keys:
+            # reprolint: disable=BATCH001(this IS the batched verb: backend deletes are local unlinks, charged one amortized round-trip below)
             self.backend.delete(k)
         self.ledger.record(
             OpRecord(

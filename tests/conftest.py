@@ -1,0 +1,42 @@
+"""Shared fixtures: opt-in runtime sanitizer.
+
+``REPRO_SANITIZE=1 pytest ...`` runs the whole suite under the runtime
+sanitizer (``repro.analysis.sanitizer``): every ``KVStore`` / ``FileKVStore``
+/ ``ObjectStore`` / backend constructed during a test is instrumented in
+place, shard and scheduler locks are tracked, and a test that triggers any
+invariant report (unfenced ``sched/`` write, lock-order inversion, blocking
+op under a lock, torn multi-key read) **fails** with the report list —
+even if its own assertions passed.  CI runs the multidriver suite this way.
+"""
+
+from __future__ import annotations
+
+import os
+
+import pytest
+
+_SANITIZE = os.environ.get("REPRO_SANITIZE") == "1"
+
+if _SANITIZE:
+    from repro.analysis import sanitizer
+
+    sanitizer.install()
+
+
+@pytest.fixture(autouse=True)
+def _sanitizer_guard():
+    if not _SANITIZE:
+        yield
+        return
+    from repro.analysis import sanitizer
+
+    sanitizer.state.clear()
+    yield
+    reports = sanitizer.state.snapshot()
+    if reports:
+        lines = "\n".join(f"  {r}" for r in reports)
+        sanitizer.state.clear()
+        pytest.fail(
+            f"runtime sanitizer: {len(reports)} invariant report(s):\n{lines}",
+            pytrace=False,
+        )

@@ -269,7 +269,9 @@ def test_fenced_zombies_stop_speculation():
 
 
 def test_fenced_complete_increments_zombie_counter():
-    store, kv, sched, func = _mk(lease_timeout_s=0.05)
+    # decay off: pins that a won complete is never *counted* as a fence
+    # (the default decay path is pinned separately below)
+    store, kv, sched, func = _mk(lease_timeout_s=0.05, speculation_zombie_decay=0.0)
     _submit_one(store, sched, func, job="zc")
     t1 = sched.lease_next("w0")
     time.sleep(0.1)
@@ -278,9 +280,52 @@ def test_fenced_complete_increments_zombie_counter():
     # the zombie's complete is fenced AND counted as feedback
     assert sched.complete(t1, "w0", 9.9) is False
     assert kv.get("sched/fenced/zc") == 1
-    # the owner's complete is not counted
+    # the owner's complete is not counted (and, with decay off, not healed)
     assert sched.complete(t2, "w1", 0.01) is True
     assert kv.get("sched/fenced/zc") == 1
+
+
+def test_won_complete_decays_zombie_counter():
+    """The zombie backoff heals: each un-fenced (won) completion decays the
+    job's fenced counter by ``speculation_zombie_decay``, deleting the key
+    at zero — a transient fencing blip doesn't suppress speculation for
+    the rest of a long job."""
+    store, kv, sched, func = _mk(lease_timeout_s=0.05)  # default decay = 1.0
+    for i in range(2):
+        _submit_one(store, sched, func, job="zd", idx=i, value=i)
+    t1 = sched.lease_next("w0")
+    time.sleep(0.1)
+    assert sched.reap() == 1
+    t1b = sched.lease_next("w1")
+    assert sched.complete(t1, "w0", 9.9) is False  # fenced zombie
+    assert kv.get("sched/fenced/zd") == 1
+    # a clean completion heals the backoff; the key is deleted at zero
+    assert sched.complete(t1b, "w1", 0.01) is True
+    assert kv.get("sched/fenced/zd") is None
+    # further wins on a never-fenced-again job leave the keyspace alone
+    t2 = sched.lease_next("w2")
+    assert sched.complete(t2, "w2", 0.01) is True
+    assert kv.get("sched/fenced/zd") is None
+
+
+def test_zombie_decay_gated_on_observed_fences():
+    """A handle only pays the decay round-trip for jobs it has *seen*
+    fence — via its own fenced complete (local hint) or a nonzero count in
+    its speculate() cache (fences raised by another driver).  A foreign
+    fence the handle never observed is left un-decayed."""
+    store, kv, sched, func = _mk()
+    for i in range(2):
+        _submit_one(store, sched, func, job="zg", idx=i, value=i)
+    # a foreign driver's fence, invisible to this handle
+    kv.incr("sched/fenced/zg", 2, worker="other-driver")
+    t0 = sched.lease_next("w0")
+    assert sched.complete(t0, "w0", 0.01) is True
+    assert kv.get("sched/fenced/zg") == 2  # unobserved -> untouched
+    # once the speculate() cache has seen the count, wins decay it
+    sched._dur_cache["zg"] = (time.monotonic(), [0.01], 2)
+    t1 = sched.lease_next("w1")
+    assert sched.complete(t1, "w1", 0.01) is True
+    assert kv.get("sched/fenced/zg") == 1
 
 
 def test_finish_job_gcs_speculation_feedback_keys():

@@ -1,0 +1,296 @@
+"""reprolint (static invariant lint) + runtime sanitizer.
+
+Per rule: one minimal offending snippet and one clean counterpart; the
+disable-comment escape hatch; the baseline-file CLI contract; and the pin
+that the repo's own tree lints clean.  Then the four runtime detectors,
+exercised directly against sanitized stores and tracked locks.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.analysis import lint, sanitizer
+from repro.storage.kv_store import KVStore
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_REPO, "src", "repro")
+
+
+def _rules(source, path="core/example.py"):
+    return sorted({f.rule for f in lint.active(lint.lint_source(source, path))})
+
+
+# ---------------------------------------------------------------------------
+# static rules: offending + clean snippet per rule
+# ---------------------------------------------------------------------------
+
+
+def test_fence001_bare_sched_write():
+    assert _rules('def f(kv):\n    kv.set("sched/lease/t1", 1)\n') == ["FENCE001"]
+    assert _rules('def f(kv):\n    kv.delete("sched/epoch/t1")\n') == ["FENCE001"]
+    # fenced mutation verbs are the sanctioned path
+    assert _rules('def f(kv):\n    kv.eval("sched/lease/t1", fn)\n') == []
+    assert _rules('def f(kv):\n    kv.incr("sched/epoch/t1", 1)\n') == []
+    # non-sched keyspace is anyone's to write
+    assert _rules('def f(kv):\n    kv.set("ps/block/0", 1)\n') == []
+
+
+def test_fence001_blessed_finish_job():
+    src = (
+        "class Scheduler:\n"
+        "    def finish_job(self, job):\n"
+        '        self.kv.mdel(["sched/lease/a"])\n'
+    )
+    assert _rules(src, path="src/repro/core/scheduler.py") == []
+    # same code anywhere else is a violation
+    assert _rules(src, path="src/repro/core/other.py") == ["FENCE001"]
+
+
+def test_batch001_per_key_op_in_loop():
+    bad = "def f(kv, keys):\n    for k in keys:\n        kv.get(k)\n"
+    assert _rules(bad) == ["BATCH001"]
+    good = "def f(kv, keys):\n    vals = kv.mget(keys)\n"
+    assert _rules(good) == []
+    # store verbs and comprehensions count too
+    comp = "def f(store, keys):\n    return [store.get(k) for k in keys]\n"
+    assert _rules(comp) == ["BATCH001"]
+
+
+def test_lock001_blocking_under_lock():
+    bad = (
+        "def f(self, kv):\n"
+        "    with self._lock:\n"
+        '        kv.get("k")\n'
+    )
+    assert _rules(bad) == ["LOCK001"]
+    good = (
+        "def f(self, kv):\n"
+        "    with self._lock:\n"
+        "        x = self.cache\n"
+        '    kv.get("k")\n'
+    )
+    assert _rules(good) == []
+    # Condition.wait is the sanctioned blocking-under-lock idiom
+    waity = (
+        "def f(self):\n"
+        "    with self.cond:\n"
+        "        self.cond.wait(1.0)\n"
+    )
+    assert _rules(waity) == []
+
+
+def test_event001_sleep_polling_loop():
+    bad = (
+        "import time\n"
+        "def f(done):\n"
+        "    while not done():\n"
+        "        time.sleep(0.1)\n"
+    )
+    assert _rules(bad) == ["EVENT001"]
+    # Watcher classes own the fallback tick
+    ok = (
+        "import time\n"
+        "class FileWatcher:\n"
+        "    def run(self, done):\n"
+        "        while not done():\n"
+        "            time.sleep(0.1)\n"
+    )
+    assert _rules(ok) == []
+
+
+def test_gc001_delete_without_tombstone():
+    bad = "def gc(kv, keys):\n" '    kv.mdel(["shuffle/job1/p0"])\n'
+    assert _rules(bad) == ["GC001"]
+    good = (
+        "def gc(kv, keys):\n"
+        '    kv.set("sched/finished/job1", 1)\n'
+        '    kv.mdel(["shuffle/job1/p0"])\n'
+    )
+    # the tombstone write itself is not a FENCE001 hit (finished/ is the
+    # tombstone namespace) — but it is outside finish_job, so check GC001
+    # in isolation via disabled filtering
+    assert "GC001" not in _rules(good)
+
+
+# ---------------------------------------------------------------------------
+# escape hatch + baseline
+# ---------------------------------------------------------------------------
+
+
+def test_disable_comment_waives_finding():
+    src = (
+        "def f(kv, keys):\n"
+        "    for k in keys:\n"
+        "        # reprolint: disable=BATCH001(demo reason)\n"
+        "        kv.get(k)\n"
+    )
+    findings = lint.lint_source(src, "core/example.py")
+    assert lint.active(findings) == []
+    waived = [f for f in findings if f.disabled]
+    assert len(waived) == 1
+    assert waived[0].rule == "BATCH001"
+    assert waived[0].disable_reason == "demo reason"
+    assert lint.disabled_counts(findings) == {"BATCH001": 1}
+    # a disable for the wrong rule waives nothing
+    wrong = src.replace("BATCH001", "FENCE001")
+    assert _rules(wrong) == ["BATCH001"]
+
+
+def test_cli_strict_and_baseline(tmp_path):
+    import importlib.util
+
+    spec = importlib.util.spec_from_file_location(
+        "reprolint_cli", os.path.join(_REPO, "tools", "reprolint.py")
+    )
+    cli = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cli)
+
+    bad = tmp_path / "bad.py"
+    bad.write_text('def f(kv):\n    kv.set("sched/lease/x", 1)\n')
+    clean = tmp_path / "clean.py"
+    clean.write_text(
+        "def f(kv, keys):\n"
+        "    # reprolint: disable=BATCH001(test fixture)\n"
+        "    vals = [kv.get(k) for k in keys]\n"
+    )
+
+    # strict fails on the offending file, passes on the clean one
+    assert cli.main([str(bad), "--strict", "--quiet"]) == 1
+    assert cli.main([str(clean), "--strict", "--quiet"]) == 0
+
+    # baseline: missing file errors; update creates; growth fails
+    base = tmp_path / "base.json"
+    assert cli.main([str(clean), "--baseline", str(base), "--quiet"]) == 1
+    assert (
+        cli.main([str(clean), "--baseline", str(base), "--update-baseline", "--quiet"])
+        == 0
+    )
+    assert json.loads(base.read_text())["disabled_findings"] == {"BATCH001": 1}
+    assert cli.main([str(clean), "--baseline", str(base), "--quiet"]) == 0
+    # a second waiver grows the count past the baseline -> fail
+    grown = tmp_path / "grown.py"
+    grown.write_text(
+        clean.read_text()
+        + "\n\ndef g(kv, keys):\n"
+        "    # reprolint: disable=BATCH001(another waiver)\n"
+        "    return [kv.get(k) for k in keys]\n"
+    )
+    assert cli.main([str(grown), "--baseline", str(base), "--quiet"]) == 1
+
+
+def test_repo_tree_lints_clean():
+    """The repo's own source must stay clean — the CI gate in code form."""
+    findings = lint.lint_tree(_SRC)
+    assert lint.active(findings) == [], [f.format() for f in lint.active(findings)]
+    # every waiver carries a reason
+    for f in findings:
+        if f.disabled:
+            assert f.disable_reason, f.format()
+
+
+def test_seeded_bug_is_caught_end_to_end(tmp_path):
+    """The CLI (as CI runs it) flags a planted bare sched/ write."""
+    planted = tmp_path / "seeded.py"
+    planted.write_text(
+        "def requeue(kv, task_id, spec):\n"
+        '    kv.set("sched/lease/" + task_id, spec)\n'
+    )
+    proc = subprocess.run(
+        [sys.executable, os.path.join(_REPO, "tools", "reprolint.py"),
+         str(planted), "--strict"],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "FENCE001" in proc.stdout
+
+
+# ---------------------------------------------------------------------------
+# runtime sanitizer detectors
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def san_state():
+    sanitizer.state.clear()
+    yield sanitizer.state
+    sanitizer.state.clear()
+
+
+def _kinds(state):
+    return sorted({r.kind for r in state.snapshot()})
+
+
+def test_sanitizer_unfenced_sched_write(san_state):
+    kv = sanitizer.SanitizingKVStore(KVStore(num_shards=2))
+    kv.eval("sched/lease/j/t000000-aaaaaaaa", lambda cur: {"epoch": 1})
+    assert san_state.snapshot() == []  # fenced verb: clean
+    kv.set("sched/lease/j/t000000-aaaaaaaa", {"epoch": 2})
+    assert _kinds(san_state) == ["unfenced-write"]
+
+
+def test_sanitizer_gc_requires_tombstone(san_state):
+    kv = sanitizer.SanitizingKVStore(KVStore(num_shards=2))
+    kv.mdel(["sched/lease/jobA/t000000-aaaaaaaa"])
+    assert _kinds(san_state) == ["unfenced-write"]
+    san_state.clear()
+    kv.set("sched/finished/jobB", 1.0)
+    kv.mdel(["sched/lease/jobB/t000000-bbbbbbbb", "sched/epoch/jobB/t000000-bbbbbbbb"])
+    assert san_state.snapshot() == []
+
+
+def test_sanitizer_blocked_under_lock(san_state):
+    kv = sanitizer.SanitizingKVStore(KVStore(num_shards=1))
+    lock = sanitizer.track_lock(threading.Lock(), "test.lock")
+    kv.get("k")  # outside the lock: clean
+    assert san_state.snapshot() == []
+    with lock:
+        kv.get("k")
+    assert _kinds(san_state) == ["blocked-under-lock"]
+
+
+def test_sanitizer_lock_order_inversion(san_state):
+    a = sanitizer.track_lock(threading.Lock(), "lock.a")
+    b = sanitizer.track_lock(threading.Lock(), "lock.b")
+    with a:
+        with b:
+            pass
+    assert san_state.snapshot() == []  # consistent order so far
+    with b:
+        with a:
+            pass
+    assert _kinds(san_state) == ["lock-order"]
+
+
+def test_sanitizer_torn_read(san_state):
+    kv = sanitizer.SanitizingKVStore(KVStore(num_shards=1))
+    kv.mset({"pair/x": 1, "pair/y": 1})
+    kv.mset({"pair/x": 2, "pair/y": 2})
+    assert kv.mget(["pair/x", "pair/y"]) == [2, 2]
+    assert san_state.snapshot() == []  # atomic batch observed whole
+    # simulate a torn apply: revert one member behind the store's back
+    sh = kv._shards[0]
+    with sh.lock._inner:
+        sh.data["pair/y"] = 1
+    kv.mget(["pair/x", "pair/y"])
+    assert _kinds(san_state) == ["torn-read"]
+
+
+def test_sanitizer_preserves_isinstance_and_shard_waits(san_state):
+    kv = sanitizer.SanitizingKVStore(KVStore(num_shards=2))
+    assert isinstance(kv, KVStore)
+    # shard-condition waiting still works over tracked locks
+    seq = kv.shard_seq("wk")
+    t = threading.Timer(0.05, lambda: kv.set("wk", 1))
+    t.start()
+    try:
+        kv.wait_key("wk", seq, timeout_s=5.0)
+    finally:
+        t.join()
+    assert kv.get("wk") == 1
+    # the waiter held no tracked lock during its KV ops -> no reports
+    assert san_state.snapshot() == []
