@@ -21,6 +21,13 @@ notify/multi-get traffic dominates.  Reported rows:
     sharing one KV/store, vs. one driver with the same total workers: the
     ``overhead_pct`` field is the cost of splitting the control plane
     (epoch-fenced CAS traffic + duplicated control loops);
+  * ``runtime/adoption_latency`` — kill-to-resume wall time of the PR-7
+    driver-failover path: a mapreduce driver "dies" (heartbeats stop) the
+    instant its map barrier commits, and a second executor detects the
+    lapsed driver lease, fences the takeover, and replays the job from the
+    recorded barrier to the final merged result.  ``adoption_latency_ms``
+    covers detect → fence → replay end to end (dominated by the lease
+    timeout plus the reduce stage);
   * ``runtime/shuffle_requests_{obj,kv}`` — modeled storage *requests* per
     shuffle stage on the batched write plane vs. the looped (pre-batching,
     PR 2) write path: every ledger record is one modeled request, so the
@@ -208,6 +215,69 @@ def _multi_driver(rep, total_workers: int, n_tasks: int) -> None:
             wall_s=round(dt, 3),
             **extra,
         )
+
+
+def _adoption_latency(rep, lease_timeout_s: float = 0.5) -> None:
+    """Kill-to-resume wall time for driver failover (core/jobs.py +
+    bsp.adopt_job): driver A's heartbeats stop the instant the map barrier
+    commits (a simulated SIGKILL — the lease is left live, exactly as a
+    dead process leaves it), and the clock runs from that instant until
+    driver B has detected the lapse, fenced the takeover at term + 1, and
+    replayed the manifest to the merged result."""
+    from repro.core import SchedulerConfig, WrenExecutor, adopt_job
+    from repro.core import bsp
+    from repro.storage import KVStore, ObjectStore
+
+    class _Killed(Exception):
+        pass
+
+    store = ObjectStore()
+    kv = KVStore(num_shards=2)
+    cfg = SchedulerConfig(driver_lease_timeout_s=lease_timeout_s)
+    wex_a = WrenExecutor(store=store, kv=kv, num_workers=2, scheduler_config=cfg, seed=0)
+    wex_b = WrenExecutor(store=store, kv=kv, num_workers=2, scheduler_config=cfg, seed=1)
+    killed_at = {}
+    orig_barrier = bsp._stage_barrier
+
+    def dying_barrier(wex, job, idx, plan, outputs, **kw):
+        out = orig_barrier(wex, job, idx, plan, outputs, **kw)
+        if idx == 0:
+            # Simulated SIGKILL: stop heartbeating but leave the lease live
+            # (popping the registry also turns the error-path release into a
+            # no-op, so B must wait out the expiry like a real crash).
+            with wex._driver_mu:
+                wex._driver_jobs.pop(job, None)
+            killed_at["t"] = time.perf_counter()
+            raise _Killed()
+        return out
+
+    bsp._stage_barrier = dying_barrier
+    try:
+        try:
+            bsp.mapreduce(
+                wex_a,
+                lambda part: [(x % 4, x) for x in part],
+                lambda _k, vs: sum(vs),
+                [list(range(10)), list(range(10, 20))],
+                4,
+                job_id="adopt-bench",
+            )
+        except _Killed:
+            pass
+        bsp._stage_barrier = orig_barrier
+        out = adopt_job(wex_b, "adopt-bench", wait_timeout_s=60.0, timeout_s=60.0)
+        dt = time.perf_counter() - killed_at["t"]
+        assert out == {k: sum(x for x in range(20) if x % 4 == k) for k in range(4)}
+        rep.row(
+            "runtime/adoption_latency",
+            dt * 1e6,
+            adoption_latency_ms=round(dt * 1e3, 1),
+            lease_timeout_ms=round(lease_timeout_s * 1e3, 1),
+        )
+    finally:
+        bsp._stage_barrier = orig_barrier
+        wex_a.shutdown()
+        wex_b.shutdown()
 
 
 def _shuffle_requests_for(rep, store_kind: str, n_maps: int, n_parts: int) -> None:
@@ -398,6 +468,7 @@ def speculation_sweep(rep, quick: bool = False) -> None:
 
 def multi_driver(rep, quick: bool = False) -> None:
     _multi_driver(rep, total_workers=4, n_tasks=100 if quick else 200)
+    _adoption_latency(rep)
 
 
 ALL = [map_throughput, job_completion, speculation_sweep, multi_driver, shuffle_requests]

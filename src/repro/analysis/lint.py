@@ -85,6 +85,11 @@ FIXITS: Dict[str, str] = {
 _FENCE_BLESSED: Set[Tuple[str, str]] = {("core/scheduler.py", "Scheduler.finish_job")}
 
 _SCHED_PREFIX = "sched/"
+# The job-manifest keyspace (core/jobs.py) gets a manifest-specific FENCE001
+# message: its blessed mutation paths are jobs.commit_records (first-writer-
+# wins eval_many) for manifest/stage/barrier records and the term-compared
+# driver-lease evals — plus the same tombstone-then-GC finish_job path.
+_JOB_PREFIX = "sched/job/"
 _GC_PREFIXES = ("shuffle/", "result/", "input/")
 _TOMBSTONE_PREFIXES = ("sched/finished/", "shuffle-gc/")
 
@@ -423,6 +428,18 @@ class _FileLinter(ast.NodeVisitor):
         for mod, blessed_qual in _FENCE_BLESSED:
             if self.path.endswith(mod) and qual.startswith(blessed_qual):
                 return
+        if any(p.startswith(_JOB_PREFIX) for p in prefixes):
+            self._report(
+                "FENCE001",
+                node,
+                f"bare kv.{method} on the job-manifest keyspace "
+                f"(prefix {prefixes[0]!r}) — manifest/stage/barrier records "
+                "move only through jobs.commit_records (first-writer-wins "
+                "eval_many) and the driver lease only through term-compared "
+                "evals (jobs.acquire_driver/heartbeat_drivers/release_driver); "
+                "deletion only behind Scheduler.finish_job's tombstone",
+            )
+            return
         self._report(
             "FENCE001",
             node,

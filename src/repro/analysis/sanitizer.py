@@ -45,6 +45,7 @@ _SCHED_LEASE = "sched/lease/"
 _SCHED_EPOCH = "sched/epoch/"
 _SCHED_ATTEMPTS = "sched/attempts/"
 _SCHED_FINISHED = "sched/finished/"
+_SCHED_JOB = "sched/job/"  # job-manifest keyspace (core/jobs.py)
 
 # Values bigger than this are not digested for torn-read tracking (the
 # check degrades to "unknown", which never reports): keeps soak tests fast.
@@ -409,6 +410,12 @@ def _epoch_of(keys: List[str], value: Any) -> Optional[int]:
 
 
 def _job_of_task_key(key: str) -> str:
+    # manifest keys are "sched/job/<job_id>/{manifest,driver,stage/i,...}" —
+    # the job id is the FIRST path segment, unlike task keys below where a
+    # job id may itself contain '/' (stage jobs like "mr-x/s0") and the
+    # task suffix is the LAST segment.
+    if key.startswith(_SCHED_JOB):
+        return key[len(_SCHED_JOB):].split("/", 1)[0]
     # task keys are "<prefix><job_id>/t<idx>-<hash>"
     for p in (_SCHED_LEASE, _SCHED_EPOCH, _SCHED_ATTEMPTS):
         if key.startswith(p):
@@ -437,10 +444,21 @@ def _check_unfenced(kv: Any, op: str, args: tuple) -> None:
                 f"through epoch-compared eval/eval_many; epochs only "
                 f"through incr",
             )
+        badjob = [k for k in keys if k.startswith(_SCHED_JOB)]
+        if badjob:
+            state.report(
+                "unfenced-write",
+                f"bare .{op} on {badjob[0]!r}: manifest/stage/barrier "
+                f"records land only through first-writer-wins eval_many "
+                f"(jobs.commit_records); the driver lease only through "
+                f"term-compared evals",
+            )
     elif op in ("delete", "mdel"):
         finished = _finished_mirror(kv)
         for k in keys:
-            if not k.startswith((_SCHED_LEASE, _SCHED_EPOCH, _SCHED_ATTEMPTS)):
+            if not k.startswith(
+                (_SCHED_LEASE, _SCHED_EPOCH, _SCHED_ATTEMPTS, _SCHED_JOB)
+            ):
                 continue
             job = _job_of_task_key(k)
             if job not in finished:

@@ -13,7 +13,7 @@ block data, then version bumps).  The driver pays O(1) modeled requests per
 bulk operation, not O(N).
 """
 
-from .bsp import mapreduce, run_stage, terasort, verify_sorted, word_count
+from .bsp import adopt_job, mapreduce, run_stage, terasort, verify_sorted, word_count
 from .executor import FaultPlan, Worker, WorkerPool, WorkerStats
 from .functions import (
     FunctionSpec,
@@ -50,6 +50,7 @@ __all__ = [
     "ANY_COMPLETED",
     "ALWAYS",
     "mapreduce",
+    "adopt_job",
     "word_count",
     "terasort",
     "verify_sorted",

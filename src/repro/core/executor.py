@@ -26,6 +26,12 @@ a zombie container (reaped as dead, or superseded by a speculative
 duplicate's lease) finishes its work but cannot publish over the owning
 attempt's result or extend a lease it no longer holds.
 
+The same token discipline is what makes *driver* death recoverable (PR 7):
+an adopter replaying a job manifest (``core/jobs.py``, ``core/bsp.py``)
+resubmits any task the dead driver had in flight, and the duplicate
+attempts converge here exactly as speculative duplicates do — first
+publish wins, the loser is fenced at the result boundary.
+
 Event-driven dispatch: workers do not poll the queue.  ``Worker.run``
 blocks in ``Scheduler.lease_batch`` on the *queue shard's* KV watch
 condition and is woken by any producer's ``rpush`` (submit, reap requeue,

@@ -183,9 +183,20 @@ def get_all(futures: Sequence[ResultFuture], timeout_s: float = 120.0) -> List[A
         if f._cached is None:
             by_store.setdefault(id(f.store), (f.store, []))[1].append(f)
     for store, group in by_store.values():
-        fetched = store.get_many(
-            [f.result_key for f in group], worker="driver", missing="error"
-        )
+        try:
+            fetched = store.get_many(
+                [f.result_key for f in group], worker="driver", missing="error"
+            )
+        except KeyError as e:
+            # A result that passed the completion barrier and then vanished
+            # means the job was GC'd underneath us — the signature of a
+            # zombie driver racing its adopter's finish_job.  Surface the
+            # adoption story instead of a bare missing-key error.
+            raise RuntimeError(
+                f"result {e.args[0]!r} disappeared after completing: the job "
+                "was finished (GC'd) by another driver — this handle's lease "
+                "was likely adopted after a presumed crash"
+            ) from e
         for f in group:
             f._cached = fetched[f.result_key]
     return [f._unwrap(f._cached) for f in futures]

@@ -96,6 +96,7 @@ _FINISHED = "sched/finished/"  # per-job GC tombstones
 _JOBTASKS = "sched/jobtasks/"  # per-job task-id membership list
 _SPECCOUNT = "sched/speccount/"  # per-job duplicates enqueued (budget gate)
 _FENCED = "sched/fenced/"  # per-job fenced-zombie completions (feedback)
+_JOBMANIFEST = "sched/job/"  # job manifests + driver leases (core/jobs.py)
 
 # Cap for an untimed lease wait; workers are woken by writes/wake_workers,
 # so this only bounds how long a fully idle, never-notified wait can hold.
@@ -165,6 +166,11 @@ class SchedulerConfig:
     speculation_zombie_decay: float = 1.0
     heartbeat_interval_s: float = 0.2
     idle_tick_s: float = 0.5  # control-loop fallback when no work in flight
+    # Job-manifest driver lease (sched/job/{job}/driver): how long a job
+    # survives without a driver heartbeat before adopters may take over.
+    # Must comfortably exceed the control-loop cadence; the executor
+    # heartbeats registered jobs at most every driver_lease_timeout_s / 4.
+    driver_lease_timeout_s: float = 2.0
 
     def straggler_threshold_s(self, durations: List[float], fenced: int = 0) -> float:
         if self.speculation_factor is not None:
@@ -835,6 +841,14 @@ class Scheduler:
                 self._speculated.discard(tid)
             self._start_heaps.pop(job_id, None)
             self._dur_cache.pop(job_id, None)
+        # The job's manifest keyspace (manifest/stage/barrier records and
+        # the driver lease, core/jobs.py) goes behind the same tombstone —
+        # and is scrubbed on EVERY call, not just the first: an adopter that
+        # lost the finish race has just re-created the driver record via its
+        # fencing takeover, and its own finish_job must remove it again.
+        manifest_keys = self.kv.scan(_JOBMANIFEST + job_id + "/", worker="scheduler")
+        if manifest_keys:
+            self.kv.mdel(manifest_keys, worker="scheduler")
         if already:
             return 0  # another handle (or an earlier call) already freed it
         # Batched KV cleanup: one amortized round-trip per shard, and the

@@ -28,12 +28,15 @@ the loop exits without waiting out a tick.
 
 from __future__ import annotations
 
+import os
 import threading
+import time
 import uuid
-from typing import Any, Callable, Iterable, List, Optional
+from typing import Any, Callable, Dict, Iterable, List, Optional
 
 from repro.storage import KVStore, ObjectStore
 
+from . import jobs
 from .executor import FaultPlan, WorkerPool
 from .functions import FunctionSpec, TaskSpec, stage_inputs
 from .futures import ResultFuture, get_all
@@ -65,11 +68,18 @@ class WrenExecutor:
             compute_time_fn=compute_time_fn,
             seed=seed,
         )
+        # Driver identity for job-manifest leases (core/jobs.py): unique per
+        # executor so a restarted process adopts its predecessor's jobs via
+        # the fencing takeover path rather than silently re-owning them.
+        self.driver_id = f"drv-{os.getpid()}-{uuid.uuid4().hex[:6]}"
+        self._driver_mu = threading.Lock()
+        self._driver_jobs: Dict[str, int] = {}  # job_id -> held term
+        self._driver_hb_at = time.monotonic()
         self._control_stop = threading.Event()
         self._control = threading.Thread(target=self._control_loop, daemon=True)
         self._control.start()
 
-    # ---- control loop: reap + speculate --------------------------------
+    # ---- control loop: reap + speculate + driver heartbeats -------------
     def _control_loop(self) -> None:
         while not self._control_stop.is_set():
             # Clear *before* reaping: activity that lands mid-pass re-arms
@@ -78,12 +88,82 @@ class WrenExecutor:
             try:
                 self.scheduler.reap()
                 self.scheduler.speculate()
+                self._heartbeat_driver_leases()
             except Exception:  # noqa: BLE001 — control loop must survive
                 pass
-            if self.scheduler.wait_activity(self.scheduler.next_wakeup_s()):
+            wait_s = self.scheduler.next_wakeup_s()
+            hb_due = self._driver_heartbeat_due_s()
+            if hb_due is not None:
+                wait_s = min(wait_s, hb_due)
+            if self.scheduler.wait_activity(wait_s):
                 # Coalesce activity bursts (e.g. many completions) so the
                 # O(tasks) reap scan runs at a bounded rate, not per event.
                 self._control_stop.wait(0.02)
+
+    # ---- driver leases: job-manifest ownership (core/jobs.py) ------------
+    def register_driver(self, job_id: str) -> Optional[int]:
+        """Claim the job's driver lease for this executor.  Returns the held
+        term (the fencing token adoption compares against), or ``None`` if a
+        live foreign driver owns the job.  The control loop heartbeats every
+        registered job until ``release_driver``/``finish_job``."""
+        rec = jobs.acquire_driver(
+            self.kv,
+            job_id,
+            self.driver_id,
+            self.scheduler.config.driver_lease_timeout_s,
+            worker="driver",
+        )
+        if rec is None or rec.get("owner") != self.driver_id:
+            return None
+        term = int(rec["term"])
+        with self._driver_mu:
+            self._driver_jobs[job_id] = term
+        self.scheduler.signal_activity()  # re-time the loop's next wakeup
+        return term
+
+    def release_driver(self, job_id: str) -> bool:
+        """Give up a held driver lease (the record stays, expired, so a
+        later adopter still draws a higher term).  No-op for jobs this
+        executor doesn't hold — safe to call on error paths."""
+        with self._driver_mu:
+            term = self._driver_jobs.pop(job_id, None)
+        if term is None:
+            return False
+        return jobs.release_driver(
+            self.kv, job_id, self.driver_id, term, worker="driver"
+        )
+
+    def _heartbeat_driver_leases(self) -> None:
+        """Extend every held driver lease in one batched eval — rate-gated
+        to a quarter of the lease timeout so the control loop's activity
+        bursts don't turn heartbeats into per-event round-trips.  Jobs whose
+        lease was fenced (adopted at a higher term) or GC'd are dropped from
+        the registry — this driver must stop claiming them."""
+        timeout_s = self.scheduler.config.driver_lease_timeout_s
+        with self._driver_mu:
+            owned = dict(self._driver_jobs)
+            if not owned:
+                return
+            if time.monotonic() - self._driver_hb_at < timeout_s / 4.0:
+                return
+            self._driver_hb_at = time.monotonic()
+        lost = jobs.heartbeat_drivers(
+            self.kv, owned, self.driver_id, timeout_s, worker="driver"
+        )
+        if lost:
+            with self._driver_mu:
+                for job_id in lost:
+                    # Drop only if unchanged: a re-register that raced the
+                    # heartbeat holds a newer term and must stay registered.
+                    if self._driver_jobs.get(job_id) == owned.get(job_id):
+                        self._driver_jobs.pop(job_id, None)
+
+    def _driver_heartbeat_due_s(self) -> Optional[float]:
+        with self._driver_mu:
+            if not self._driver_jobs:
+                return None
+            interval = self.scheduler.config.driver_lease_timeout_s / 4.0
+            return max(0.0, self._driver_hb_at + interval - time.monotonic())
 
     # ---- the paper's API -------------------------------------------------
     def map(
@@ -139,7 +219,12 @@ class WrenExecutor:
     def finish_job(self, job_id: str) -> int:
         """Free a completed job's scheduler state and storage keys (see
         ``Scheduler.finish_job``).  Futures of the job become unresolvable —
-        call only after their results have been retrieved."""
+        call only after their results have been retrieved.  Any driver lease
+        this executor holds on the job is dropped from the heartbeat registry
+        first — the GC deletes the lease record, and re-heartbeating it
+        would resurrect a key the tombstone just retired."""
+        with self._driver_mu:
+            self._driver_jobs.pop(job_id, None)
         return self.scheduler.finish_job(job_id)
 
     # ---- lifecycle ------------------------------------------------------
@@ -148,6 +233,13 @@ class WrenExecutor:
         self.scheduler.signal_activity()  # wake the control loop to exit
         self.pool.stop_all()
         self._control.join(timeout=2.0)
+        # Release still-held driver leases so successors adopt immediately
+        # instead of waiting out the lease timeout.  After the join: the
+        # control loop must not re-extend a lease we just expired.
+        with self._driver_mu:
+            held = list(self._driver_jobs.keys())
+        for job_id in held:
+            self.release_driver(job_id)
 
     def __enter__(self) -> "WrenExecutor":
         return self

@@ -526,6 +526,20 @@ class FileKVStore(KVStore):
         self._watcher: Optional[_PollWatcher] = None
         self._watch_guard = threading.Lock()
 
+    def _endpoint_spec(self):
+        # Cross-process pickling: a closure capturing this handle reconnects
+        # over the same directory in a foreign process (one shared handle per
+        # (kind, root) there — see object_store._Endpoint), which is what
+        # lets an adopting driver's workers run a dead driver's registered
+        # task functions.
+        return {
+            "kind": "file_kv",
+            "root": self.root,
+            "num_shards": self.num_shards,
+            "engine": self.engine,
+            "fsync": self.fsync,
+        }
+
     # ---- durability policy ----------------------------------------------
     def _commit_mode(self, records: List[tuple]) -> str:
         if self.fsync == "commit":

@@ -91,26 +91,77 @@ from .perf_model import S3_2017, StorageProfile
 # over store handles; on the worker they must resolve to the *same* store.
 _HANDLE_REGISTRY: "weakref.WeakValueDictionary[str, Any]" = weakref.WeakValueDictionary()
 
+# Reconnected handles, one per (kind, root) per process: a foreign process
+# unpickling N task closures over one directory store shares one handle —
+# N private handles would each run their own watcher thread and group-commit
+# counter over the same files.
+_RECONNECT_CACHE: Dict[Tuple[str, str], Any] = {}
+_RECONNECT_LOCK = threading.Lock()
 
-def _resolve_handle(uid: str) -> Any:
+
+def _reconnect(spec: Dict[str, Any]) -> Any:
+    """Rebuild a handle over the same directory substrate in THIS process —
+    the moral equivalent of an S3 client re-opening a connection from its
+    endpoint URL.  Only file-backed handles carry a spec (their root path
+    *is* the endpoint); in-memory handles are process-local by nature."""
+    cache_key = (spec["kind"], spec["root"])
+    with _RECONNECT_LOCK:
+        handle = _RECONNECT_CACHE.get(cache_key)
+    if handle is not None:
+        return handle
+    if spec["kind"] == "object":
+        handle = ObjectStore(
+            backend=FileBackend(spec["root"], fsync=spec.get("fsync", "auto"))
+        )
+    elif spec["kind"] == "file_kv":
+        from .file_kv import FileKVStore  # local import: file_kv imports us
+
+        handle = FileKVStore(
+            spec["root"],
+            num_shards=int(spec.get("num_shards", 1)),
+            engine=spec.get("engine", "log"),
+            fsync=spec.get("fsync", "auto"),
+        )
+    else:
+        raise RuntimeError(f"unknown storage endpoint spec {spec!r}")
+    with _RECONNECT_LOCK:
+        return _RECONNECT_CACHE.setdefault(cache_key, handle)
+
+
+def _resolve_handle(uid: str, spec: Optional[Dict[str, Any]] = None) -> Any:
     try:
         return _HANDLE_REGISTRY[uid]
     except KeyError:
-        raise RuntimeError(
-            f"storage handle {uid} not live in this process; in a real "
-            "deployment this would reconnect to the remote endpoint"
-        ) from None
+        pass
+    if spec is not None:
+        return _reconnect(spec)
+    raise RuntimeError(
+        f"storage handle {uid} not live in this process and it carries no "
+        "reconnect spec (in-memory handles cannot cross processes); use a "
+        "FileBackend/FileKVStore-backed handle for cross-process jobs"
+    )
 
 
 class _Endpoint:
-    """Mixin giving a class by-reference pickling semantics."""
+    """Mixin giving a class by-reference pickling semantics.
+
+    Same process: the unpickled handle IS the original object (registry
+    hit).  Foreign process: handles whose state lives on a shared directory
+    (``FileBackend``-backed stores, ``FileKVStore``) additionally carry an
+    ``_endpoint_spec()`` reconnect recipe, so a task closure registered by
+    one driver still resolves its stores after that driver is dead — the
+    prerequisite for job adoption (``core/bsp.py``).  In-memory handles
+    return no spec and keep raising in a foreign process."""
 
     def _register_endpoint(self) -> None:
         self._endpoint_uid = f"{type(self).__name__}-{uuid.uuid4().hex}"
         _HANDLE_REGISTRY[self._endpoint_uid] = self
 
+    def _endpoint_spec(self) -> Optional[Dict[str, Any]]:
+        return None
+
     def __reduce__(self):
-        return (_resolve_handle, (self._endpoint_uid,))
+        return (_resolve_handle, (self._endpoint_uid, self._endpoint_spec()))
 
 
 @dataclass
@@ -925,6 +976,19 @@ class ObjectStore(_Endpoint):
         # explicit poll_s).
         self.fallback_tick_waits = 0
         self._register_endpoint()
+
+    def _endpoint_spec(self) -> Optional[Dict[str, Any]]:
+        # A FileBackend-backed store reconnects by directory in a foreign
+        # process (see _Endpoint); the profile/ledger are per-handle
+        # accounting, not shared state, so the reconnected handle gets
+        # fresh defaults.
+        if isinstance(self.backend, FileBackend):
+            return {
+                "kind": "object",
+                "root": self.backend.root,
+                "fsync": self.backend.fsync,
+            }
+        return None
 
     # ---- key watch (notification plane) --------------------------------
     # Watch state lives on the backend so that two store handles sharing

@@ -15,6 +15,19 @@ Pins the PR-4 contract:
     ``FileKVStore``/``FileBackend`` executes a map submitted by this
     process, event-driven end to end (the driver's fallback-tick counter
     stays 0 and the job completes well inside the event-driven deadline).
+
+And the PR-7 contract (KV-resident job manifests, ``core/jobs.py``):
+  * **driver-lease fencing** — term monotonicity across acquire / takeover /
+    release, heartbeat rejection at a stale term, first-writer-wins record
+    commits, and the event-driven expiry wait;
+  * **re-entrancy** — re-running ``run_stage``/``mapreduce`` with the same
+    ``job_id`` resumes from recorded barriers with ZERO resubmitted tasks;
+  * **driver-kill suite** — a subprocess driver is SIGKILLed between the
+    map and reduce stages of a ``mapreduce`` (and between the partition and
+    merge stages of a ``terasort``) over ``FileKVStore``/``FileBackend``;
+    this process adopts via ``bsp.adopt_job`` and finishes with zero lost
+    tasks, no duplicate results, and the ``shuffle/`` + ``sched/job/``
+    keyspaces empty after the terminal ``finish_job``.
 """
 
 import os
@@ -31,10 +44,12 @@ from repro.core import (
     SchedulerConfig,
     TaskSpec,
     WrenExecutor,
+    adopt_job,
     get_all,
     run_task,
     stage_input,
 )
+from repro.core import jobs
 from repro.storage import FileBackend, FileKVStore, KVStore, ObjectStore
 
 _SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
@@ -489,8 +504,332 @@ def _worker_pool_main(kv_root: str, obj_root: str) -> None:
     pool.stop_all()
 
 
+# ---------------------------------------------------------------------------
+# job manifests (core/jobs.py): driver-lease fencing primitives
+# ---------------------------------------------------------------------------
+
+def test_driver_lease_term_monotonic():
+    """Acquire → 1; expired takeover → 2; release keeps the record (term
+    intact) so the next acquisition still draws term + 1."""
+    kv = KVStore(num_shards=2)
+    rec = jobs.acquire_driver(kv, "j", "drvA", 30.0)
+    assert rec["owner"] == "drvA" and rec["term"] == 1
+    # a live foreign driver can't take it
+    rec2 = jobs.acquire_driver(kv, "j", "drvB", 30.0)
+    assert rec2["owner"] == "drvA" and rec2["term"] == 1
+    # re-acquire by the owner extends, same term
+    rec3 = jobs.acquire_driver(kv, "j", "drvA", 30.0)
+    assert rec3["term"] == 1 and rec3["expires"] > rec["expires"]
+    # release keeps the record, expired
+    assert jobs.release_driver(kv, "j", "drvA", 1) is True
+    kept = jobs.driver_record(kv, "j")
+    assert kept["term"] == 1 and kept["expires"] == 0.0
+    # next acquisition fences at term + 1
+    rec4 = jobs.acquire_driver(kv, "j", "drvB", 30.0)
+    assert rec4["owner"] == "drvB" and rec4["term"] == 2
+    # expired (not released) lease is also taken at term + 1
+    rec5 = jobs.acquire_driver(kv, "j2", "drvA", 0.0)  # expires immediately
+    assert rec5["term"] == 1
+    rec6 = jobs.acquire_driver(kv, "j2", "drvB", 30.0)
+    assert rec6["owner"] == "drvB" and rec6["term"] == 2
+
+
+def test_driver_heartbeat_fenced_by_term_and_gc():
+    kv = KVStore(num_shards=2)
+    jobs.acquire_driver(kv, "hb", "drvA", 30.0)
+    # the holder's heartbeat extends
+    assert jobs.heartbeat_drivers(kv, {"hb": 1}, "drvA", 30.0) == []
+    # a stale term (zombie after takeover) is rejected, record untouched
+    jobs.release_driver(kv, "hb", "drvA", 1)
+    rec = jobs.acquire_driver(kv, "hb", "drvB", 30.0)
+    assert rec["term"] == 2
+    assert jobs.heartbeat_drivers(kv, {"hb": 1}, "drvA", 30.0) == ["hb"]
+    assert jobs.driver_record(kv, "hb")["owner"] == "drvB"
+    # a GC'd job (key gone) is reported lost and NOT resurrected
+    kv.eval("sched/job/gone/driver", lambda cur: None)
+    assert jobs.heartbeat_drivers(kv, {"gone": 1}, "drvA", 30.0) == ["gone"]
+    assert jobs.driver_record(kv, "gone") is None
+
+
+def test_commit_records_first_writer_wins():
+    kv = KVStore(num_shards=2)
+    key = jobs.barrier_key("fw", 0)
+    first = jobs.commit_records(kv, {key: {"outputs": [1], "term": 1}})
+    assert first[key]["outputs"] == [1]
+    # a later writer (zombie replaying the same stage) gets the STORED value
+    second = jobs.commit_records(kv, {key: {"outputs": [2], "term": 2}})
+    assert second[key]["outputs"] == [1]
+
+
+def test_wait_for_driver_expiry_event_driven():
+    kv = KVStore(num_shards=2)
+    # absent lease: adoptable immediately
+    assert jobs.wait_for_driver_expiry(kv, "nolease", 1.0) is True
+    # live lease: not adoptable within the timeout
+    jobs.acquire_driver(kv, "live", "drvA", 30.0)
+    t0 = time.monotonic()
+    assert jobs.wait_for_driver_expiry(kv, "live", 0.2) is False
+    assert time.monotonic() - t0 < 5.0
+    # short lease: the wait runs out exactly at the recorded expiry
+    jobs.acquire_driver(kv, "dying", "drvA", 0.15)
+    assert jobs.wait_for_driver_expiry(kv, "dying", 10.0) is True
+
+
+# ---------------------------------------------------------------------------
+# re-entrancy: same job_id resumes from the recorded barrier, zero resubmits
+# ---------------------------------------------------------------------------
+
+def _count_submits(wex, counter):
+    orig = wex.scheduler.submit_many
+
+    def wrapped(tasks):
+        counter.append(len(tasks))
+        return orig(tasks)
+
+    wex.scheduler.submit_many = wrapped
+
+
+def test_run_stage_reentrant_zero_resubmits():
+    from repro.core.bsp import run_stage
+
+    submits = []
+    with WrenExecutor(num_workers=2) as wex:
+        _count_submits(wex, submits)
+        out1 = run_stage(wex, lambda x: x + 1, [1, 2, 3], job_id="rs-re")
+        assert out1 == [2, 3, 4]
+        assert sum(submits) == 3
+        # second call: barrier recorded → stored outputs, no task traffic
+        out2 = run_stage(wex, lambda x: x + 1, [1, 2, 3], job_id="rs-re")
+        assert out2 == [2, 3, 4]
+        assert sum(submits) == 3
+        # the driver lease is released (not deleted) between calls; the SAME
+        # owner re-acquiring is an extension, not a takeover — term stays 1
+        rec = jobs.driver_record(wex.kv, "rs-re")
+        assert rec["expires"] == 0.0 and rec["term"] == 1
+        # gc=True drops the manifest keyspace entirely
+        run_stage(wex, lambda x: x + 1, [1, 2, 3], job_id="rs-re", gc=True)
+        assert wex.kv.scan("sched/job/rs-re/") == []
+
+
+def test_mapreduce_reentrant_resumes_from_barriers():
+    from repro.core.bsp import mapreduce
+
+    submits = []
+    with WrenExecutor(num_workers=2) as wex:
+        _count_submits(wex, submits)
+        expected = {k: sum(x for x in range(20) if x % 4 == k) for k in range(4)}
+        out = mapreduce(
+            wex,
+            lambda part: [(x % 4, x) for x in part],
+            lambda _k, vs: sum(vs),
+            [list(range(0, 10)), list(range(10, 20))],
+            4,
+            job_id="mr-re",
+        )
+        assert out == expected
+        assert sum(submits) == 2 + 4  # maps + reduces, exactly once
+        # terminal finish_job dropped the manifest with the job
+        assert wex.kv.scan("sched/job/mr-re/") == []
+
+
+# ---------------------------------------------------------------------------
+# driver-kill suite: SIGKILL the submitting subprocess mid-job, adopt here
+# ---------------------------------------------------------------------------
+
+# Deterministic workload shared by parent (expectations) and child (submit).
+_KILL_PARTS = [list(range(0, 10)), list(range(10, 20)), list(range(20, 30))]
+_KILL_REDUCERS = 5
+
+
+def _kill_expected():
+    allx = [x for part in _KILL_PARTS for x in part]
+    return {k: sum(x for x in allx if x % _KILL_REDUCERS == k)
+            for k in range(_KILL_REDUCERS)}
+
+
+def _spawn_kill_driver(kv_root: str, obj_root: str, kind: str) -> subprocess.Popen:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.Popen(
+        [sys.executable, os.path.abspath(__file__), "killdriver", kv_root, obj_root, kind],
+        env=env,
+        stdout=subprocess.PIPE,
+        stderr=subprocess.STDOUT,
+    )
+
+
+def _kill_driver_main(kv_root: str, obj_root: str, kind: str) -> None:
+    """Subprocess entry: submit a job, then SIGKILL ourselves the instant a
+    chosen stage barrier commits — a real uncatchable driver death at the
+    exact stage boundary the suite pins (map→reduce for mapreduce,
+    partition→merge for terasort).  No release, no cleanup: the parent must
+    adopt through the lease expiry path alone."""
+    import signal
+
+    import numpy as np
+
+    from repro.core import WrenExecutor, SchedulerConfig
+    from repro.core import bsp
+    from repro.storage import FileBackend, FileKVStore, ObjectStore
+
+    kv = FileKVStore(kv_root, num_shards=2)
+    store = ObjectStore(backend=FileBackend(obj_root))
+    wex = WrenExecutor(
+        store=store, kv=kv, num_workers=2,
+        scheduler_config=SchedulerConfig(driver_lease_timeout_s=1.0),
+    )
+
+    kill_after = {"mr": 0, "sort": 1}[kind]
+    orig_barrier = bsp._stage_barrier
+
+    def killing_barrier(wex_, job, idx, plan, outputs, **kw):
+        out = orig_barrier(wex_, job, idx, plan, outputs, **kw)
+        if idx == kill_after:
+            kv.set("ctl/barrier-committed", 1, worker="child")
+            os.kill(os.getpid(), signal.SIGKILL)
+        return out
+
+    bsp._stage_barrier = killing_barrier
+
+    if kind == "mr":
+        bsp.mapreduce(
+            wex,
+            lambda part: [(x % _KILL_REDUCERS, x) for x in part],
+            lambda _k, vs: sum(vs),
+            _KILL_PARTS,
+            _KILL_REDUCERS,
+            job_id="kill-mr",
+        )
+    else:
+        rng = np.random.default_rng(7)
+        keys = []
+        for i in range(3):
+            recs = rng.integers(0, 256, size=(40, 100), dtype=np.uint8)
+            key = f"sortin/part{i}"
+            store.put(key, recs, worker="gen")
+            keys.append(key)
+        bsp.terasort(
+            wex, keys, "sorted", num_partitions=4, intermediate=store,
+            job_id="kill-sort",
+        )
+    raise SystemExit("driver survived past the kill barrier")  # pragma: no cover
+
+
+def _adopt_after_kill(tmp_path, kind: str):
+    """Shared driver-kill scaffold: spawn the submitting driver, confirm it
+    died by SIGKILL after the chosen barrier, then adopt from this process
+    over the same FileKVStore/FileBackend roots."""
+    kv_root = str(tmp_path / "kv")
+    obj_root = str(tmp_path / "obj")
+    proc = _spawn_kill_driver(kv_root, obj_root, kind)
+    try:
+        proc.wait(timeout=60)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        pytest.fail("kill-driver subprocess never reached the kill barrier")
+    assert proc.returncode == -9, proc.stdout.read().decode()
+
+    kv = FileKVStore(kv_root, num_shards=2)
+    store = ObjectStore(backend=FileBackend(obj_root))
+    assert kv.get("ctl/barrier-committed") == 1
+    wex = WrenExecutor(
+        store=store, kv=kv, num_workers=2,
+        scheduler_config=SchedulerConfig(driver_lease_timeout_s=1.0),
+    )
+    return kv, store, wex
+
+
+def test_driver_sigkilled_between_map_and_reduce_is_adopted(tmp_path):
+    """The headline pin: the submitting driver is SIGKILLed the instant the
+    map barrier commits; this process waits out the driver lease, fences the
+    takeover at term 2, and replays — the map stage returns from its barrier
+    (zero resubmitted map tasks), only the reduce stage runs, the merged
+    result is exact (zero lost tasks, no duplicate contributions), and the
+    shuffle/ + sched/job/ keyspaces are empty after the terminal GC."""
+    kv, store, wex = _adopt_after_kill(tmp_path, "mr")
+    try:
+        submits = []
+        _count_submits(wex, submits)
+        t0 = time.monotonic()
+        out = adopt_job(wex, "kill-mr", wait_timeout_s=30.0, timeout_s=120.0)
+        adoption_wall = time.monotonic() - t0
+        assert out == _kill_expected()
+        # the recorded map barrier was honored: only reduce tasks moved
+        assert sum(submits) == _KILL_REDUCERS
+        # the adopter holds (held) the fenced term
+        assert kv.get("sched/finished/kill-mr") is not None
+        # keyspaces empty after finish_job: manifest, shuffle, results
+        assert kv.scan("sched/job/kill-mr/") == []
+        assert store.list("shuffle/") == []
+        assert store.list("result/") == []
+        # detect → fence → replay happened promptly (lease 1 s + replay)
+        assert adoption_wall < 30.0
+    finally:
+        wex.shutdown()
+        kv.close()
+
+
+def test_driver_sigkilled_between_partition_and_merge_terasort(tmp_path):
+    """Same death, two stages deep: the sort driver dies the instant the
+    partition barrier commits (intermediates fully written, merge never
+    planned).  The adopter re-derives splitters from the recorded sample
+    barrier, runs only the merge stage, and the output is globally sorted
+    with every record accounted for."""
+    from repro.core.bsp import verify_sorted
+
+    kv, store, wex = _adopt_after_kill(tmp_path, "sort")
+    try:
+        submits = []
+        _count_submits(wex, submits)
+        report = adopt_job(wex, "kill-sort", wait_timeout_s=30.0, timeout_s=120.0)
+        assert report is not None and report.n_records == 3 * 40
+        # sample + partition barriers honored: only the 4 merge tasks moved
+        assert sum(submits) == 4
+        assert verify_sorted(store, "sorted")
+        total = sum(len(store.get(k)) for k in store.list("sorted"))
+        assert total == 3 * 40  # zero lost records, no duplicates
+        assert kv.scan("sched/job/kill-sort/") == []
+        assert store.list("shuffle/") == []
+    finally:
+        wex.shutdown()
+        kv.close()
+
+
+def test_adopt_job_returns_none_for_finished_job():
+    with WrenExecutor(num_workers=2) as wex:
+        from repro.core.bsp import run_stage
+
+        run_stage(wex, lambda x: x, [1], job_id="done-job", gc=True)
+        # tombstoned and GC'd: nothing to adopt, no lease resurrected
+        assert adopt_job(wex, "done-job", wait_timeout_s=5.0) is None
+        assert wex.kv.scan("sched/job/done-job/") == []
+
+
+def test_adopt_job_times_out_on_live_driver():
+    store = ObjectStore()
+    kv = KVStore(num_shards=2)
+    wex_a = WrenExecutor(store=store, kv=kv, num_workers=1)
+    wex_b = WrenExecutor(store=store, kv=kv, num_workers=1)
+    try:
+        assert wex_a.register_driver("held-job") == 1
+        with pytest.raises(TimeoutError):
+            adopt_job(wex_b, "held-job", wait_timeout_s=0.3)
+        # after an explicit release the job is immediately adoptable (and,
+        # with no manifest, finished-or-empty → None + lease scrubbed)
+        wex_a.release_driver("held-job")
+        assert adopt_job(wex_b, "held-job", wait_timeout_s=5.0) is None
+    finally:
+        wex_a.shutdown()
+        wex_b.shutdown()
+
+
 if __name__ == "__main__":
     if len(sys.argv) == 4 and sys.argv[1] == "worker":
         _worker_pool_main(sys.argv[2], sys.argv[3])
+    elif len(sys.argv) == 5 and sys.argv[1] == "killdriver":
+        _kill_driver_main(sys.argv[2], sys.argv[3], sys.argv[4])
     else:
-        raise SystemExit(f"usage: {sys.argv[0]} worker <kv_root> <obj_root>")
+        raise SystemExit(
+            f"usage: {sys.argv[0]} worker <kv_root> <obj_root> | "
+            f"killdriver <kv_root> <obj_root> mr|sort"
+        )

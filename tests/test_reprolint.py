@@ -51,6 +51,29 @@ def test_fence001_blessed_finish_job():
     assert _rules(src, path="src/repro/core/other.py") == ["FENCE001"]
 
 
+def test_fence001_job_manifest_keyspace():
+    """The job-manifest keyspace (core/jobs.py) rides FENCE001 with a
+    manifest-specific message naming its blessed paths."""
+    findings = lint.active(
+        lint.lint_source('def f(kv):\n    kv.set("sched/job/j1/manifest", 1)\n',
+                         "core/example.py")
+    )
+    assert [f.rule for f in findings] == ["FENCE001"]
+    assert "jobs.commit_records" in findings[0].message
+    assert _rules('def f(kv):\n    kv.mdel(["sched/job/j1/driver"])\n') == ["FENCE001"]
+    # the blessed mutation paths are eval/eval_many (commit_records and the
+    # term-compared driver-lease transitions)
+    assert _rules('def f(kv):\n    kv.eval("sched/job/j1/driver", fn)\n') == []
+    assert _rules('def f(kv):\n    kv.eval_many({"sched/job/j1/manifest": fn})\n') == []
+    # finish_job's tombstone-then-GC is still the one blessed deleter
+    src = (
+        "class Scheduler:\n"
+        "    def finish_job(self, job):\n"
+        '        self.kv.mdel(["sched/job/j1/manifest"])\n'
+    )
+    assert _rules(src, path="src/repro/core/scheduler.py") == []
+
+
 def test_batch001_per_key_op_in_loop():
     bad = "def f(kv, keys):\n    for k in keys:\n        kv.get(k)\n"
     assert _rules(bad) == ["BATCH001"]
@@ -231,6 +254,29 @@ def test_sanitizer_unfenced_sched_write(san_state):
     assert san_state.snapshot() == []  # fenced verb: clean
     kv.set("sched/lease/j/t000000-aaaaaaaa", {"epoch": 2})
     assert _kinds(san_state) == ["unfenced-write"]
+
+
+def test_sanitizer_unfenced_job_manifest_write(san_state):
+    """Runtime mirror of the FENCE001 extension: bare writes into the
+    sched/job/ manifest keyspace are flagged; the eval-based commit and
+    lease transitions are clean; deletion needs the job's tombstone first
+    (the manifest key's job id is its FIRST path segment)."""
+    kv = sanitizer.SanitizingKVStore(KVStore(num_shards=2))
+    kv.eval("sched/job/j1/driver", lambda cur: {"owner": "d", "term": 1})
+    kv.eval_many({"sched/job/j1/manifest": lambda cur: {"kind": "stage"}})
+    assert san_state.snapshot() == []  # fenced verbs: clean
+    kv.set("sched/job/j1/manifest", {"kind": "stage"})
+    assert _kinds(san_state) == ["unfenced-write"]
+    san_state.clear()
+    # deleting manifest records without the job tombstone is flagged...
+    kv.mdel(["sched/job/j1/stage/0"])
+    assert _kinds(san_state) == ["unfenced-write"]
+    san_state.clear()
+    # ...and clean behind it (finish_job's tombstone-then-GC order)
+    kv.set("sched/finished/j1", 1.0)
+    kv.mdel(["sched/job/j1/stage/0", "sched/job/j1/barrier/0",
+             "sched/job/j1/manifest", "sched/job/j1/driver"])
+    assert san_state.snapshot() == []
 
 
 def test_sanitizer_gc_requires_tombstone(san_state):
