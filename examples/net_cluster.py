@@ -1,0 +1,113 @@
+"""Net cluster: the whole runtime over a live ``repro-kvd`` daemon.
+
+The file substrate shares one machine's disk; this example runs the same
+stack over a storage *service* (PR 8) — the shape the paper assumes, where
+S3 and Redis are endpoints every Lambda dials into.  ``repro-kvd``
+(``repro.storage.net_server``) owns the log-structured shard files
+exclusively and serves both planes over one wire protocol;
+``NetKVStore``/``NetBackend`` preserve the full behavioural contract
+(batched-verb charging, pushed watched-key wakes, the eval replay rule),
+so ``WrenExecutor`` cannot tell the difference:
+
+>>> import tempfile
+>>> from repro.storage import NetBackend, NetKVStore, ObjectStore
+>>> from repro.storage.net_server import KVDServer
+>>> tmp = tempfile.mkdtemp()
+>>> srv = KVDServer(tmp + "/data", f"unix:{tmp}/kvd.sock",
+...                 fsync="never").start()
+>>> a = NetKVStore(srv.address)            # two clients, one server —
+>>> b = NetKVStore(srv.address)            # e.g. two driver processes
+>>> a.rpush("sched/queue", "task-0")
+1
+>>> b.lpop("sched/queue")                  # one shared queue
+'task-0'
+>>> a.close(); b.close(); srv.close()
+
+Below, the daemon runs as a real subprocess (the CLI a deployment uses),
+two drivers dial in over TCP and cooperate on one mapreduce, and then the
+server is SIGKILLed mid-map and restarted: clients reconnect, re-register
+their watches on the new server generation, resend in-flight requests,
+and the job completes with exact results — the recovery contract
+``tests/test_net_kill.py`` pins.
+
+Run:  PYTHONPATH=src python examples/net_cluster.py
+"""
+
+import os
+import signal
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+from repro.core import WrenExecutor, get_all, word_count
+from repro.storage import NetBackend, NetKVStore, ObjectStore
+
+DOCS = [
+    "the cloud is just someone else us computer".split(),
+    "occupy the cloud distributed computing for the rest of us".split(),
+    "the simplicity of a map over stateless functions".split(),
+    "storage is the only channel between functions".split(),
+] * 4  # 16 map partitions
+
+
+def spawn_kvd(root: str, port: int) -> subprocess.Popen:
+    """The deployment entry point: ``python -m repro.storage.net_server``."""
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.storage.net_server",
+            "--root", root, "--port", str(port), "--fsync", "never",
+        ],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+    )
+    banner = proc.stdout.readline().strip()
+    assert banner.startswith("LISTENING"), banner
+    return proc
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as root:
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        proc = spawn_kvd(f"{root}/kvd", port)
+        addr = f"127.0.0.1:{port}"
+
+        kv = NetKVStore(addr)
+        store = ObjectStore(backend=NetBackend(addr))
+        driver_a = WrenExecutor(store=store, kv=kv, num_workers=2, seed=1)
+        driver_b = WrenExecutor(store=store, kv=kv, num_workers=2, seed=2)
+        try:
+            # Two drivers, one daemon: B's workers lease tasks of the job
+            # only A submitted, exactly as over the shared-disk substrate.
+            counts = word_count(driver_a, [[" ".join(d)] for d in DOCS], num_reducers=4)
+            top = sorted(counts.items(), key=lambda kv_: -kv_[1])[:3]
+            print(f"word count over {len(DOCS)} partitions: top {top}")
+            b_done = sum(s.tasks_ok for s in driver_b.pool.stats().values())
+            print(f"driver B executed {b_done} tasks of A's job")
+
+            # Kill the daemon mid-map; restart it; the map still completes.
+            futs = driver_a.map(lambda x: x * x, list(range(32)))
+            time.sleep(0.1)
+            proc.send_signal(signal.SIGKILL)
+            proc.wait()
+            print("SIGKILLed repro-kvd mid-map; restarting on the same root")
+            proc = spawn_kvd(f"{root}/kvd", port)
+            results = get_all(futs, timeout_s=120)
+            assert results == [x * x for x in range(32)]
+            print(f"map of 32 tasks survived the restart "
+                  f"(client reconnects: {kv._client.reconnects})")
+        finally:
+            driver_a.shutdown()
+            driver_b.shutdown()
+            kv.close()
+            store.backend.close()
+            proc.send_signal(signal.SIGTERM)
+            proc.wait(timeout=10)
+
+
+if __name__ == "__main__":
+    main()

@@ -694,10 +694,13 @@ def install() -> None:
     from repro.core.scheduler import Scheduler
     from repro.storage.file_kv import FileKVStore
     from repro.storage.kv_store import KVStore
+    from repro.storage.net_kv import NetBackend, NetKVStore
     from repro.storage.object_store import FileBackend, InMemoryBackend, ObjectStore
 
     _hook_init(KVStore, SanitizingKVStore)
     _hook_init(FileKVStore, SanitizingKVStore)
+    _hook_init(NetKVStore, SanitizingKVStore)
+    _hook_init(NetBackend, SanitizingBackend)
     _hook_init(ObjectStore, SanitizingBackend)
     _hook_init(InMemoryBackend, SanitizingBackend)
     _hook_init(FileBackend, SanitizingBackend)

@@ -65,9 +65,10 @@ Adoption protocol (driven by ``bsp.adopt_job``):
 from __future__ import annotations
 
 import time
+from functools import partial
 from typing import Any, Dict, List, Optional
 
-from repro.storage import KVStore
+from repro.storage import KVStore, kv_pure
 
 _JOB = "sched/job/"
 _FINISHED = "sched/finished/"  # the scheduler's job tombstone keyspace
@@ -100,11 +101,62 @@ def barrier_key(job_id: str, idx: int) -> str:
 # immutable records: manifest, stage plans, barriers
 # ---------------------------------------------------------------------------
 
-def _first_writer(value: Any):
-    def _fn(cur: Any) -> Any:
-        return value if cur is None else cur
+# Eval functions are module-level + functools.partial (not closures):
+# partials of module functions serialize by reference under plain pickle,
+# so a wire-backed KVStore ships a few bytes per eval instead of
+# cloudpickling code objects both ways (see repro.storage.net_kv).
 
-    return _fn
+@kv_pure
+def _first_writer_fn(value: Any, cur: Any) -> Any:
+    return value if cur is None else cur
+
+
+def _first_writer(value: Any):
+    return partial(_first_writer_fn, value)
+
+
+@kv_pure
+def _driver_take(owner: str, timeout_s: float, now: float, cur: Optional[dict]) -> dict:
+    if cur is None:
+        return {"owner": owner, "term": 1, "expires": now + timeout_s}
+    if cur.get("owner") == owner:
+        rec = dict(cur)
+        rec["expires"] = now + timeout_s
+        return rec
+    if float(cur.get("expires", 0.0)) <= now:
+        return {
+            "owner": owner,
+            "term": int(cur.get("term", 0)) + 1,
+            "expires": now + timeout_s,
+        }
+    return cur  # live foreign driver keeps it
+
+
+@kv_pure
+def _driver_extend(
+    owner: str, term: int, expires: float, extended: dict, job_id: str,
+    cur: Optional[dict],
+):
+    if cur is None:
+        return None  # job GC'd: leave the key absent
+    if cur.get("owner") != owner or int(cur.get("term", 0)) != term:
+        return cur  # fenced: an adopter holds a higher term
+    rec = dict(cur)
+    rec["expires"] = expires
+    extended[job_id] = True
+    return rec
+
+
+@kv_pure
+def _driver_release(owner: str, term: int, out: dict, cur: Optional[dict]):
+    if cur is None:
+        return None
+    if cur.get("owner") != owner or int(cur.get("term", 0)) != term:
+        return cur
+    rec = dict(cur)
+    rec["expires"] = 0.0
+    out["ok"] = True
+    return rec
 
 
 def commit_records(
@@ -156,23 +208,9 @@ def acquire_driver(
     learn whether they hold the lease (two adopters racing a takeover both
     see the single winner's record)."""
     now = time.monotonic()
-
-    def _take(cur: Optional[dict]) -> dict:
-        if cur is None:
-            return {"owner": owner, "term": 1, "expires": now + timeout_s}
-        if cur.get("owner") == owner:
-            rec = dict(cur)
-            rec["expires"] = now + timeout_s
-            return rec
-        if float(cur.get("expires", 0.0)) <= now:
-            return {
-                "owner": owner,
-                "term": int(cur.get("term", 0)) + 1,
-                "expires": now + timeout_s,
-            }
-        return cur  # live foreign driver keeps it
-
-    return kv.eval(driver_key(job_id), _take, worker=worker)
+    return kv.eval(
+        driver_key(job_id), partial(_driver_take, owner, timeout_s, now), worker=worker
+    )
 
 
 def heartbeat_drivers(
@@ -192,21 +230,10 @@ def heartbeat_drivers(
         return []
     expires = time.monotonic() + timeout_s
     extended: Dict[str, bool] = {}
-
-    def _extend_for(job_id: str, term: int):
-        def _extend(cur: Optional[dict]):
-            if cur is None:
-                return None  # job GC'd: leave the key absent
-            if cur.get("owner") != owner or int(cur.get("term", 0)) != term:
-                return cur  # fenced: an adopter holds a higher term
-            rec = dict(cur)
-            rec["expires"] = expires
-            extended[job_id] = True
-            return rec
-
-        return _extend
-
-    updates = {driver_key(j): _extend_for(j, t) for j, t in owned.items()}
+    updates = {
+        driver_key(j): partial(_driver_extend, owner, t, expires, extended, j)
+        for j, t in owned.items()
+    }
     kv.eval_many(updates, worker=worker)
     return [j for j in owned if not extended.get(j)]
 
@@ -220,18 +247,7 @@ def release_driver(
     a fresh owner's.  The record itself is removed only by the job's
     tombstoned GC (``Scheduler.finish_job``)."""
     out: Dict[str, bool] = {}
-
-    def _release(cur: Optional[dict]):
-        if cur is None:
-            return None
-        if cur.get("owner") != owner or int(cur.get("term", 0)) != term:
-            return cur
-        rec = dict(cur)
-        rec["expires"] = 0.0
-        out["ok"] = True
-        return rec
-
-    kv.eval(driver_key(job_id), _release, worker=worker)
+    kv.eval(driver_key(job_id), partial(_driver_release, owner, term, out), worker=worker)
     return bool(out.get("ok"))
 
 

@@ -80,9 +80,10 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass
+from functools import partial
 from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
 
-from repro.storage import DELETE, KVStore, ObjectStore
+from repro.storage import DELETE, KVStore, ObjectStore, kv_pure
 
 from .functions import TaskSpec
 
@@ -105,6 +106,81 @@ _UNBOUNDED_WAIT_S = 3600.0
 # Finished-job tombstones cached locally before FIFO eviction (the KV
 # tombstone stays authoritative; the local set only saves the exists probe).
 _MAX_TOMBSTONES = 1024
+
+
+# ---------------------------------------------------------------------------
+# KV eval functions (hot path).  Module-level + functools.partial rather
+# than closures: partials of module functions serialize by REFERENCE under
+# plain pickle, so a wire-backed KVStore ships a few bytes per eval instead
+# of cloudpickling a code object both ways.  Captured-dict outputs (``out``)
+# ride as partial args; the eval replay contract lands their mutations on
+# the caller's side exactly as a closure would.
+# ---------------------------------------------------------------------------
+
+@kv_pure
+def _incr_counter(cur: object) -> int:
+    return int(cur or 0) + 1
+
+
+@kv_pure
+def _decr_counter(cur: object) -> int:
+    return int(cur or 0) - 1
+
+
+@kv_pure
+def _lease_install(record: dict, cur: Optional[dict]) -> dict:
+    # Two handles can pop duplicate queue entries of one task concurrently;
+    # the higher epoch wins the record (it fenced the lower at the epoch
+    # counter), never the later writer.
+    if cur is not None and int(cur.get("epoch", 0)) > record["epoch"]:
+        return cur
+    return record
+
+
+@kv_pure
+def _lease_drop(
+    epoch: int,
+    require_expired_before: Optional[float],
+    out: dict,
+    cur: Optional[dict],
+):
+    if cur is None:
+        return DELETE  # nothing to drop (key untouched)
+    if epoch and int(cur.get("epoch", 0)) != epoch:
+        return cur  # fenced: a different attempt owns the task
+    if require_expired_before is not None and cur["expires"] > require_expired_before:
+        return cur  # extended in the meantime: not reapable
+    out["rec"] = cur
+    return DELETE
+
+
+@kv_pure
+def _lease_extend(epoch: int, expires: float, out: dict, cur: Optional[dict]):
+    if cur is None:
+        return DELETE  # no record: leave the key absent
+    if epoch and int(cur.get("epoch", 0)) != epoch:
+        return cur  # fenced
+    cur = dict(cur)
+    cur["expires"] = expires
+    out["ok"] = True
+    return cur
+
+
+@kv_pure
+def _fenced_decay(decay: float, v: object):
+    cur = float(v or 0) - decay
+    return cur if cur > 1e-9 else DELETE
+
+
+@kv_pure
+def _probe_keep(out: dict, cur):
+    # Read-only probe riding an eval_many batch: reports the stored value
+    # without changing presence (DELETE on an absent key is a no-op pop, so
+    # the key stays absent; a present value is stored back unchanged).
+    if cur is None:
+        return DELETE
+    out["rec"] = cur
+    return cur
 
 
 def quantile(samples: List[float], q: float) -> float:
@@ -311,6 +387,29 @@ class Scheduler:
         self._remember_finished(job_id)
         return True
 
+    def _jobs_finished(self, job_ids: Set[str]) -> Set[str]:
+        """Batched :meth:`_job_finished`: ONE ``mget`` for every job id the
+        local tombstone cache can't answer (a lease batch is per-round-trip
+        sensitive on wire substrates — per-task gets were the single
+        hottest op on the net backend's map path)."""
+        finished: Set[str] = set()
+        unknown: List[str] = []
+        with self._lock:
+            for j in job_ids:
+                if j in self._finished_jobs:
+                    finished.add(j)
+                else:
+                    unknown.append(j)
+        if unknown:
+            vals = self.kv.mget(
+                [_FINISHED + j for j in unknown], worker="scheduler"
+            )
+            for j, v in zip(unknown, vals):
+                if v is not None:
+                    self._remember_finished(j)
+                    finished.add(j)
+        return finished
+
     def _remember_finished(self, job_id: str) -> None:
         with self._lock:
             if job_id not in self._finished_jobs:
@@ -332,18 +431,11 @@ class Scheduler:
         instant — a heartbeat racing the reaper keeps the lease).  Epoch 0
         is the legacy unfenced wildcard.  Returns (won, record)."""
         out: Dict[str, dict] = {}
-
-        def _cas(cur):
-            if cur is None:
-                return DELETE  # nothing to drop (key untouched)
-            if epoch and int(cur.get("epoch", 0)) != epoch:
-                return cur  # fenced: a different attempt owns the task
-            if require_expired_before is not None and cur["expires"] > require_expired_before:
-                return cur  # extended in the meantime: not reapable
-            out["rec"] = cur
-            return DELETE
-
-        self.kv.eval(_LEASE + task_id, _cas, worker=worker)
+        self.kv.eval(
+            _LEASE + task_id,
+            partial(_lease_drop, epoch, require_expired_before, out),
+            worker=worker,
+        )
         rec = out.get("rec")
         if rec is not None:
             with self._lock:
@@ -386,22 +478,20 @@ class Scheduler:
             # entry is simply consumed.
             seen: Set[str] = set()
             live: List[TaskSpec] = []
+            gone = self._jobs_finished({t.job_id for t in popped})
             for t in popped:
-                if t.task_id in seen or self._job_finished(t.job_id):
+                if t.task_id in seen or t.job_id in gone:
                     continue  # stale duplicate of a GC'd job: drop, don't resurrect
                 seen.add(t.task_id)
                 live.append(t)
             if not live:
                 continue
 
-            def _incr(v):
-                return int(v or 0) + 1
-
             counters: Dict[str, Callable] = {}
             for t in live:
-                counters[_ATTEMPTS + t.task_id] = _incr
+                counters[_ATTEMPTS + t.task_id] = _incr_counter
             for t in live:
-                counters[_EPOCH + t.task_id] = _incr
+                counters[_EPOCH + t.task_id] = _incr_counter
             res = self.kv.eval_many(counters, default=0, worker=worker)
             # Result-existence probe, for RETRIES AND DUPLICATES ONLY (one
             # batched round-trip): a first attempt (attempts == 1) cannot
@@ -442,16 +532,7 @@ class Scheduler:
                     "spec": spec,
                 }
 
-                def _install(cur, record=record):
-                    # Two handles can pop duplicate queue entries of one task
-                    # concurrently; the higher epoch wins the record (it
-                    # fenced the lower at the epoch counter), never the
-                    # later writer.
-                    if cur is not None and int(cur.get("epoch", 0)) > record["epoch"]:
-                        return cur
-                    return record
-
-                installs[_LEASE + t.task_id] = _install
+                installs[_LEASE + t.task_id] = partial(_lease_install, record)
                 candidates.append((t, spec, epoch, attempts))
             leased: List[TaskSpec] = []
             if installs:
@@ -480,7 +561,7 @@ class Scheduler:
                     leased.append(won.with_epoch(epoch))
                 if refunds:
                     self.kv.eval_many(
-                        {_ATTEMPTS + tid: (lambda v: int(v or 0) - 1) for tid in refunds},
+                        {_ATTEMPTS + tid: _decr_counter for tid in refunds},
                         default=0,
                         worker=worker,
                     )
@@ -554,18 +635,11 @@ class Scheduler:
         epoch = task.epoch
         expires = time.monotonic() + self.config.lease_timeout_s
         out: Dict[str, bool] = {}
-
-        def _extend(cur):
-            if cur is None:
-                return DELETE  # no record: leave the key absent
-            if epoch and int(cur.get("epoch", 0)) != epoch:
-                return cur  # fenced
-            cur = dict(cur)
-            cur["expires"] = expires
-            out["ok"] = True
-            return cur
-
-        self.kv.eval(_LEASE + task.task_id, _extend, worker=worker)
+        self.kv.eval(
+            _LEASE + task.task_id,
+            partial(_lease_extend, epoch, expires, out),
+            worker=worker,
+        )
         return bool(out.get("ok"))
 
     def complete(self, task: TaskSpec, worker: str, duration_s: float) -> bool:
@@ -573,16 +647,39 @@ class Scheduler:
         Only the winning attempt's duration enters the job's straggler
         distribution — a zombie's wall time (it sat reaped or superseded)
         would poison the quantile.  Returns whether this attempt won."""
-        won, _rec = self._fenced_drop_lease(task.task_id, task.epoch, worker)
+        # The lease drop and the finished-tombstone probe ride ONE
+        # ``eval_many`` (one pipelined round-trip — this pair is the per-task
+        # hot path, and on a wire substrate a separate tombstone get doubled
+        # completion's trip count).
+        out: Dict[str, dict] = {}
+        probe: Dict[str, dict] = {}
+        with self._lock:
+            cached_finished = task.job_id in self._finished_jobs
+        updates: Dict[str, Callable] = {
+            _LEASE + task.task_id: partial(_lease_drop, task.epoch, None, out)
+        }
+        if not cached_finished:
+            updates[_FINISHED + task.job_id] = partial(_probe_keep, probe)
+        self.kv.eval_many(updates, worker=worker)
+        won = out.get("rec") is not None
+        if won:
+            with self._lock:
+                self._active_leases = max(0, self._active_leases - 1)
+                self._hinted.discard(task.task_id)
+        finished = cached_finished or probe.get("rec") is not None
+        if finished and not cached_finished:
+            self._remember_finished(task.job_id)
         # An in-flight duplicate finishing after its job was GC'd must not
         # re-create state finish_job just deleted: skip the duration push
         # and scrub the result/.err objects its publish re-created (the
         # result key was absent again, so its if_absent publish won).
-        if self._job_finished(task.job_id):
+        if finished:
             self.store.delete_prefix(task.result_key, worker=worker)
             won = False
         elif won:
-            self.kv.rpush(_DURATION + task.job_id, duration_s, worker=worker)
+            # Advisory sample: a lost entry only nudges the speculation
+            # quantile, so it is not worth a blocking round trip per task.
+            self.kv.rpush_nowait(_DURATION + task.job_id, duration_s, worker=worker)
             self._maybe_decay_fenced(task.job_id, worker)
         else:
             # A fenced zombie ran to completion: it was reaped or superseded
@@ -611,11 +708,7 @@ class Scheduler:
         if not hinted and not (cached is not None and cached[2] > 0):
             return
 
-        def _decay(v: object) -> object:
-            cur = float(v or 0) - decay
-            return cur if cur > 1e-9 else DELETE
-
-        new = self.kv.eval(_FENCED + job_id, _decay, worker=worker)
+        new = self.kv.eval(_FENCED + job_id, partial(_fenced_decay, decay), worker=worker)
         if new is None:
             with self._lock:
                 self._fenced_hint.discard(job_id)

@@ -18,7 +18,8 @@ Every operation is recorded in a :class:`~repro.storage.object_store.Ledger`
 (one record == one modeled request), which is what benchmarks count."""
 
 from .file_kv import FileKVStore
-from .kv_store import DELETE, KVStore
+from .kv_store import DELETE, KVStore, kv_pure
+from .net_kv import NetBackend, NetKVStore
 from .object_store import FileBackend, InMemoryBackend, Ledger, ObjectStore, OpRecord
 from .perf_model import (
     DISAGG_2026,
@@ -35,7 +36,10 @@ from .serialization import content_key, digest, dumps, dumps_with_key, loads
 __all__ = [
     "KVStore",
     "FileKVStore",
+    "NetKVStore",
+    "NetBackend",
     "DELETE",
+    "kv_pure",
     "ObjectStore",
     "InMemoryBackend",
     "FileBackend",

@@ -277,6 +277,15 @@ class _LogShard:
         # there would let our next commit ftruncate a peer's frame away.
         return self._reload()
 
+    def load_fast(self) -> Dict[str, Any]:
+        """:meth:`load` for an *exclusive* store: no other process writes
+        this log, so a clean materialized state needs no stat round-trip.
+        Falls back to the full load on first touch, after a failed commit
+        (invalidate), or while a torn tail is on record."""
+        if self._state is not None and self._file_size == self._valid_end:
+            return self._state
+        return self.load()
+
     def _replay_tail(self, size: int) -> None:
         tail = os.pread(self._fd, size - self._valid_end, self._valid_end)
         end = 0
@@ -436,6 +445,9 @@ class _SnapshotShard:
         self._snap = (size, state)
         return state
 
+    def load_fast(self) -> Dict[str, Any]:
+        return self.load()  # snapshot engine: no exclusive fast path
+
     def commit(self, state: Dict[str, Any], records: List[tuple], mode: str) -> None:
         tmp = f"{self.data_path}.tmp.{os.getpid()}.{threading.get_ident()}"
         self._pending_syncs += 1
@@ -492,6 +504,8 @@ class FileKVStore(KVStore):
         fsync_batch_n: int = 64,
         compact_min_bytes: int = 64 * 1024,
         compact_ratio: float = 4.0,
+        exclusive: bool = False,
+        charged: bool = True,
     ) -> None:
         if engine not in ("log", "snapshot"):
             raise ValueError(f"engine must be 'log' or 'snapshot', got {engine!r}")
@@ -499,10 +513,20 @@ class FileKVStore(KVStore):
             fsync = "commit"  # FileBackend's name for the same policy
         if fsync not in ("auto", "commit", "batch", "never"):
             raise ValueError(f"unknown fsync policy {fsync!r}")
-        super().__init__(num_shards=num_shards, profile=profile, ledger=ledger)
+        super().__init__(
+            num_shards=num_shards, profile=profile, ledger=ledger, charged=charged
+        )
         self.root = os.path.abspath(root)
         self.engine = engine
         self.fsync = fsync
+        # Exclusive mode: this handle is the directory's SOLE writer and
+        # reader (the repro-kvd server owning its data dir, like Redis its
+        # AOF).  Transactions then skip the cross-process flock and the
+        # per-op stat validation — shard thread locks and the materialized
+        # state are authoritative — which is where the wire tier's speed
+        # over the shared-disk substrate comes from.  Crash safety is
+        # unchanged: every commit is still one framed append.
+        self.exclusive = exclusive
         self.durable_prefixes = tuple(durable_prefixes)
         os.makedirs(self.root, exist_ok=True)
         if engine == "log":
@@ -579,10 +603,19 @@ class FileKVStore(KVStore):
             def __enter__(self) -> _Txn:
                 self._sh = store._shards[sidx]
                 self._sh.lock.acquire()
+                eng = store._engines[sidx]
+                if store.exclusive:
+                    # Sole-owner fast path: no flock, no stat — the shard
+                    # thread lock is the whole mutual exclusion.
+                    try:
+                        self._txn = _Txn(eng.load_fast())
+                    except BaseException:
+                        self._sh.lock.release()
+                        raise
+                    return self._txn
                 fd = store._lock_fd(sidx)
                 # reprolint: disable=LOCK001(thread-lock-then-flock is the txn protocol's fixed lock order; every shard txn takes both)
                 fcntl.flock(fd, fcntl.LOCK_EX)
-                eng = store._engines[sidx]
                 try:
                     self._txn = _Txn(eng.load())
                 except BaseException:
@@ -617,9 +650,12 @@ class FileKVStore(KVStore):
                         # state: it no longer matches disk — drop it.
                         eng.invalidate()
                 finally:
-                    fcntl.flock(store._lock_fd(sidx), fcntl.LOCK_UN)
+                    if not store.exclusive:
+                        fcntl.flock(store._lock_fd(sidx), fcntl.LOCK_UN)
                     if committed:
-                        self._sh.touch()  # wake this process's waiters
+                        # Keyed wake: the frame's records name exactly the
+                        # keys this commit touched.
+                        self._sh.touch({k for _op, k, _v in self._txn.records})
                     self._sh.lock.release()
                 return False
 
@@ -652,6 +688,9 @@ class FileKVStore(KVStore):
         for sidx in range(self.num_shards):
             sh = self._shards[sidx]
             with sh.lock:
+                if self.exclusive:
+                    self._engines[sidx].sync()
+                    continue
                 fd = self._lock_fd(sidx)
                 # reprolint: disable=LOCK001(durability barrier takes the same thread-lock-then-flock order as _txn)
                 fcntl.flock(fd, fcntl.LOCK_EX)

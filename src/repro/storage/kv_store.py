@@ -55,8 +55,9 @@ import struct
 import threading
 import time
 import zlib
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, Iterator, List, Optional, Tuple
 
 from .object_store import Ledger, OpRecord, _Endpoint
 from .perf_model import REDIS_2017, StorageProfile
@@ -67,8 +68,38 @@ _TOMBSTONE = object()
 # the key atomically instead of storing a value — the Redis-script idiom
 # ``if ok then redis.call('DEL', key) end`` used by fenced lease releases:
 # compare-epoch-then-delete must be one atomic step or a zombie's heartbeat
-# could slip between the compare and the delete.
-DELETE = object()
+# could slip between the compare and the delete.  It must survive a pickle
+# round-trip as the SAME object (update closures ship to repro-kvd, whose
+# ``is DELETE`` check runs in another process), so it reduces to the
+# module singleton rather than to a fresh anonymous ``object()``.
+class _DeleteSentinel:
+    __slots__ = ()
+
+    def __repr__(self) -> str:
+        return "DELETE"
+
+    def __reduce__(self):
+        return (_delete_sentinel, ())
+
+
+def _delete_sentinel() -> "_DeleteSentinel":
+    return DELETE
+
+
+DELETE = _DeleteSentinel()
+
+
+def kv_pure(fn):
+    """Mark an eval function as PURE for the KV engines: it neither mutates
+    its argument in place nor is its key's stored value mutated in place by
+    any other writer.  A wire server may then hand the stored object to the
+    function directly and return it as the pre-image without the defensive
+    ``pickle`` deep-copy it otherwise pays per key (material on eval-heavy
+    hot paths — lease records carry whole task specs).  Purity survives the
+    wire: partials of a marked module function pickle by reference, so the
+    marker is on the server-side unpickled function too."""
+    fn.__kv_pure__ = True
+    return fn
 
 
 @dataclass
@@ -77,6 +108,11 @@ class ShardStats:
     bytes_in: int = 0
     bytes_out: int = 0
     vtime_s: float = 0.0
+
+
+# How many (seq, keys) touch records each shard remembers for keyed wakes —
+# the KV mirror of ``_Backend._RECENT_PUTS`` in object_store.py.
+_SHARD_RECENT = 512
 
 
 class _Shard:
@@ -89,11 +125,20 @@ class _Shard:
         self.seq = 0  # monotonically increasing write sequence
         self.data: Dict[str, Any] = {}
         self.stats = ShardStats()
+        # Ring of (seq, frozenset(keys) | None) per touch: lets keyed
+        # waiters prove a wake named only other keys.  None = unknown
+        # (virtual touch, cross-process file watch, ring overflow).
+        self.recent: deque = deque(maxlen=_SHARD_RECENT)
+        self.skipped_wakes = 0  # foreign-key wakes absorbed by wait_key
 
-    def touch(self) -> None:
+    def touch(self, keys: Optional[Iterable[str]] = None) -> None:
         """Record a write: bump the sequence, wake every shard watcher.
+        ``keys`` names what the write touched so keyed waiters
+        (:meth:`KVStore.wait_key`) can absorb wakes that provably do not
+        concern them; ``None`` means unknown — treat as touching anything.
         Must be called with the shard lock held."""
         self.seq += 1
+        self.recent.append((self.seq, None if keys is None else frozenset(keys)))
         self.cond.notify_all()
 
 
@@ -210,12 +255,18 @@ class KVStore(_Endpoint):
         num_shards: int = 1,
         profile: StorageProfile = REDIS_2017,
         ledger: Optional[Ledger] = None,
+        *,
+        charged: bool = True,
     ) -> None:
         if num_shards < 1:
             raise ValueError("num_shards >= 1")
         self.num_shards = num_shards
         self.profile = profile
         self.ledger = ledger or Ledger()
+        # charged=False skips per-op accounting entirely — for engine-role
+        # handles whose ledger nobody reads (the repro-kvd server charges
+        # nothing; its CLIENTS charge, so the modeled ledger is theirs).
+        self.charged = charged
         self._shards = [_Shard(i) for i in range(num_shards)]
         self._register_endpoint()
 
@@ -229,6 +280,8 @@ class KVStore(_Endpoint):
     def _charge(
         self, shard: _Shard, worker: str, op: str, key: str, nbytes: int, write: bool
     ) -> None:
+        if not self.charged:
+            return
         vt = self.profile.write_time(nbytes) if write else self.profile.read_time(nbytes)
         shard.stats.ops += 1
         shard.stats.vtime_s += vt
@@ -248,22 +301,55 @@ class KVStore(_Endpoint):
             return sh.seq
 
     def wait_key(self, key: str, last_seq: int, timeout_s: float) -> int:
-        """Block until a write lands on ``key``'s *shard* after the
-        ``last_seq`` snapshot (or the timeout elapses); returns the current
-        sequence.  A single wakeup — callers loop and re-check their own
-        predicate, exactly like ``ObjectStore.wait_put``."""
+        """Block until a write lands on ``key`` — not merely its shard —
+        after the ``last_seq`` snapshot (or the timeout elapses); returns
+        the current sequence.  Wakes are *keyed*: every touch records which
+        keys it wrote (a ``puts_since``-style ring, mirroring the object
+        store), and a wake whose key set provably excludes ``key`` is
+        absorbed here instead of bouncing the caller into a futile
+        predicate re-check.  A wake with unknown keys (virtual touch,
+        cross-process file watch, ring overflow) conservatively returns.
+        Callers still loop and re-check their own predicate, exactly like
+        ``ObjectStore.wait_put``."""
         sh = self._shard(key)
+        deadline = time.monotonic() + timeout_s
         with sh.lock:
-            if sh.seq == last_seq:
-                sh.cond.wait(timeout_s)
-            return sh.seq
+            while True:
+                if sh.seq != last_seq:
+                    if self._touched(sh, key, last_seq):
+                        return sh.seq
+                    sh.skipped_wakes += 1
+                    last_seq = sh.seq  # foreign-key wake: absorb and re-arm
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return sh.seq
+                sh.cond.wait(remaining)
+
+    @staticmethod
+    def _touched(sh: _Shard, key: str, last_seq: int) -> bool:
+        """True if any touch after ``last_seq`` may have written ``key``
+        (named it, had unknown keys, or scrolled off the ring)."""
+        recent = sh.recent
+        if not recent or recent[0][0] > last_seq + 1:
+            return True  # ring can't prove the wakes were foreign
+        for seq, keys in recent:
+            if seq <= last_seq:
+                continue
+            if keys is None or key in keys:
+                return True
+        return False
+
+    def foreign_wake_skips(self) -> int:
+        """How many shard wakes :meth:`wait_key` absorbed because the touch
+        named only other keys — the keyed-wake win the dataplane tests pin."""
+        return sum(sh.skipped_wakes for sh in self._shards)
 
     def notify_key(self, key: str) -> None:
-        """Virtual touch: wake every watcher of ``key``'s shard without
-        writing (used by e.g. scheduler shutdown to unblock queue waiters)."""
+        """Virtual touch: wake every watcher of ``key`` without writing
+        (used by e.g. scheduler shutdown to unblock queue waiters)."""
         sh = self._shard(key)
         with sh.lock:
-            sh.touch()
+            sh.touch((key,))
 
     # ---- atomic single-key ops ------------------------------------------
     def set(self, key: str, value: Any, *, worker: str = "-") -> None:
@@ -271,7 +357,7 @@ class KVStore(_Endpoint):
         with sh.lock:
             sh.data[key] = value
             self._charge(sh, worker, "set", key, _sizeof(value), write=True)
-            sh.touch()
+            sh.touch((key,))
 
     def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
         sh = self._shard(key)
@@ -328,7 +414,7 @@ class KVStore(_Endpoint):
                     sh, worker, "mset", f"[{len(group)} keys@s{sidx}]",
                     nbytes, write=True,
                 )
-                sh.touch()  # one wakeup per touched shard for the whole batch
+                sh.touch(group)  # one wakeup per touched shard for the whole batch
 
     def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
         sh = self._shard(key)
@@ -337,7 +423,7 @@ class KVStore(_Endpoint):
             if key in sh.data:
                 return False
             sh.data[key] = value
-            sh.touch()
+            sh.touch((key,))
             return True
 
     def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
@@ -346,7 +432,7 @@ class KVStore(_Endpoint):
             new = sh.data.get(key, 0) + amount
             sh.data[key] = new
             self._charge(sh, worker, "incr", key, 8, write=True)
-            sh.touch()
+            sh.touch((key,))
             return new
 
     def cas(self, key: str, expect: Any, value: Any, *, worker: str = "-") -> bool:
@@ -359,7 +445,7 @@ class KVStore(_Endpoint):
             )
             if matched:
                 sh.data[key] = value
-                sh.touch()
+                sh.touch((key,))
                 return True
             return False
 
@@ -368,7 +454,7 @@ class KVStore(_Endpoint):
         with sh.lock:
             sh.data.pop(key, None)
             self._charge(sh, worker, "del", key, 0, write=True)
-            sh.touch()
+            sh.touch((key,))
 
     def mdel(self, keys: List[str], *, worker: str = "-") -> int:
         """Batched delete: one amortized round-trip per shard touched (cf.
@@ -387,7 +473,7 @@ class KVStore(_Endpoint):
                 self._charge(
                     sh, worker, "mdel", f"[{len(group)} keys@s{sidx}]", 0, write=True
                 )
-                sh.touch()
+                sh.touch(group)
         return removed
 
     def exists(self, key: str, *, worker: str = "-") -> bool:
@@ -435,11 +521,11 @@ class KVStore(_Endpoint):
             if new is DELETE:
                 sh.data.pop(key, None)
                 self._charge(sh, worker, "eval", key, 0, write=True)
-                sh.touch()
+                sh.touch((key,))
                 return None
             sh.data[key] = new
             self._charge(sh, worker, "eval", key, _sizeof(new), write=True)
-            sh.touch()
+            sh.touch((key,))
             return new
 
     def eval_many(
@@ -476,7 +562,7 @@ class KVStore(_Endpoint):
                     sh, worker, "meval", f"[{len(group)} keys@s{sidx}]",
                     nbytes, write=True,
                 )
-                sh.touch()
+                sh.touch(group)
         return out
 
     # ---- lists (queues) ---------------------------------------------------
@@ -486,8 +572,18 @@ class KVStore(_Endpoint):
             lst = sh.data.setdefault(key, [])
             lst.extend(values)
             self._charge(sh, worker, "rpush", key, sum(_sizeof(v) for v in values), write=True)
-            sh.touch()
+            sh.touch((key,))
             return len(lst)
+
+    def rpush_nowait(self, key: str, *values: Any, worker: str = "-") -> None:
+        """Advisory RPUSH: no return value and — on wire-backed stores — no
+        round trip (the append rides a fire-and-forget frame and may be
+        dropped by a reconnect window).  For telemetry-grade appends like
+        duration samples, where losing one entry is benign but paying a
+        blocking round trip per task is not.  In-process stores append
+        synchronously; only the *guarantee* is weakened, never the
+        ordering a single client observes."""
+        self.rpush(key, *values, worker=worker)
 
     def rpush_many(
         self, pushes: Dict[str, List[Any]], *, worker: str = "-"
@@ -515,7 +611,7 @@ class KVStore(_Endpoint):
                     sh, worker, "mrpush", f"[{len(group)} keys@s{sidx}]",
                     nbytes, write=True,
                 )
-                sh.touch()
+                sh.touch(group)
         return lengths
 
     def lpop(self, key: str, *, worker: str = "-") -> Any:

@@ -1,0 +1,1149 @@
+"""Wire-protocol KV/object tier: the ``repro-kvd`` client side.
+
+The paper's closing bet is that stateless functions over fast
+*disaggregated storage* is the natural substrate (§5), and Cloudburst
+shows FaaS becomes viable for stateful work exactly when the shared KV
+tier is low-latency.  PR 5 made the file substrate fast on shared disk;
+this module takes the next step: a real socket server (``repro-kvd``,
+see :mod:`.net_server`) with the log-structured engine as its
+persistence, and :class:`NetKVStore` / :class:`NetBackend` clients that
+preserve the batched contract — one frame per ``mset`` / ``mget`` /
+``eval_many`` / ``rpush_many`` / ``get_many`` / ``put_many``, same
+request-charging model, so the perf ledger and the BATCH001 reasoning
+carry over unchanged.
+
+Framing
+-------
+Every message is one PR-5 frame: ``[u32 payload length][u32 crc32]``
+followed by a pickled payload (``_FRAME_HDR`` from :mod:`.kv_store` —
+the exact bytes the shard logs use).  Messages:
+
+==========================================  =======================================
+``("req",  rid, op, args, kwargs)``          client → server request
+``("res",  rid, value)``                     server → client response
+``("err",  rid, etype, msg)``                server → client op failure
+``("sub",  client_id, topics)``              client → server handshake/subscribe
+``("hello", info)``                          server → client handshake reply
+``("kv",   shard, srv_seq, keys|None)``      pushed KV watch event (keyed wake)
+``("obj",  srv_seq, keys|None)``             pushed object-store watch event
+==========================================  =======================================
+
+Requests are pipelined: any number may be in flight on one socket, each
+carrying a client-unique ``rid``; worker threads share one connection
+and block only on their own response.  Requests are cloudpickled (they
+carry ``eval`` closures); responses and events are plain pickles.
+
+Pushed watch events replace client-side polling entirely: the server
+tracks per-shard sequences and streams *keyed* wake frames —
+``puts_since``-style for the KV too — so ``wait_key`` / ``blpop`` /
+``wait_keys`` / futures stay event-driven across machines with zero
+fallback ticks.
+
+``eval`` over the wire: deterministic replay
+--------------------------------------------
+Scheduler transactions pass closures that *mutate captured state*
+(``out["rec"] = cur``) — shipping the closure one way would lose those
+side effects.  The protocol therefore runs every update function twice
+on the same input: the server applies ``fn(old)`` atomically inside the
+shard transaction and returns ``old`` (post-``default``); the client
+replays ``fn(old)`` locally, reproducing side effects and the return
+value exactly.  Update functions must be deterministic in their
+argument — every fenced transaction in the runtime is.
+
+Failure model
+-------------
+Ops are at-least-once: a connection that dies with requests in flight is
+redialed (bounded backoff) and the unacknowledged requests are resent in
+order, so a request the server committed just before the crash may
+execute twice.  Destructive reads are the exception — a replayed
+``lpop_n`` would *lose* the first pop's items — so the server journals
+non-empty pop results under ``net-ack/{client}/{rid}`` in the popped
+key's own shard transaction and replays return the journaled items (the
+client retires ack records with its next pop of the same key).
+Everything else is absorbed one level up exactly as for zombie workers:
+deterministic task ids, lease-time duplicate drops, ``if_absent`` result
+publishes, and epoch fencing make task effects exactly-once over
+at-least-once wire ops.
+
+On reconnect the client compares the server's ``hello`` (generation +
+per-shard sequences) with what it last saw and conservatively wakes
+every local waiter with *unknown* keys — waiters re-probe their
+predicate once, so a wake can never be lost across a server restart.
+
+Like Redis without AUTH, the protocol is for trusted networks only: it
+is pickle over a socket (arbitrary code execution by design — ``eval``
+ships closures), so bind the server to localhost or a private network.
+"""
+
+from __future__ import annotations
+
+import itertools
+import pickle
+import socket
+import threading
+import time
+import uuid
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import cloudpickle
+
+from .kv_store import DELETE, KVStore, _FRAME_HDR, _sizeof
+from .object_store import Ledger, _Backend
+from .perf_model import REDIS_2017, StorageProfile
+
+# A frame's payload may carry a whole batched put — generous cap, but an
+# adversarial/corrupt header claiming more fails fast without allocating.
+MAX_FRAME_LEN = 1 << 30
+
+
+class ProtocolError(Exception):
+    """Malformed wire data (bad CRC, oversized length, undecodable
+    payload).  The peer that sent it gets its connection closed — never a
+    crash, never a partially applied transaction (ops only execute on
+    whole, valid frames)."""
+
+
+class RemoteError(RuntimeError):
+    """A server-side op raised; carries ``etype`` (the remote exception
+    class name) and the stringified message."""
+
+    def __init__(self, etype: str, msg: str) -> None:
+        super().__init__(f"{etype}: {msg}")
+        self.etype = etype
+
+
+def encode_wire(obj: Any, *, pickler=pickle) -> bytes:
+    """One message → one frame (same header as the shard logs)."""
+    payload = pickler.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    return _FRAME_HDR.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+class FrameDecoder:
+    """Incremental frame decoder for a byte stream.
+
+    ``feed(data)`` returns every whole message that became available.  A
+    partial frame simply waits for more bytes (torn frames are the normal
+    state of a socket mid-read); corrupt input — CRC mismatch, a length
+    over ``max_frame``, an unpicklable payload — raises
+    :class:`ProtocolError` and poisons the decoder (the connection is
+    dead; resynchronizing inside a corrupt pickle stream is hopeless)."""
+
+    def __init__(self, max_frame: int = MAX_FRAME_LEN) -> None:
+        self._buf = bytearray()
+        self._max = max_frame
+        self._poisoned = False
+
+    def feed(self, data: bytes) -> List[Any]:
+        if self._poisoned:
+            raise ProtocolError("decoder poisoned by earlier corrupt frame")
+        self._buf += data
+        out: List[Any] = []
+        off = 0
+        buf = self._buf
+        hdr = _FRAME_HDR.size
+        try:
+            while len(buf) - off >= hdr:
+                length, crc = _FRAME_HDR.unpack_from(buf, off)
+                if length > self._max:
+                    raise ProtocolError(
+                        f"frame length {length} exceeds cap {self._max}"
+                    )
+                end = off + hdr + length
+                if len(buf) < end:
+                    break  # torn frame: wait for more bytes
+                payload = bytes(buf[off + hdr : end])
+                if zlib.crc32(payload) != crc:
+                    raise ProtocolError("frame CRC mismatch")
+                try:
+                    out.append(pickle.loads(payload))
+                except ProtocolError:
+                    raise
+                except Exception as exc:
+                    raise ProtocolError(f"undecodable frame payload: {exc!r}")
+                off = end
+        except ProtocolError:
+            self._poisoned = True
+            raise
+        del self._buf[:off]
+        return out
+
+
+def parse_addr(address) -> Tuple[str, int]:
+    """``"host:port"`` / ``(host, port)`` / ``"unix:/path"`` → ``(host,
+    port)``.  A Unix-domain address keeps the whole ``unix:...`` string as
+    the host (port 0) — same-host clusters skip the TCP stack entirely."""
+    if isinstance(address, (tuple, list)):
+        return str(address[0]), int(address[1])
+    address = str(address)
+    if address.startswith("unix:"):
+        return address, 0
+    host, _, port = address.rpartition(":")
+    if not host:
+        raise ValueError(f"address must be host:port or unix:/path, got {address!r}")
+    return host, int(port)
+
+
+class _Call:
+    """One in-flight request: its encoded frame (kept for resend after a
+    reconnect), its completion state, and its private wake event — the
+    pump wakes exactly the caller a response belongs to, never the herd."""
+
+    __slots__ = ("frame", "done", "value", "error", "event")
+
+    def __init__(self, frame: bytes) -> None:
+        self.frame = frame
+        self.done = False
+        self.value: Any = None
+        self.error: Optional[BaseException] = None
+        self.event = threading.Event()
+
+
+def _dial(
+    host: str, port: int, client_id: str, topics: Tuple[str, ...], timeout_s: float
+) -> Tuple[socket.socket, Dict[str, Any], FrameDecoder, List[Any]]:
+    """Connect + handshake: send ``sub``, block for ``hello``.  Returns the
+    socket, the hello payload, the stream decoder (already fed), and any
+    messages that arrived behind the hello."""
+    if host.startswith("unix:"):
+        sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        sock.settimeout(timeout_s)
+        sock.connect(host[len("unix:"):])
+    else:
+        sock = socket.create_connection((host, port), timeout=timeout_s)
+    try:
+        if sock.family != socket.AF_UNIX:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        sock.sendall(encode_wire(("sub", client_id, list(topics))))
+        dec = FrameDecoder()
+        msgs: List[Any] = []
+        while not msgs:
+            data = sock.recv(1 << 16)
+            if not data:
+                raise OSError("server closed during handshake")
+            msgs = dec.feed(data)
+        hello = msgs[0]
+        if not (isinstance(hello, tuple) and hello and hello[0] == "hello"):
+            raise OSError(f"expected hello, got {hello!r}")
+        sock.settimeout(None)
+    except BaseException:
+        sock.close()
+        raise
+    return sock, dict(hello[1]), dec, msgs[1:]
+
+
+class _EventChannel:
+    """The push plane: a second socket subscribed to watch topics, pumped
+    by a background reader thread.  Kept separate from the request socket
+    so the request path needs no reader-thread handoff (see
+    :class:`NetClient`) while pushed wakes still arrive when the client is
+    idle.  On connection loss it redials with bounded backoff and fires
+    ``on_reconnect`` — waiters then re-probe, so no wake is ever lost to a
+    server restart."""
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        client_id: str,
+        topics: Tuple[str, ...],
+        on_event: Callable[[tuple], None],
+        on_reconnect: Optional[Callable[[dict], None]],
+        closed: threading.Event,
+        *,
+        connect_timeout_s: float,
+        retry_max_s: float,
+    ) -> None:
+        self._host, self._port = host, port
+        self._client_id = client_id
+        self._topics = topics
+        self._on_event = on_event
+        self._on_reconnect = on_reconnect
+        self._closed = closed
+        self._connect_timeout_s = connect_timeout_s
+        self._retry_max_s = retry_max_s
+        self.reconnects = 0
+        self._sock, self.hello, self._decoder, backlog = _dial(
+            host, port, client_id, topics, connect_timeout_s
+        )
+        for m in backlog:
+            self._on_event(m)
+        self._thread = threading.Thread(
+            target=self._run, daemon=True, name=f"netkv-events-{port}"
+        )
+        self._thread.start()
+
+    def _run(self) -> None:
+        while not self._closed.is_set():
+            try:
+                data = self._sock.recv(1 << 16)
+            except OSError:
+                data = b""
+            if data:
+                try:
+                    msgs = self._decoder.feed(data)
+                except ProtocolError:
+                    self._redial()
+                    continue
+                for m in msgs:
+                    self._on_event(m)
+                continue
+            if self._closed.is_set():
+                return
+            self._redial()
+
+    def _redial(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        backoff = 0.005
+        while not self._closed.is_set():
+            try:
+                self._sock, self.hello, self._decoder, backlog = _dial(
+                    self._host,
+                    self._port,
+                    self._client_id,
+                    self._topics,
+                    self._connect_timeout_s,
+                )
+            except OSError:
+                self._closed.wait(backoff)
+                backoff = min(backoff * 2.0, self._retry_max_s)
+                continue
+            self.reconnects += 1
+            # Resync: wake the owner's waiters with unknown keys — anything
+            # may have happened (or a whole new server generation booted)
+            # while this channel was down.
+            if self._on_reconnect is not None:
+                self._on_reconnect(self.hello)
+            for m in backlog:
+                self._on_event(m)
+            return
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        if threading.current_thread() is not self._thread:
+            self._thread.join(timeout=2.0)
+
+
+class NetClient:
+    """A pipelined connection pair to a ``repro-kvd`` server.
+
+    Thread-safe: any number of threads may :meth:`call` concurrently;
+    requests interleave on the request socket and each caller blocks only
+    on its own response.  Responses are demultiplexed *by the callers
+    themselves* (leader/follower): whichever waiting caller holds the pump
+    baton recvs and dispatches until its own response arrives, then hands
+    the baton to a waiting follower.  On the hot path — one caller, answer
+    already in flight — a response costs zero thread handoffs, which is
+    what keeps a wire op in the same latency class as a local disk
+    transaction.  Pushed watch events ride a separate
+    :class:`_EventChannel` socket with a background reader, so wakes
+    arrive even when no call is in flight.
+
+    On connection loss the pumping caller redials with bounded backoff and
+    re-sends every unacknowledged request in rid order (at-least-once —
+    see the module docstring)."""
+
+    def __init__(
+        self,
+        host: str,
+        port: int,
+        *,
+        topics: Tuple[str, ...] = (),
+        on_event: Optional[Callable[[tuple], None]] = None,
+        on_reconnect: Optional[Callable[[dict], None]] = None,
+        connect_timeout_s: float = 10.0,
+        retry_max_s: float = 0.2,
+    ) -> None:
+        self.host, self.port = host, port
+        self.client_id = uuid.uuid4().hex
+        self._connect_timeout_s = connect_timeout_s
+        self._retry_max_s = retry_max_s
+        self._rid = itertools.count(1)
+        self._pending: Dict[int, _Call] = {}
+        self._state_lock = threading.Lock()
+        self._send_lock = threading.Lock()
+        self._pumping = False
+        self._closed = threading.Event()
+        self._req_reconnects = 0
+        self.hello: Dict[str, Any] = {}
+        deadline = time.monotonic() + connect_timeout_s
+        backoff = 0.01
+        while True:  # cover the race with a server that is still binding
+            try:
+                self._sock, self.hello, self._decoder, _ = _dial(
+                    host, port, self.client_id, (), connect_timeout_s
+                )
+                break
+            except OSError as exc:
+                if time.monotonic() >= deadline:
+                    raise ConnectionError(
+                        f"repro-kvd at {host}:{port} unreachable: {exc}"
+                    ) from exc
+                self._closed.wait(backoff)
+                backoff = min(backoff * 2.0, retry_max_s)
+        self._topics = tuple(topics)
+        self._on_event = on_event
+        self._on_reconnect = on_reconnect
+        self._events: Optional[_EventChannel] = None
+        self._events_lock = threading.Lock()
+
+    def ensure_events(self) -> Optional[Dict[str, Any]]:
+        """Dial the push channel if it is not up yet (it is lazy: a client
+        that never waits never receives a single event frame).  Returns the
+        channel's ``hello`` when this call created it — the caller must
+        resync against its sequences, because anything that happened before
+        this moment was never pushed — and ``None`` when it already ran."""
+        if self._events is not None or not self._topics or self._on_event is None:
+            return None
+        with self._events_lock:
+            if self._events is not None:
+                return None
+            channel = _EventChannel(
+                self.host,
+                self.port,
+                self.client_id,
+                self._topics,
+                self._on_event,
+                self._on_reconnect,
+                self._closed,
+                connect_timeout_s=self._connect_timeout_s,
+                retry_max_s=self._retry_max_s,
+            )
+            self._events = channel
+            return dict(channel.hello)
+
+    @property
+    def reconnects(self) -> int:
+        return self._req_reconnects + (self._events.reconnects if self._events else 0)
+
+    # ---- request plane ---------------------------------------------------
+    def call(self, op: str, *args: Any, **kwargs: Any) -> Any:
+        return self.call_rid(op, *args, **kwargs)[1]
+
+    def call_rid(self, op: str, *args: Any, **kwargs: Any) -> Tuple[int, Any]:
+        """Issue one request; block for its response.  Returns ``(rid,
+        value)`` — destructive reads use the rid as their server-side ack
+        token.  Survives any number of reconnects in between; raises only
+        a remapped server error or ``ConnectionError`` after close."""
+        if self._closed.is_set():
+            raise ConnectionError("net client is closed")
+        rid = next(self._rid)
+        msg = ("req", rid, op, args, kwargs)
+        try:
+            # Plain pickle first: it is ~3x cheaper and covers every op but
+            # the closure-carrying evals, which fall back to cloudpickle.
+            frame = encode_wire(msg)
+        except Exception:
+            frame = encode_wire(msg, pickler=cloudpickle)
+        call = _Call(frame)
+        with self._state_lock:
+            self._pending[rid] = call
+            sock = self._sock
+        if sock is not None:
+            try:
+                with self._send_lock:
+                    sock.sendall(frame)
+            except OSError:
+                pass  # whoever pumps next redials and resends for us
+        self._await(call)
+        if call.error is not None:
+            raise call.error
+        return rid, call.value
+
+    def cast(self, op: str, *args: Any, **kwargs: Any) -> None:
+        """Fire-and-forget: one frame out, no response, no await.  For
+        advisory writes (duration samples, counters) where the caller needs
+        neither the result nor a delivery guarantee stronger than the
+        socket's — a cast lost to a reconnect window is simply dropped
+        (requests, by contrast, are resent).  Ordering relative to this
+        client's own later calls is preserved (same socket, in-order
+        server)."""
+        if self._closed.is_set():
+            raise ConnectionError("net client is closed")
+        msg = ("cast", op, args, kwargs)
+        try:
+            frame = encode_wire(msg)
+        except Exception:
+            frame = encode_wire(msg, pickler=cloudpickle)
+        with self._state_lock:
+            sock = self._sock
+        if sock is not None:
+            try:
+                with self._send_lock:
+                    sock.sendall(frame)
+            except OSError:
+                pass  # best-effort: advisory write dropped with the conn
+
+    def _await(self, call: _Call) -> None:
+        """Leader/follower pump with targeted wakes: become the socket
+        reader if nobody is, else sleep on this call's PRIVATE event.
+        Completing a response wakes exactly its caller; a leader whose own
+        call finished hands the baton by waking one pending caller, who
+        then takes over the pump.  Under concurrent callers this costs one
+        context switch per response — never a broadcast herd."""
+        while not call.done:
+            lead = False
+            with self._state_lock:
+                if call.done:
+                    break
+                if self._closed.is_set():
+                    call.error = call.error or ConnectionError("net client closed")
+                    call.done = True
+                    break
+                if not self._pumping:
+                    self._pumping = lead = True
+            if not lead:
+                call.event.wait(1.0)  # bounded: baton races resolve in <1s
+                call.event.clear()
+                continue
+            try:
+                while not call.done and not self._closed.is_set():
+                    self._pump_once()
+            finally:
+                with self._state_lock:
+                    self._pumping = False
+                    if self._closed.is_set() and not call.done:
+                        call.error = call.error or ConnectionError(
+                            "net client closed"
+                        )
+                        call.done = True
+                    # Hand the baton over: wake ONE pending caller, who
+                    # becomes the next leader (or finds itself done).
+                    nxt = next(iter(self._pending.values()), None)
+                if nxt is not None:
+                    nxt.event.set()
+
+    def _pump_once(self) -> None:
+        sock = self._sock
+        if sock is None:
+            self._redial_and_resend()
+            return
+        try:
+            data = sock.recv(1 << 16)
+        except OSError:
+            data = b""
+        if not data:
+            if self._closed.is_set():
+                return
+            self._redial_and_resend()
+            return
+        try:
+            msgs = self._decoder.feed(data)
+        except ProtocolError:
+            # A server speaking garbage is indistinguishable from a
+            # corrupted stream: drop the connection and resync fresh.
+            self._redial_and_resend()
+            return
+        for m in msgs:
+            self._dispatch(m)
+
+    def _dispatch(self, m: Any) -> bool:
+        kind = m[0]
+        if kind not in ("res", "err"):
+            return False
+        with self._state_lock:
+            call = self._pending.pop(m[1], None)
+        if call is None:
+            return False
+        if kind == "res":
+            call.value = m[2]
+        else:
+            call.error = self._map_error(m[2], m[3])
+        call.done = True
+        call.event.set()  # targeted: wake this caller alone
+        return True
+
+    @staticmethod
+    def _map_error(etype: str, msg: str) -> Exception:
+        if etype == "KeyError":
+            return KeyError(msg)
+        if etype == "FileNotFoundError":
+            return FileNotFoundError(msg)
+        return RemoteError(etype, msg)
+
+    def _redial_and_resend(self) -> None:
+        """Leader-only: redial after a lost connection, then resend the
+        whole unacknowledged window in rid order."""
+        with self._state_lock:
+            old, self._sock = self._sock, None
+        if old is not None:
+            try:
+                old.close()
+            except OSError:
+                pass
+        backoff = 0.005
+        while not self._closed.is_set():
+            try:
+                sock, self.hello, self._decoder, backlog = _dial(
+                    self.host, self.port, self.client_id, (), self._connect_timeout_s
+                )
+            except OSError:
+                self._closed.wait(backoff)
+                backoff = min(backoff * 2.0, self._retry_max_s)
+                continue
+            with self._state_lock:
+                self._sock = sock
+                pending = sorted(self._pending.items())
+            try:
+                with self._send_lock:
+                    for _rid, call in pending:
+                        sock.sendall(call.frame)
+            except OSError:
+                continue  # lost it again mid-resend: start over
+            self._req_reconnects += 1
+            for m in backlog:
+                self._dispatch(m)
+            return
+
+    def close(self) -> None:
+        self._closed.set()
+        with self._state_lock:
+            sock, self._sock = self._sock, None
+            pending = list(self._pending.values())
+            self._pending.clear()
+        if sock is not None:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        for call in pending:
+            if not call.done:
+                call.error = ConnectionError("net client closed")
+                call.done = True
+            call.event.set()
+        if self._events is not None:
+            self._events.close()
+
+
+class NetKVStore(KVStore):
+    """:class:`KVStore` over a ``repro-kvd`` connection.
+
+    Same public API, same notification contract, same charging model:
+    every verb is one wire frame, charged locally with the in-memory
+    store's exact formulas (one amortized round-trip per shard touched
+    for batched verbs), so ledgers compare across backends.  The local
+    shard structs hold no data — they carry the watch conditions, the
+    keyed-wake ring (fed by pushed ``("kv", shard, seq, keys)`` events),
+    and the op stats.
+
+    Waiting is fully event-driven and *registered*: ``wait_key`` /
+    ``blpop`` pin a per-key watch on the server (refcounted; one wire op
+    per wait session, none per loop iteration), and the server pushes
+    wake frames only for watched keys — the keyed-wake filter runs
+    server-side, so the torrent of unwatched control-plane writes never
+    crosses the wire at all.  Registration replies with the key's current
+    server shard sequence; a mismatch with the last sequence this client
+    saw means writes landed while unwatched, and the shard is woken once
+    so the caller re-probes — the snapshot-check-wait contract holds with
+    no lost wakes and no fallback ticks."""
+
+    def __init__(
+        self,
+        address,
+        profile: StorageProfile = REDIS_2017,
+        ledger: Optional[Ledger] = None,
+        *,
+        connect_timeout_s: float = 10.0,
+    ) -> None:
+        self._addr = parse_addr(address)
+        # Pop-ack and watch bookkeeping must exist before any event can
+        # arrive.
+        self._ack_guard = threading.Lock()
+        self._pop_acks: Dict[str, List[int]] = {}
+        self._watch_lock = threading.Lock()
+        self._watch_refs: Dict[str, int] = {}
+        self._client = NetClient(
+            self._addr[0],
+            self._addr[1],
+            topics=("kv",),
+            on_event=self._on_event,
+            on_reconnect=self._on_reconnect,
+            connect_timeout_s=connect_timeout_s,
+        )
+        num_shards = int(self._client.hello["num_shards"])
+        self._srv_seqs: Dict[int, int] = dict(
+            enumerate(self._client.hello.get("kv_seqs", []))
+        )
+        super().__init__(num_shards=num_shards, profile=profile, ledger=ledger)
+
+    # ---- endpoint --------------------------------------------------------
+    def _endpoint_spec(self) -> Dict[str, Any]:
+        return {
+            "kind": "net_kv",
+            "addr": f"{self._addr[0]}:{self._addr[1]}",
+        }
+
+    def close(self) -> None:
+        self._client.close()
+
+    # ---- pushed watch events --------------------------------------------
+    def _on_event(self, m: tuple) -> None:
+        if m[0] != "kv":
+            return
+        shards = getattr(self, "_shards", None)
+        if shards is None:
+            return  # event raced construction: no waiters exist yet
+        _kind, sidx, srv_seq, keys = m
+        if not (0 <= sidx < len(shards)):
+            return
+        self._srv_seqs[sidx] = max(self._srv_seqs.get(sidx, 0), srv_seq)
+        sh = shards[sidx]
+        with sh.lock:
+            sh.touch(keys)
+
+    def _on_reconnect(self, hello: dict) -> None:
+        shards = getattr(self, "_shards", None)
+        if shards is None:
+            return
+        # Order matters: re-pin every live watch FIRST (a write landing
+        # between hello and re-registration must not go unpushed), THEN
+        # adopt the hello sequences, THEN wake every waiter with UNKNOWN
+        # keys so each re-probes its predicate exactly once.  A restarted
+        # server starts a new generation with fresh sequences, so this is
+        # an assignment, not a max.
+        with self._watch_lock:
+            for key in [k for k, n in self._watch_refs.items() if n > 0]:
+                try:
+                    self._client.call("watch.kv", key, True)
+                except (ConnectionError, OSError):
+                    pass  # next reconnect re-registers again
+        self._srv_seqs.update(enumerate(hello.get("kv_seqs", [])))
+        for sh in shards:
+            with sh.lock:
+                sh.touch(None)
+
+    # ---- registered waits ------------------------------------------------
+    def _watch_acquire(self, key: str) -> None:
+        """Pin a server-side watch on ``key`` (refcounted: one wire op per
+        wait session).  The registration reply carries the key's current
+        server shard sequence; if it differs from the last sequence this
+        client saw, writes landed while unwatched — touch the shard so the
+        caller's predicate re-check runs before it sleeps.
+
+        The lock is held ACROSS the wire op: an "on" racing a concurrent
+        "off" for the same key could otherwise land first and leave the
+        server unwatched under a sleeping waiter."""
+        with self._watch_lock:
+            n = self._watch_refs.get(key, 0)
+            self._watch_refs[key] = n + 1
+            if n:
+                return
+            try:
+                hello = self._client.ensure_events()
+                if hello is not None:
+                    # The event channel was just created: writes before it
+                    # existed were never pushed.  Adopt its hello seqs;
+                    # mismatched shards wake with unknown keys.
+                    stale = [
+                        sidx
+                        for sidx, srv_seq in enumerate(hello.get("kv_seqs", []))
+                        if srv_seq != self._srv_seqs.get(sidx, 0)
+                    ]
+                    self._srv_seqs.update(enumerate(hello.get("kv_seqs", [])))
+                    for sidx in stale:
+                        sh = self._shards[sidx]
+                        with sh.lock:
+                            sh.touch(None)
+                srv_seq = int(self._client.call("watch.kv", key, True))
+            except BaseException:
+                self._watch_refs[key] = n  # registration failed: unwind
+                if not n:
+                    self._watch_refs.pop(key, None)
+                raise
+            sidx = self.shard_of(key)
+            if srv_seq != self._srv_seqs.get(sidx, 0):
+                self._srv_seqs[sidx] = srv_seq
+                sh = self._shards[sidx]
+                with sh.lock:
+                    sh.touch((key,))
+
+    def _watch_release(self, key: str) -> None:
+        with self._watch_lock:
+            n = self._watch_refs.get(key, 0) - 1
+            if n > 0:
+                self._watch_refs[key] = n
+                return
+            self._watch_refs.pop(key, None)
+            try:
+                self._client.call("watch.kv", key, False)
+            except (ConnectionError, OSError, RemoteError):
+                pass  # conn gone: the server reaps the watch with it
+
+    def wait_key(self, key: str, last_seq: int, timeout_s: float) -> int:
+        self._watch_acquire(key)
+        try:
+            return super().wait_key(key, last_seq, timeout_s)
+        finally:
+            self._watch_release(key)
+
+    # ---- atomic single-key ops ------------------------------------------
+    def set(self, key: str, value: Any, *, worker: str = "-") -> None:
+        self._client.call("kv.set", key, value)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "set", key, _sizeof(value), write=True)
+
+    def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
+        value = self._client.call("kv.get", key, default)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "get", key, _sizeof(value), write=False)
+        return value
+
+    def mget(
+        self, keys: List[str], default: Any = None, *, worker: str = "-"
+    ) -> List[Any]:
+        out = self._client.call("kv.mget", list(keys), default)
+        by_shard: Dict[int, List[int]] = {}
+        for i, key in enumerate(keys):
+            by_shard.setdefault(self.shard_of(key), []).append(i)
+        for sidx, positions in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = sum(_sizeof(out[i]) for i in positions)
+                self._charge(
+                    sh, worker, "mget", f"[{len(positions)} keys@s{sidx}]",
+                    nbytes, write=False,
+                )
+        return out
+
+    def mset(self, mapping: Dict[str, Any], *, worker: str = "-") -> None:
+        self._client.call("kv.mset", dict(mapping))
+        by_shard: Dict[int, List[str]] = {}
+        for key in mapping:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = sum(_sizeof(mapping[key]) for key in group)
+                self._charge(
+                    sh, worker, "mset", f"[{len(group)} keys@s{sidx}]",
+                    nbytes, write=True,
+                )
+
+    def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
+        won = bool(self._client.call("kv.setnx", key, value))
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "setnx", key, _sizeof(value), write=True)
+        return won
+
+    def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
+        new = self._client.call("kv.incr", key, amount)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "incr", key, 8, write=True)
+        return new
+
+    def cas(self, key: str, expect: Any, value: Any, *, worker: str = "-") -> bool:
+        won = bool(self._client.call("kv.cas", key, expect, value))
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "cas", key, _sizeof(value), write=True)
+        return won
+
+    def delete(self, key: str, *, worker: str = "-") -> None:
+        self._client.call("kv.delete", key)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "del", key, 0, write=True)
+
+    def mdel(self, keys: List[str], *, worker: str = "-") -> int:
+        removed = int(self._client.call("kv.mdel", list(keys)))
+        by_shard: Dict[int, List[str]] = {}
+        for key in keys:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                self._charge(
+                    sh, worker, "mdel", f"[{len(group)} keys@s{sidx}]", 0, write=True
+                )
+        return removed
+
+    def exists(self, key: str, *, worker: str = "-") -> bool:
+        ok = bool(self._client.call("kv.exists", key))
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "exists", key, 0, write=False)
+        return ok
+
+    def scan(self, prefix: str, *, worker: str = "-") -> List[str]:
+        found = self._client.call("kv.scan", prefix)
+        per_shard: Dict[int, int] = {}
+        for k in found:
+            sidx = self.shard_of(k)
+            per_shard[sidx] = per_shard.get(sidx, 0) + len(k.encode())
+        # Same formula as the in-memory scan: every shard is charged a
+        # round-trip (hashing scatters a prefix across all of them).
+        for sh in self._shards:
+            with sh.lock:
+                self._charge(
+                    sh, worker, "scan", f"[{prefix}*@s{sh.idx}]",
+                    per_shard.get(sh.idx, 0), write=False,
+                )
+        return sorted(found)
+
+    # ---- server-side scripting ------------------------------------------
+    def eval(
+        self,
+        key: str,
+        fn: Callable[[Any], Any],
+        *,
+        default: Any = None,
+        worker: str = "-",
+    ) -> Any:
+        old = self._client.call("kv.eval", key, fn, default)
+        new = fn(old)  # deterministic replay: side effects land HERE
+        deleted = new is DELETE
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(
+                sh, worker, "eval", key, 0 if deleted else _sizeof(new), write=True
+            )
+        return None if deleted else new
+
+    def eval_many(
+        self,
+        updates: Dict[str, Callable[[Any], Any]],
+        *,
+        default: Any = None,
+        worker: str = "-",
+    ) -> Dict[str, Any]:
+        olds = self._client.call("kv.eval_many", dict(updates), default)
+        by_shard: Dict[int, List[str]] = {}
+        for key in updates:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        out: Dict[str, Any] = {}
+        for sidx, group in by_shard.items():
+            nbytes = 0
+            for key in group:
+                new = updates[key](olds[key])  # deterministic replay
+                if new is DELETE:
+                    out[key] = None
+                    continue
+                out[key] = new
+                nbytes += _sizeof(new)
+            sh = self._shards[sidx]
+            with sh.lock:
+                self._charge(
+                    sh, worker, "meval", f"[{len(group)} keys@s{sidx}]",
+                    nbytes, write=True,
+                )
+        return out
+
+    # ---- lists (queues) --------------------------------------------------
+    def rpush(self, key: str, *values: Any, worker: str = "-") -> int:
+        length = int(self._client.call("kv.rpush", key, *values))
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(
+                sh, worker, "rpush", key, sum(_sizeof(v) for v in values), write=True
+            )
+        return length
+
+    def rpush_nowait(self, key: str, *values: Any, worker: str = "-") -> None:
+        self._client.cast("kv.rpush", key, *values)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(
+                sh, worker, "rpush", key, sum(_sizeof(v) for v in values), write=True
+            )
+
+    def rpush_many(
+        self, pushes: Dict[str, List[Any]], *, worker: str = "-"
+    ) -> Dict[str, int]:
+        lengths = self._client.call("kv.rpush_many", dict(pushes))
+        by_shard: Dict[int, List[str]] = {}
+        for key in pushes:
+            by_shard.setdefault(self.shard_of(key), []).append(key)
+        for sidx, group in by_shard.items():
+            sh = self._shards[sidx]
+            with sh.lock:
+                nbytes = sum(_sizeof(v) for key in group for v in pushes[key])
+                self._charge(
+                    sh, worker, "mrpush", f"[{len(group)} keys@s{sidx}]",
+                    nbytes, write=True,
+                )
+        return lengths
+
+    def _pop_wire(self, key: str, max_n: int) -> List[Any]:
+        """One ack-journaled destructive read (module docstring: a retried
+        pop must return the FIRST pop's items, never pop again)."""
+        with self._ack_guard:
+            acked = self._pop_acks.pop(key, None) or []
+        try:
+            rid, out = self._client.call_rid("kv.lpop_n", key, max_n, acked)
+        except BaseException:
+            if acked:  # put the retirement list back for the next attempt
+                with self._ack_guard:
+                    self._pop_acks.setdefault(key, []).extend(acked)
+            raise
+        if out:
+            with self._ack_guard:
+                self._pop_acks.setdefault(key, []).append(rid)
+        return out
+
+    def lpop(self, key: str, *, worker: str = "-") -> Any:
+        out = self._pop_wire(key, 1)
+        value = out[0] if out else None
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "lpop", key, _sizeof(value), write=True)
+        return value
+
+    def lpop_n(self, key: str, max_n: int, *, worker: str = "-") -> List[Any]:
+        out = self._pop_wire(key, max_n)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(
+                sh, worker, "lpopn", key, sum(_sizeof(v) for v in out), write=True
+            )
+        return out
+
+    def blpop(self, key: str, timeout_s: float, *, worker: str = "-") -> Any:
+        """Event-driven blocking pop: wire attempt, then wait on the local
+        shard condition for a pushed wake naming ``key``.  The sequence is
+        snapshotted BEFORE each attempt, so a push whose event lands after
+        a failed attempt wakes the wait instead of being missed."""
+        deadline = time.monotonic() + timeout_s
+        sh = self._shard(key)
+        # One watch session spans every retry: the inner wait_key calls
+        # refcount onto this pin instead of churning the wire per loop.
+        self._watch_acquire(key)
+        try:
+            while True:
+                with sh.lock:
+                    seq = sh.seq
+                out = self._pop_wire(key, 1)
+                if out:
+                    with sh.lock:
+                        self._charge(
+                            sh, worker, "blpop", key, _sizeof(out[0]), write=True
+                        )
+                    return out[0]
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return None
+                self.wait_key(key, seq, remaining)
+        finally:
+            self._watch_release(key)
+
+    def lrange(
+        self, key: str, start: int = 0, stop: int = -1, *, worker: str = "-"
+    ) -> List[Any]:
+        out = self._client.call("kv.lrange", key, start, stop)
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(
+                sh, worker, "lrange", key, sum(_sizeof(v) for v in out), write=False
+            )
+        return out
+
+    def llen(self, key: str, *, worker: str = "-") -> int:
+        n = int(self._client.call("kv.llen", key))
+        sh = self._shard(key)
+        with sh.lock:
+            self._charge(sh, worker, "llen", key, 8, write=False)
+        return n
+
+
+class NetBackend(_Backend):
+    """Object-store backend over a ``repro-kvd`` connection.
+
+    Byte-plane ops are one frame each (batched verbs stay batched); the
+    watch plane is fully pushed — the server streams ``("obj", seq,
+    keys)`` events for every mutation *including this client's own*
+    (``echoes_puts``), feeding the inherited ``puts_since`` ring, so
+    ``ObjectStore.wait_keys`` is event-driven with zero fallback ticks."""
+
+    cross_process = True
+    self_watching = True
+    echoes_puts = True
+
+    def __init__(self, address, *, connect_timeout_s: float = 10.0) -> None:
+        self._addr = parse_addr(address)
+        self._init_watch()
+        self._client = NetClient(
+            self._addr[0],
+            self._addr[1],
+            topics=("obj",),
+            on_event=self._on_event,
+            on_reconnect=self._on_reconnect,
+            connect_timeout_s=connect_timeout_s,
+        )
+        self._srv_obj_seq = int(self._client.hello.get("obj_seq", 0))
+
+    def endpoint_spec(self) -> Dict[str, Any]:
+        return {
+            "kind": "net_obj",
+            "addr": f"{self._addr[0]}:{self._addr[1]}",
+        }
+
+    def close(self) -> None:
+        self._client.close()
+
+    # ---- pushed watch events --------------------------------------------
+    def _on_event(self, m: tuple) -> None:
+        if m[0] == "obj":
+            self._srv_obj_seq = max(self._srv_obj_seq, int(m[1]))
+            _Backend.notify_put(self, m[2])
+
+    def _on_reconnect(self, hello: dict) -> None:
+        # Unknown-keys wake: waiters re-probe once, so no put that landed
+        # while we were disconnected can be missed.  New generation means
+        # fresh server sequences — adopt, don't max.
+        self._srv_obj_seq = int(hello.get("obj_seq", 0))
+        _Backend.notify_put(self, None)
+
+    def wait_put(self, last_seq: int, timeout_s: float) -> int:
+        # The event channel is lazy (non-waiting clients pay zero event
+        # CPU); first wait creates it.  Its hello carries the server's
+        # current object sequence — any gap vs the last sequence we saw is
+        # a put that predates the channel, so wake with unknown keys.
+        hello = self._client.ensure_events()
+        if hello is not None:
+            srv = int(hello.get("obj_seq", 0))
+            if srv != self._srv_obj_seq:
+                self._srv_obj_seq = srv
+                _Backend.notify_put(self, None)
+        return _Backend.wait_put(self, last_seq, timeout_s)
+
+    # ---- byte plane ------------------------------------------------------
+    def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
+        return bool(self._client.call("ob.put", key, bytes(blob), if_absent))
+
+    def put_many(self, items: Dict[str, bytes], *, if_absent: bool) -> int:
+        return int(self._client.call("ob.put_many", dict(items), if_absent))
+
+    def get(self, key: str) -> bytes:
+        return self._client.call("ob.get", key)
+
+    def get_many(self, keys: List[str]) -> Dict[str, bytes]:
+        return self._client.call("ob.get_many", list(keys))
+
+    def exists(self, key: str) -> bool:
+        return bool(self._client.call("ob.exists", key))
+
+    def exists_many(self, keys: List[str]) -> set:
+        return set(self._client.call("ob.exists_many", list(keys)))
+
+    def delete(self, key: str) -> None:
+        self._client.call("ob.delete", key)
+
+    def list(self, prefix: str) -> List[str]:
+        return list(self._client.call("ob.list", prefix))

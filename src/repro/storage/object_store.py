@@ -104,7 +104,7 @@ def _reconnect(spec: Dict[str, Any]) -> Any:
     the moral equivalent of an S3 client re-opening a connection from its
     endpoint URL.  Only file-backed handles carry a spec (their root path
     *is* the endpoint); in-memory handles are process-local by nature."""
-    cache_key = (spec["kind"], spec["root"])
+    cache_key = (spec["kind"], spec.get("root") or spec.get("addr"))
     with _RECONNECT_LOCK:
         handle = _RECONNECT_CACHE.get(cache_key)
     if handle is not None:
@@ -122,6 +122,14 @@ def _reconnect(spec: Dict[str, Any]) -> Any:
             engine=spec.get("engine", "log"),
             fsync=spec.get("fsync", "auto"),
         )
+    elif spec["kind"] == "net_kv":
+        from .net_kv import NetKVStore  # local import: net_kv imports us
+
+        handle = NetKVStore(spec["addr"])
+    elif spec["kind"] == "net_obj":
+        from .net_kv import NetBackend  # local import: net_kv imports us
+
+        handle = ObjectStore(backend=NetBackend(spec["addr"]))
     else:
         raise RuntimeError(f"unknown storage endpoint spec {spec!r}")
     with _RECONNECT_LOCK:
@@ -428,6 +436,13 @@ class _Backend:
     cross_process = False
     self_watching = False
 
+    # True when the backend's own event plane already reports this handle's
+    # writes back to it (the net backend: the server pushes a watch frame
+    # for every mutation, including ours).  ``ObjectStore`` then skips its
+    # local ``notify_put`` after puts — otherwise every batch would wake
+    # waiters twice, once locally and once on the echoed event.
+    echoes_puts = False
+
     # How many recent put events carry their key lists before waiters must
     # fall back to an existence probe (bounds memory, not correctness).
     _RECENT_PUTS = 512
@@ -631,11 +646,17 @@ class FileBackend(_Backend):
         fsync: str = "auto",
         durable_prefixes: Tuple[str, ...] = ("ckpt/",),
         fsync_batch_n: int = 32,
+        watch_ledger: bool = True,
     ) -> None:
         if fsync == "commit":
             fsync = "always"  # FileKVStore's name for the same policy
         if fsync not in ("auto", "always", "batch", "never"):
             raise ValueError(f"unknown fsync policy {fsync!r}")
+        # watch_ledger=False: skip the .watch-seq append per mutation.  Only
+        # for a sole-owner backend whose host pushes its own change events
+        # (the repro-kvd server) — with no foreign watchers, the ledger is
+        # pure overhead.
+        self.watch_ledger = watch_ledger
         self.root = os.path.abspath(root)
         os.makedirs(self.root, exist_ok=True)
         self.fsync = fsync
@@ -726,6 +747,8 @@ class FileBackend(_Backend):
         trips; the fstat's ``st_nlink`` doubles as the detector for a peer's
         rotation (our append went to the unlinked ledger: re-append to the
         fresh one)."""
+        if not self.watch_ledger:
+            return
         from .kv_store import encode_frame  # late: kv_store imports us
 
         frame = encode_frame([(op, k, None) for k in keys])
@@ -988,6 +1011,11 @@ class ObjectStore(_Endpoint):
                 "root": self.backend.root,
                 "fsync": self.backend.fsync,
             }
+        # Other cross-process backends (the net backend) carry their own
+        # endpoint spec — the address is the endpoint.
+        spec_fn = getattr(self.backend, "endpoint_spec", None)
+        if spec_fn is not None:
+            return spec_fn()
         return None
 
     # ---- key watch (notification plane) --------------------------------
@@ -1022,7 +1050,7 @@ class ObjectStore(_Endpoint):
         self.ledger.record(
             OpRecord(worker, "put", key, len(blob), self.profile.write_time(len(blob)), time.monotonic())
         )
-        if won:
+        if won and not self.backend.echoes_puts:
             self.notify_put(key)
         return won
 
@@ -1045,7 +1073,7 @@ class ObjectStore(_Endpoint):
         self.ledger.record(
             OpRecord(worker, "mput", f"[{len(items)} keys]", total, vt, time.monotonic())
         )
-        if won:
+        if won and not self.backend.echoes_puts:
             # All batch keys are visible now (if_absent losers existed
             # already), so the single coalesced wakeup can name them all.
             self.backend.notify_put(list(items.keys()))

@@ -1,0 +1,339 @@
+"""Cross-backend conformance: one behavioural contract, three substrates.
+
+Every test here runs against the in-memory stores, the file substrate
+(``FileKVStore``/``FileBackend``), and the wire tier (``repro-kvd`` +
+``NetKVStore``/``NetBackend``) — the point of the matrix is that PR 8's
+socket server is *indistinguishable* from the in-process stores at the API
+level, so the scheduler/executor stack runs unchanged over any of them:
+
+  * batched verbs (``mget``/``mset``/``eval_many``/``rpush_many``) keep the
+    PR-5 charging model: one charged op per shard touched, never one per
+    key — and on the wire tier one *frame* per batched verb;
+  * a batch bumps each touched shard's sequence exactly ONCE (a widening
+    batch cannot multiply watcher wakeups);
+  * ``eval`` runs server-side but its captured-state side effects land on
+    the caller via the replay contract, and the ``DELETE`` sentinel drops
+    the key from any backend;
+  * first-writer-wins everywhere it is promised: ``setnx`` on the KV,
+    ``if_absent`` puts on the object tier;
+  * destructive reads (``lpop_n``/``blpop``) hand each element to exactly
+    one consumer, across handles and across the wire;
+  * waits are event-driven: a cross-handle publisher wakes a blocked
+    ``wait_keys``/``blpop`` with zero fallback poll ticks.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.storage import (
+    DELETE,
+    FileBackend,
+    FileKVStore,
+    KVStore,
+    NetBackend,
+    NetKVStore,
+    ObjectStore,
+    kv_pure,
+)
+from repro.storage.net_server import KVDServer
+
+BACKENDS = ("memory", "file", "net")
+
+
+class _Fixture:
+    """One backend instantiation: a KV handle, an ObjectStore, and
+    second-handle factories that model a *different process* sharing the
+    substrate (a second client for net, a second root-handle for file)."""
+
+    def __init__(self, kind, tmp_path):
+        self.kind = kind
+        self._extra = []
+        if kind == "memory":
+            self.kv = KVStore(num_shards=4)
+            self.store = ObjectStore()
+            self.server = None
+        elif kind == "file":
+            self.kv = FileKVStore(str(tmp_path / "kv"), num_shards=4, fsync="never")
+            self.store = ObjectStore(
+                backend=FileBackend(str(tmp_path / "obj"), fsync="never")
+            )
+            self.server = None
+        else:
+            self.server = KVDServer(
+                str(tmp_path / "kvd"),
+                f"unix:{tmp_path / 'kvd.sock'}",
+                num_shards=4,
+                fsync="never",
+            ).start()
+            self.kv = NetKVStore(self.server.address)
+            self.store = ObjectStore(backend=NetBackend(self.server.address))
+
+    def seq_probe(self, key):
+        """The authoritative wake-token sequence for ``key``'s shard.  For
+        the wire tier that lives on the SERVER (clients mirror it only via
+        pushes while watching), so probe the server's store directly."""
+        if self.kind == "net":
+            return self.server.kv.shard_seq(key)
+        return self.kv.shard_seq(key)
+
+    def second_kv(self):
+        """A handle another process would hold."""
+        if self.kind == "memory":
+            return self.kv  # in-memory state IS the shared substrate
+        if self.kind == "file":
+            kv = FileKVStore(self.kv.root, num_shards=4, fsync="never")
+        else:
+            kv = NetKVStore(self.server.address)
+        self._extra.append(kv)
+        return kv
+
+    def second_store(self):
+        if self.kind == "memory":
+            return self.store
+        if self.kind == "file":
+            st = ObjectStore(backend=FileBackend(self.store.backend.root, fsync="never"))
+        else:
+            st = ObjectStore(backend=NetBackend(self.server.address))
+        self._extra.append(st)
+        return st
+
+    def close(self):
+        for h in self._extra:
+            close = getattr(h, "close", None) or getattr(h.backend, "close", None)
+            close()
+        for h in (self.kv, self.store.backend, self.server):
+            close = getattr(h, "close", None)
+            if close:
+                close()
+
+
+@pytest.fixture(params=BACKENDS)
+def bk(request, tmp_path):
+    fx = _Fixture(request.param, tmp_path)
+    yield fx
+    fx.close()
+
+
+# ---------------------------------------------------------------------------
+# KV plane: roundtrips, batching, charging
+# ---------------------------------------------------------------------------
+
+def test_kv_roundtrip_and_scan(bk):
+    kv = bk.kv
+    kv.set("a/1", {"x": 1})
+    kv.set("a/2", [1, 2, 3])
+    kv.set("b/1", "other")
+    assert kv.get("a/1") == {"x": 1}
+    assert kv.get("missing") is None
+    assert kv.get("missing", default="d") == "d"
+    assert sorted(kv.scan("a/")) == ["a/1", "a/2"]
+    assert kv.exists("a/2") and not kv.exists("a/3")
+    kv.delete("a/2")
+    assert not kv.exists("a/2")
+
+
+def test_kv_mget_order_defaults_and_charging(bk):
+    kv = bk.kv
+    kv.set("a", 1)
+    kv.set("b", 2)
+    before = kv.total_ops()
+    out = kv.mget(["b", "missing", "a"], default="absent")
+    assert out == [2, "absent", 1]
+    # THE batched-op charging formula, identical across substrates: one
+    # charged op per shard touched, never one per key.
+    shards = len({kv.shard_of(k) for k in ["b", "missing", "a"]})
+    assert kv.total_ops() - before == shards <= 3
+
+
+def test_kv_mset_batch_charging_and_single_wakeup_per_shard(bk):
+    kv = bk.kv
+    keys = [f"batch/{i}" for i in range(12)]
+    seqs = {k: bk.seq_probe(k) for k in keys}
+    before = kv.total_ops()
+    kv.mset({k: i for i, k in enumerate(keys)})
+    shards = {kv.shard_of(k) for k in keys}
+    assert kv.total_ops() - before == len(shards)
+    # each touched shard's sequence advanced exactly once for the batch —
+    # a widening batch cannot multiply watcher wakeups
+    bumps = {}
+    for k in keys:
+        bumps.setdefault(kv.shard_of(k), set()).add(bk.seq_probe(k) - seqs[k])
+    for sidx, deltas in bumps.items():
+        assert deltas == {1}, f"shard {sidx} bumped {deltas} times"
+
+
+def test_kv_setnx_first_writer_wins(bk):
+    kv = bk.kv
+    assert kv.setnx("claim", "w1") is True
+    assert kv.setnx("claim", "w2") is False
+    assert kv.get("claim") == "w1"
+
+
+def test_kv_incr_and_mdel(bk):
+    kv = bk.kv
+    assert kv.incr("n", 5) == 5
+    assert kv.incr("n", -2) == 3
+    kv.set("d1", 1)
+    kv.set("d2", 2)
+    assert kv.mdel(["d1", "d2", "nope"]) >= 0
+    assert not kv.exists("d1") and not kv.exists("d2")
+
+
+# ---------------------------------------------------------------------------
+# eval: server-side scripting, replay side effects, DELETE sentinel
+# ---------------------------------------------------------------------------
+
+@kv_pure
+def _bump(cur):
+    return int(cur or 0) + 10
+
+
+@kv_pure
+def _capture_then_delete(out, cur):
+    out["seen"] = cur
+    return DELETE
+
+
+def test_eval_applies_and_returns_new_value(bk):
+    assert bk.kv.eval("counter", _bump) == 10
+    assert bk.kv.eval("counter", _bump) == 20
+    assert bk.kv.get("counter") == 20
+
+
+def test_eval_delete_sentinel_drops_key_and_side_effects_replay(bk):
+    """The eval replay contract: the function runs inside the store's shard
+    transaction, but mutations to captured state (the ``out`` dict riding a
+    partial) land on the CALLER — identically in-process and over the
+    wire."""
+    from functools import partial
+
+    kv = bk.kv
+    kv.set("rec", {"epoch": 3})
+    out = {}
+    kv.eval("rec", partial(_capture_then_delete, out))
+    assert out["seen"] == {"epoch": 3}
+    assert not kv.exists("rec")
+
+
+def test_eval_many_per_shard_charging_and_delete(bk):
+    from functools import partial
+
+    kv = bk.kv
+    keys = [f"em/{i}" for i in range(8)]
+    for k in keys:
+        kv.set(k, 1)
+    before = kv.total_ops()
+    res = kv.eval_many({k: _bump for k in keys})
+    assert kv.total_ops() - before == len({kv.shard_of(k) for k in keys})
+    assert all(res[k] == 11 for k in keys)
+    outs = {k: {} for k in keys}
+    kv.eval_many({k: partial(_capture_then_delete, outs[k]) for k in keys})
+    assert all(outs[k]["seen"] == 11 for k in keys)
+    assert not any(kv.exists(k) for k in keys)
+
+
+# ---------------------------------------------------------------------------
+# lists: exactly-once destructive reads, cross-handle wakes
+# ---------------------------------------------------------------------------
+
+def test_lpop_n_hands_out_each_element_once(bk):
+    kv = bk.kv
+    kv.rpush("q", *range(10))
+    a = kv.lpop_n("q", 4)
+    b = kv.lpop_n("q", 100)
+    assert a == [0, 1, 2, 3]
+    assert b == [4, 5, 6, 7, 8, 9]
+    assert kv.lpop_n("q", 1) == []
+    assert kv.llen("q") == 0
+
+
+def test_rpush_lrange_llen(bk):
+    kv = bk.kv
+    kv.rpush("lst", "a")
+    kv.rpush("lst", "b", "c")
+    assert kv.llen("lst") == 3
+    assert kv.lrange("lst") == ["a", "b", "c"]
+
+
+def test_rpush_nowait_lands(bk):
+    kv = bk.kv
+    kv.rpush_nowait("durs", 0.5)
+    kv.rpush_nowait("durs", 0.7)
+    # advisory, but ordered behind this handle's own next call
+    deadline = time.monotonic() + 5.0
+    while kv.llen("durs") < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert kv.lrange("durs") == [0.5, 0.7]
+
+
+def test_blpop_cross_handle_wake_is_event_driven(bk):
+    """A consumer blocked in one handle is woken by a producer in ANOTHER
+    handle (another process for file, another socket for net) — promptly,
+    with no fallback polling."""
+    consumer_kv = bk.kv
+    producer_kv = bk.second_kv()
+    got = []
+
+    def consume():
+        got.append(consumer_kv.blpop("jobs", timeout_s=10.0))
+
+    t = threading.Thread(target=consume)
+    t.start()
+    time.sleep(0.25)  # let the consumer register its watch and block
+    t0 = time.monotonic()
+    producer_kv.rpush("jobs", "work")
+    t.join(timeout=10.0)
+    assert got == ["work"]
+    assert time.monotonic() - t0 < 2.0
+
+
+# ---------------------------------------------------------------------------
+# object plane
+# ---------------------------------------------------------------------------
+
+def test_object_roundtrip_list_and_missing(bk):
+    st = bk.store
+    st.put("res/a", {"v": 1})
+    st.put("res/b", [1, 2])
+    assert st.get("res/a") == {"v": 1}
+    got = st.get_many(["res/a", "res/b", "res/nope"])
+    assert got == {"res/a": {"v": 1}, "res/b": [1, 2]}
+    with pytest.raises(KeyError):
+        st.get_many(["res/nope"], missing="error")
+    assert st.exists("res/a") and not st.exists("res/zzz")
+    assert st.exists_many(["res/a", "res/zzz"]) == {"res/a"}
+
+
+def test_object_if_absent_first_writer_wins(bk):
+    st = bk.store
+    assert st.put("winner", "first", if_absent=True) is True
+    assert st.put("winner", "second", if_absent=True) is False
+    assert st.get("winner") == "first"
+    n = st.put_many({"winner": "third", "fresh": 1}, if_absent=True)
+    assert n == 1
+    assert st.get("winner") == "first"
+    assert st.get("fresh") == 1
+
+
+def test_object_wait_keys_cross_handle_zero_fallback_ticks(bk):
+    """``wait_keys`` blocked in one handle returns when ANOTHER handle
+    publishes — via the backend's own watch/push plane, with zero fallback
+    poll ticks (the PR-4/PR-8 no-polling contract)."""
+    waiter = bk.store
+    publisher = bk.second_store()
+    done = []
+
+    def wait():
+        waiter.wait_keys(["out/x", "out/y"], timeout_s=10.0)
+        done.append(True)
+
+    t = threading.Thread(target=wait)
+    t.start()
+    time.sleep(0.25)
+    publisher.put("out/x", 1)
+    publisher.put("out/y", 2)
+    t.join(timeout=10.0)
+    assert done == [True]
+    assert waiter.fallback_tick_waits == 0

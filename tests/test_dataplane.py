@@ -162,6 +162,75 @@ def test_wait_key_snapshot_cannot_miss_write():
     assert new_seq > seq
 
 
+def _same_shard_sibling(kv, key):
+    """A different key on ``key``'s shard — the noisy neighbour."""
+    i = 0
+    while True:
+        other = f"noise/{i}"
+        if other != key and kv.shard_of(other) == kv.shard_of(key):
+            return other
+        i += 1
+
+
+def test_keyed_wakes_absorb_foreign_key_writes():
+    """Wakes are *keyed*: a waiter on key B sleeps through N writes to key
+    A sharing B's shard — each shard wake whose touch named only A is
+    absorbed inside ``wait_key`` (counted in ``foreign_wake_skips``), not
+    bounced to the caller as a futile predicate re-check."""
+    kv = KVStore(num_shards=2)
+    target = "watched/b"
+    noisy = _same_shard_sibling(kv, target)
+    seq = kv.shard_seq(target)
+    woke = []
+
+    def waiter():
+        woke.append(kv.wait_key(target, seq, timeout_s=1.0))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    n = 25
+    for i in range(n):
+        kv.set(noisy, i)
+        time.sleep(0.002)  # let the waiter absorb each wake individually
+    time.sleep(0.1)
+    assert not woke, "foreign-key writes must not complete the wait"
+    # every absorption is a wake the caller was spared (rapid writes may
+    # coalesce into one wake, so >= 1, not == n)
+    assert kv.foreign_wake_skips() >= 1
+    t0 = time.monotonic()
+    kv.set(target, "now")
+    t.join(timeout=5.0)
+    assert woke and woke[0] > seq
+    assert time.monotonic() - t0 < 0.2  # the keyed wake itself is prompt
+
+
+def test_keyed_wakes_blpop_ignores_sibling_queue_churn():
+    """Same pin through ``blpop``: churn on a sibling queue in the same
+    shard neither wakes nor starves a consumer blocked on its own queue."""
+    kv = KVStore(num_shards=2)
+    target = "q/mine"
+    noisy = _same_shard_sibling(kv, target)
+    got = []
+
+    def consumer():
+        got.append(kv.blpop(target, timeout_s=5.0))
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)
+    for i in range(20):
+        kv.rpush(noisy, i)
+        time.sleep(0.002)
+    t0 = time.monotonic()
+    kv.rpush(target, "payload")
+    t.join(timeout=5.0)
+    assert got == ["payload"]
+    assert time.monotonic() - t0 < 0.2
+    # the consumer took exactly its own element; the sibling queue is whole
+    assert kv.lrange(noisy) == list(range(20))
+
+
 def test_blpop_timeout_returns_none():
     kv = KVStore()
     t0 = time.monotonic()
