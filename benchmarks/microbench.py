@@ -35,6 +35,11 @@ notify/multi-get traffic dominates.  Reported rows:
     map-stage request-count drop (looped ÷ batched; the acceptance floor
     is ≥ 2×), ``stage_requests``/``legacy_stage_requests`` cover the whole
     write → read → GC shuffle lifecycle;
+  * ``storage/net_bandwidth_{size}_{mode}_d{N}`` (``--backend net``) —
+    object-plane MB/s against live ``repro-kvd`` subprocesses, swept over
+    payload size (64 KiB/1 MiB/8 MiB), frame mode (``zerocopy`` buffer
+    frames vs ``pickled``), and shard-map width (1 vs 4 daemons; the d4
+    rows carry ``speedup_vs_d1`` — the multi-daemon scale-out number);
   * ``storage/file_substrate_{engine}_fsync-{policy}`` (``--backend
     file``) — the PR-5 log-structured engine vs. the PR-4 snapshot engine
     under the durability-policy sweep, over a realistic resident state.
@@ -414,6 +419,119 @@ def map_throughput_net(rep, quick: bool = False) -> None:
         _throughput(rep, num_workers, n_tasks, backend="net")
 
 
+def _spawn_kvd(root: str, port: int):
+    """A real ``repro-kvd`` subprocess (the deployment entry point), so
+    multi-daemon rows measure genuine process parallelism, not threads
+    sharing one interpreter."""
+    import subprocess
+    import sys
+
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.storage.net_server",
+            "--root", root, "--port", str(port),
+            "--num-shards", "2", "--fsync", "never",
+        ],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+    )
+    line = proc.stdout.readline().strip()
+    assert line.startswith("LISTENING"), f"kvd failed to start: {line!r}"
+    return proc
+
+
+def net_bandwidth(rep, quick: bool = False) -> None:
+    """Wire-tier bandwidth over the object plane: batched ``put_many_bytes``
+    + ``get_many_bytes`` of fixed-size blobs against live ``repro-kvd``
+    subprocesses, swept over payload size (64 KiB / 1 MiB / 8 MiB), frame
+    mode (``zerocopy`` — raw buffer frames, vs ``pickled`` —
+    ``zero_copy=False``, every byte through pickle), and shard-map width
+    (1 vs 4 daemons).  The zerocopy÷pickled gap prices what the PR-9
+    buffer frames buy on each payload size; the d4 rows carry
+    ``speedup_vs_d1`` — the scatter (``start_call`` to every daemon, then
+    gather) against one daemon, which is the multi-daemon scale-out
+    acceptance number on a multi-core host (daemon processing — CRC,
+    decode, disk — overlaps across processes; on a single-core box the
+    daemons share the one CPU and the ratio pins near 1, so the scale-out
+    claim is read from multi-core runs, never gated blind in CI).  The CI
+    floor (``--floor-net-mbps``) gates the best
+    zerocopy aggregate MB/s: a copy sneaking back into the large-payload
+    path collapses it."""
+    import socket
+    import tempfile
+
+    from repro.storage import NetBackend, ObjectStore
+
+    # Object counts stay >= 2x the daemon count so the 4-daemon scatter has
+    # keys to spread (2 objects over 4 daemons caps the speedup at 2x by
+    # construction, daemon count notwithstanding).
+    sizes = [("64KiB", 64 * 1024, 32), ("1MiB", 1 << 20, 16), ("8MiB", 8 << 20, 8)]
+    if quick:
+        sizes = [("64KiB", 64 * 1024, 16), ("1MiB", 1 << 20, 8), ("8MiB", 8 << 20, 4)]
+    base_mbps = {}  # (label, mode) -> d1 aggregate MB/s
+    for n_daemons in (1, 4):
+        with tempfile.TemporaryDirectory() as workdir:
+            procs, addrs = [], []
+            for d in range(n_daemons):
+                s = socket.socket()
+                s.bind(("127.0.0.1", 0))
+                port = s.getsockname()[1]
+                s.close()
+                procs.append(_spawn_kvd(os.path.join(workdir, f"d{d}"), port))
+                addrs.append(f"127.0.0.1:{port}")
+            shard_map = ",".join(addrs)
+            try:
+                for mode, zc in (("zerocopy", True), ("pickled", False)):
+                    backend = NetBackend(shard_map, zero_copy=zc)
+                    store = ObjectStore(backend=backend)
+                    try:
+                        for label, size, nkeys in sizes:
+                            blobs = {
+                                f"bw/{mode}/{label}/{i}": bytes(size)
+                                for i in range(nkeys)
+                            }
+                            store.put_bytes(f"bw/{mode}/{label}/warm", b"x")
+                            t0 = time.perf_counter()
+                            store.put_many_bytes(blobs, worker="bench")
+                            t_put = time.perf_counter() - t0
+                            t0 = time.perf_counter()
+                            out = store.get_many_bytes(list(blobs), worker="bench")
+                            t_get = time.perf_counter() - t0
+                            assert all(len(v) == size for v in out.values())
+                            mb = size * nkeys / 1e6
+                            agg = 2 * mb / (t_put + t_get)
+                            extra = {}
+                            if n_daemons == 1:
+                                base_mbps[(label, mode)] = agg
+                            else:
+                                extra["speedup_vs_d1"] = round(
+                                    agg / base_mbps[(label, mode)], 2
+                                )
+                            rep.row(
+                                f"storage/net_bandwidth_{label}_{mode}"
+                                f"_d{n_daemons}",
+                                (t_put + t_get) / (2 * nkeys) * 1e6,
+                                put_MBps=round(mb / t_put, 1),
+                                get_MBps=round(mb / t_get, 1),
+                                agg_MBps=round(agg, 1),
+                                payload_bytes=size,
+                                n_objects=nkeys,
+                                daemons=n_daemons,
+                                mode=mode,
+                                **extra,
+                            )
+                    finally:
+                        backend.close()
+            finally:
+                for p in procs:
+                    p.terminate()
+                    p.wait()
+
+
 def _file_substrate_ops(kv, n_ops: int) -> None:
     """A representative KV op mix: batched staging (mset), queue churn
     (rpush/lpop), counters, and point reads — the shapes the runtime's
@@ -520,7 +638,7 @@ def multi_driver(rep, quick: bool = False) -> None:
 
 ALL = [map_throughput, job_completion, speculation_sweep, multi_driver, shuffle_requests]
 FILE_BACKEND_BENCHES = [map_throughput_file, file_substrate]
-NET_BACKEND_BENCHES = [map_throughput_net]
+NET_BACKEND_BENCHES = [map_throughput_net, net_bandwidth]
 
 
 def main(argv=None) -> int:
@@ -546,6 +664,14 @@ def main(argv=None) -> int:
         type=float,
         default=None,
         help="fail (exit 1) if 4-worker map throughput is below this",
+    )
+    ap.add_argument(
+        "--floor-net-mbps",
+        type=float,
+        default=None,
+        help="fail (exit 1) if the best zero-copy net_bandwidth aggregate "
+        "MB/s is below this (a copy creeping back into the large-payload "
+        "wire path collapses it)",
     )
     ap.add_argument(
         "--floor-shuffle-ratio",
@@ -583,6 +709,21 @@ def main(argv=None) -> int:
             )
             return 1
         print(f"throughput floor ok: {max(tput)} >= {args.floor_tasks_per_s} tasks/s")
+
+    if args.floor_net_mbps is not None:
+        mbps = [
+            r["agg_MBps"]
+            for r in rep.rows
+            if r["name"].startswith("storage/net_bandwidth_")
+            and r["mode"] == "zerocopy"
+        ]
+        if not mbps or max(mbps) < args.floor_net_mbps:
+            print(
+                f"FAIL: zero-copy net bandwidth {max(mbps or [0.0])} MB/s "
+                f"below floor {args.floor_net_mbps}"
+            )
+            return 1
+        print(f"net bandwidth floor ok: {max(mbps)} >= {args.floor_net_mbps} MB/s")
 
     if args.floor_shuffle_ratio is not None:
         ratios = [

@@ -23,6 +23,22 @@ so ``WrenExecutor`` cannot tell the difference:
 'task-0'
 >>> a.close(); b.close(); srv.close()
 
+A **shard map** scales the service horizontally (PR 9): N daemons, one
+ordered map every client shares — map order *is* the topology (it fixes
+the key → daemon hash ring and the global shard numbering).  Keys hash
+across the daemons, batched verbs scatter to every involved daemon in
+parallel, and one daemon's outage degrades only its own shards:
+
+>>> srv_a = KVDServer(tmp + "/a", f"unix:{tmp}/a.sock", fsync="never").start()
+>>> srv_b = KVDServer(tmp + "/b", f"unix:{tmp}/b.sock", fsync="never").start()
+>>> kv = NetKVStore([srv_a.address, srv_b.address])  # ORDER IS THE TOPOLOGY
+>>> kv.mset({f"k/{i}": i for i in range(64)})        # one scatter, both daemons
+>>> sorted({kv._daemon_of(f"k/{i}") for i in range(64)})  # both really own keys
+[0, 1]
+>>> kv.mget(["k/3", "k/33"])
+[3, 33]
+>>> kv.close(); srv_a.close(); srv_b.close()
+
 Below, the daemon runs as a real subprocess (the CLI a deployment uses),
 two drivers dial in over TCP and cooperate on one mapreduce, and then the
 server is SIGKILLed mid-map and restarted: clients reconnect, re-register

@@ -8,7 +8,14 @@ nothing enforced until now:
     ``set``/``delete`` — zombies must lose every race (PR 2/4);
   * every fan-out goes through the batched verbs (``mget``/``mset``/
     ``eval_many``/``put_many``/``get_many``/``exists_many``) — request
-    count, not bandwidth, is the bottleneck the paper measures (PR 3);
+    count, not bandwidth, is the bottleneck the paper measures (PR 3).
+    PR 9's shard-map client surface is held to the same discipline: a
+    constant ``kv.``/``ob.`` op through the raw wire verbs
+    (``.call``/``.cast``/``.call_rid``) in a loop is the same N-round-trip
+    mistake, and a fenced op name (``kv.set`` on ``sched/``) through the
+    wire verb is the same fence violation — only the pipelined
+    ``start_call``/``finish_call`` scatter and per-key ``watch.*``
+    registration are sanctioned;
   * no blocking call (sleep, wait, KV/store round-trip, file I/O) runs
     while a lock is held — the shard condition-wait idiom is the one
     sanctioned exception because ``Condition.wait`` releases its lock;
@@ -111,6 +118,17 @@ _BATCH_SUGGEST = {
     "get_bytes": "get_many_bytes",
     "publish_result": "put_many(..., if_absent=True)",
 }
+
+# The raw wire surface of the repro-kvd client (net_kv).  A constant
+# "kv."/"ob." op through .call/.cast/.call_rid is the same round-trip the
+# kv/store verbs wrap, so BATCH001 and FENCE001 see through it.
+# `start_call`/`finish_call` are the sanctioned scatter half of a
+# shard-map fan-out (N daemons in flight at once, not N serialized
+# round-trips) and are never flagged; `watch.*` registration is per-key
+# by protocol (refcounted, one op per wait session).
+_WIRE_VERBS = {"call", "cast", "call_rid"}
+_WIRE_PLANES = ("kv.", "ob.")
+_WIRE_FENCED_OPS = {"kv.set", "kv.mset", "kv.delete", "kv.mdel"}
 
 # Every KV/store method that is a storage round-trip (LOCK001).
 _ROUNDTRIP_METHODS = {
@@ -418,10 +436,21 @@ class _FileLinter(ast.NodeVisitor):
 
     # FENCE001 ----------------------------------------------------------
     def _check_fence(self, node: ast.Call, method: str, kind: Optional[str]) -> None:
-        if kind != "kv" or method not in ("set", "delete", "mset", "mdel"):
+        verb: Optional[str] = None
+        key_arg: Optional[ast.AST] = None
+        if kind == "kv" and method in ("set", "delete", "mset", "mdel"):
+            verb = f"kv.{method}"
+            key_arg = node.args[0] if node.args else None
+        elif method in ("call", "cast"):
+            # The same write reaching the daemon through the raw wire verb
+            # bypasses nothing: sched/ stays fenced on every surface.
+            op = self._resolve_prefix(node.args[0] if node.args else None)
+            if op in _WIRE_FENCED_OPS:
+                verb = f'{op} (via .{method})'
+                key_arg = node.args[1] if len(node.args) >= 2 else None
+        if verb is None:
             return
-        arg = node.args[0] if node.args else None
-        prefixes = self._key_prefixes(arg)
+        prefixes = self._key_prefixes(key_arg)
         if not any(p.startswith(_SCHED_PREFIX) for p in prefixes):
             return
         qual = self._qualname()
@@ -432,7 +461,7 @@ class _FileLinter(ast.NodeVisitor):
             self._report(
                 "FENCE001",
                 node,
-                f"bare kv.{method} on the job-manifest keyspace "
+                f"bare {verb} on the job-manifest keyspace "
                 f"(prefix {prefixes[0]!r}) — manifest/stage/barrier records "
                 "move only through jobs.commit_records (first-writer-wins "
                 "eval_many) and the driver lease only through term-compared "
@@ -443,13 +472,30 @@ class _FileLinter(ast.NodeVisitor):
         self._report(
             "FENCE001",
             node,
-            f"bare kv.{method} on the fenced 'sched/' keyspace "
+            f"bare {verb} on the fenced 'sched/' keyspace "
             f"(prefix {prefixes[0]!r}) — {RULES['FENCE001']}. Fix: {FIXITS['FENCE001']}",
         )
 
     # BATCH001 ----------------------------------------------------------
     def _check_batch(self, node: ast.Call, method: str, kind: Optional[str]) -> None:
         if self.loop_depth == 0:
+            return
+        if method in _WIRE_VERBS:
+            # One blocking .call per iteration serializes the round-trips
+            # the shard map exists to overlap.  watch.* is per-key by
+            # protocol; start_call/finish_call (not in _WIRE_VERBS) are
+            # the sanctioned pipelined scatter.
+            op = self._resolve_prefix(node.args[0] if node.args else None)
+            if op is None or not op.startswith(_WIRE_PLANES):
+                return
+            self._report(
+                "BATCH001",
+                node,
+                f"raw wire .{method}({op!r}) inside a loop — "
+                f"{RULES['BATCH001']}. Fix: pipeline the scatter with "
+                "start_call/finish_call across daemons, or use the "
+                "batched op",
+            )
             return
         if kind == "kv" and method in _KV_PERKEY:
             pass

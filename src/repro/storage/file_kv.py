@@ -37,6 +37,21 @@ op; this one pays O(record):
     log (and anything a live peer appends to it afterwards) keeps reading
     correctly, and the stale snapshot is overwritten by the next
     successful compaction;
+  * **off-thread compaction (PR 9)** — the snapshot rewrite is O(shard
+    size), so running it inline would stall the committing transaction
+    (and, behind ``repro-kvd``, every client of that shard).  With
+    ``compaction="thread"`` (the default) a commit that crosses the
+    threshold only *flags* the shard; a per-store compactor thread then
+    runs the rewrite in two phases.  Phase A holds **no locks**: it reads
+    the log file, replays it over its generation's snapshot, and lands the
+    ``(G+1, state)`` pickle in a private tmp file.  Phase B takes the
+    normal shard transaction (thread lock + flock) and re-checks the
+    generation fence — if a peer compacted meanwhile the plan is
+    discarded — then renames the snapshot into place and installs a fresh
+    G+1 log carrying the frames committed *during* phase A.  Commit-path
+    cost is one flag write; the crash windows are the same two renames as
+    before.  ``compaction="inline"`` keeps the PR-5 behavior for
+    deterministic tests;
   * **crash safety at the record level** — a writer killed mid-append
     leaves a torn tail; length/CRC framing detects it, replay stops at the
     committed prefix, and the next writer truncates the garbage before
@@ -179,6 +194,7 @@ class _LogShard:
         self._snap_bytes = 0
         self._pending_syncs = 0
         self.bytes_written = 0  # real bytes this process wrote to disk (bench metric)
+        self.compact_wanted = False  # set by commit, consumed by the compactor
 
     # The log's stat signature is the cross-process write sequence.
     @property
@@ -360,7 +376,10 @@ class _LogShard:
         if log_bytes >= max(
             self._compact_min_bytes, self._compact_ratio * self._snap_bytes
         ):
-            self._compact(state)
+            # Only flag: the snapshot rewrite is O(shard size) and must not
+            # run inside the commit path — the store decides whether to run
+            # it inline (tests) or hand it to the compactor thread.
+            self.compact_wanted = True
 
     def sync(self) -> None:
         if self._fd is not None and self._pending_syncs:
@@ -394,11 +413,115 @@ class _LogShard:
         old_gen = self._gen
         new_gen = self._publish_snapshot(state)
         self._write_fresh_log(new_gen)
+        self.compact_wanted = False
         if old_gen:
             try:
                 os.unlink(self._snap_path(old_gen))
             except OSError:
                 pass
+
+    # ---- two-phase off-thread compaction --------------------------------
+    def _peek_snapshot(self, generation: int) -> Optional[Dict[str, Any]]:
+        """Read-only :meth:`_read_snapshot`: no engine bookkeeping is
+        touched, corruption returns ``None`` (abort the plan) instead of
+        raising — the compactor runs without locks and must never poison
+        the engine's own state."""
+        if generation == 0:
+            return {}
+        try:
+            with open(self._snap_path(generation), "rb") as f:
+                blob = f.read()
+        except FileNotFoundError:
+            return {}
+        except OSError:
+            return None
+        try:
+            gen, state = pickle.loads(blob)
+        except Exception:
+            return None
+        if int(gen) != generation:
+            return None
+        return dict(state)
+
+    def plan_compaction(self) -> Optional[tuple]:
+        """Phase A — runs on the compactor thread with NO locks held.  Reads
+        the log file as any crash-recovery reader would (header names the
+        snapshot, replay whole frames, stop at a torn tail), pickles the
+        folded state, and lands it fsynced in a *private* tmp file.
+        Concurrent commits only append, so the replayed prefix is a
+        consistent point-in-time state; anything committed after it rides
+        into the next generation's log as the tail (phase B).  Returns the
+        plan ``(gen, end_offset, tmp_path, blob_len)`` or ``None`` when
+        there is nothing to do / a peer compacted first."""
+        gen = self._gen
+        try:
+            with open(self.log_path, "rb") as f:
+                buf = f.read()
+        except OSError:
+            return None
+        if decode_log_header(buf) != gen:
+            return None  # a peer swapped the log since we were flagged
+        state = self._peek_snapshot(gen)
+        if state is None:
+            return None
+        end = LOG_HEADER_SIZE
+        for records, end in iter_frames(buf, LOG_HEADER_SIZE):
+            for rec in records:
+                apply_record(state, rec)
+        if end <= LOG_HEADER_SIZE:
+            return None  # empty log: nothing to fold in
+        blob = pickle.dumps((gen + 1, state), protocol=pickle.HIGHEST_PROTOCOL)
+        tmp = f"{self.snap_base}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+            f.flush()
+            os.fsync(f.fileno())
+        return (gen, end, tmp, len(blob))
+
+    def finish_compaction(self, plan: tuple) -> bool:
+        """Phase B — must hold the shard transaction (thread lock + flock,
+        state freshly loaded).  Re-checks the generation fence: if this
+        engine is no longer at the plan's generation (a peer compacted, the
+        log was replaced) the plan is stale and is discarded unapplied.
+        Otherwise the tmp snapshot renames into place and a fresh gen+1 log
+        is installed carrying the frames committed after the plan's replay
+        point — the same two atomic renames (and crash windows) as
+        :meth:`_compact`."""
+        gen, end, tmp, blob_len = plan
+        if self._gen != gen or end > self._valid_end:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            return False
+        new_gen = gen + 1
+        os.replace(tmp, self._snap_path(new_gen))
+        self._snap_bytes = blob_len
+        self.bytes_written += blob_len
+        # Frames committed while phase A ran carry over into the new log.
+        tail = b""
+        if self._valid_end > end:
+            tail = os.pread(self._fd, self._valid_end - end, end)
+        ltmp = f"{self.log_path}.tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(ltmp, "wb") as f:
+            f.write(encode_log_header(new_gen))
+            if tail:
+                f.write(tail)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(ltmp, self.log_path)
+        self._open_fd()
+        self._gen = new_gen
+        self._valid_end = self._file_size = LOG_HEADER_SIZE + len(tail)
+        self.bytes_written += len(tail)
+        self._pending_syncs = 0
+        self.compact_wanted = False
+        if gen:
+            try:
+                os.unlink(self._snap_path(gen))
+            except OSError:
+                pass
+        return True
 
     def invalidate(self) -> None:
         """Drop the materialized snapshot (a transaction body raised after
@@ -504,6 +627,7 @@ class FileKVStore(KVStore):
         fsync_batch_n: int = 64,
         compact_min_bytes: int = 64 * 1024,
         compact_ratio: float = 4.0,
+        compaction: str = "thread",
         exclusive: bool = False,
         charged: bool = True,
     ) -> None:
@@ -513,6 +637,8 @@ class FileKVStore(KVStore):
             fsync = "commit"  # FileBackend's name for the same policy
         if fsync not in ("auto", "commit", "batch", "never"):
             raise ValueError(f"unknown fsync policy {fsync!r}")
+        if compaction not in ("thread", "inline"):
+            raise ValueError(f"compaction must be 'thread' or 'inline', got {compaction!r}")
         super().__init__(
             num_shards=num_shards, profile=profile, ledger=ledger, charged=charged
         )
@@ -549,6 +675,14 @@ class FileKVStore(KVStore):
         self._fd_guard = threading.Lock()
         self._watcher: Optional[_PollWatcher] = None
         self._watch_guard = threading.Lock()
+        # Off-thread compaction: flagged shards queue here; one lazy daemon
+        # thread per store drains the queue (see _LogShard.plan_compaction).
+        self.compaction = compaction
+        self._compact_pending: set = set()
+        self._compact_cond = threading.Condition()
+        self._compactor: Optional[threading.Thread] = None
+        self._compact_busy = False
+        self._closing = False
 
     def _endpoint_spec(self):
         # Cross-process pickling: a closure capturing this handle reconnects
@@ -637,6 +771,12 @@ class FileKVStore(KVStore):
                                 store._commit_mode(self._txn.records),
                             )
                             committed = True
+                            if getattr(eng, "compact_wanted", False):
+                                if store.compaction == "inline":
+                                    # Still under the flock: safe to rewrite.
+                                    eng._compact(self._txn.state)
+                                else:
+                                    store._request_compact(sidx)
                         except BaseException:
                             # The append failed (unpicklable value, ENOSPC,
                             # …): the materialized state was already mutated
@@ -676,6 +816,78 @@ class FileKVStore(KVStore):
                 self._watcher = _PollWatcher(paths, _on_change)
             return self._watcher
 
+    # ---- off-thread compaction ------------------------------------------
+    def _request_compact(self, sidx: int) -> None:
+        """Queue a shard for the compactor thread (idempotent: a shard is
+        queued at most once; requests while it runs re-queue it)."""
+        with self._compact_cond:
+            if self._closing:
+                return
+            self._compact_pending.add(sidx)
+            if self._compactor is None:
+                self._compactor = threading.Thread(
+                    target=self._compact_loop, name="filekv-compactor", daemon=True
+                )
+                self._compactor.start()
+            self._compact_cond.notify_all()
+
+    def _compact_loop(self) -> None:
+        while True:
+            with self._compact_cond:
+                while not self._compact_pending and not self._closing:
+                    self._compact_cond.wait()
+                if not self._compact_pending:  # closing and drained
+                    return
+                sidx = self._compact_pending.pop()
+                self._compact_busy = True
+            try:
+                self._compact_shard(sidx)
+            except Exception:
+                # A failed rewrite must never kill the compactor: the flag
+                # re-queues the shard at its next threshold-crossing commit.
+                self._engines[sidx].invalidate()
+            finally:
+                with self._compact_cond:
+                    self._compact_busy = False
+                    self._compact_cond.notify_all()
+
+    def _compact_shard(self, sidx: int) -> None:
+        eng = self._engines[sidx]
+        plan = eng.plan_compaction()  # phase A: no locks
+        if plan is None:
+            # Nothing to fold (or a peer got there first): drop the flag so
+            # sub-threshold commits stop re-queueing the shard.
+            eng.compact_wanted = False
+            return
+        with self._txn(sidx):  # phase B: under the normal shard transaction
+            eng.finish_compaction(plan)
+
+    def compact_now(self, timeout_s: float = 30.0) -> None:
+        """Drain the compactor: block until every queued request has run
+        (durability/test barrier — commits flag shards asynchronously, so a
+        size assertion needs this fence first)."""
+        for sidx, eng in enumerate(self._engines):
+            if getattr(eng, "compact_wanted", False):
+                self._request_compact(sidx)
+        deadline = time.monotonic() + timeout_s
+        with self._compact_cond:
+            while self._compact_pending or self._compact_busy:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError("compaction drain timed out")
+                self._compact_cond.wait(remaining)
+
+    def _stop_compactor(self) -> None:
+        with self._compact_cond:
+            self._closing = True
+            self._compact_cond.notify_all()
+            thread = self._compactor
+        if thread is not None:
+            thread.join(timeout=30.0)
+        with self._compact_cond:
+            self._compactor = None
+            self._closing = False  # a reused handle may compact again
+
     def disk_bytes_written(self) -> int:
         """Real bytes this handle wrote to disk (logs + snapshots, or
         whole-shard pickles for the snapshot engine).  The deterministic
@@ -700,7 +912,9 @@ class FileKVStore(KVStore):
                     fcntl.flock(fd, fcntl.LOCK_UN)
 
     def close(self) -> None:
-        """Stop the watch thread, flush lazy fsyncs, release fds (tests)."""
+        """Drain the compactor, stop the watch thread, flush lazy fsyncs,
+        release fds (tests)."""
+        self._stop_compactor()
         with self._watch_guard:
             if self._watcher is not None:
                 self._watcher.close()

@@ -180,6 +180,15 @@ def _sizeof(value: Any) -> int:
 
 _FRAME_HDR = struct.Struct("<II")  # (payload length, crc32(payload))
 
+# Wire-protocol buffer frames (PR 9): bit 31 of the length field marks a
+# frame whose payload is RAW BYTES, not a pickle — ndarray/blob payloads
+# travel out-of-band from the pickled verb header so neither side copies
+# them through the codec.  The bit is free: payload lengths are capped at
+# MAX_FRAME_LEN (1 << 30) everywhere a frame is decoded, so a legitimate
+# length never sets it.  Shard logs never use buffer frames; the flag
+# lives here only because the wire protocol shares this header struct.
+BUF_FLAG = 1 << 31
+
 # Log files open with a fixed header naming the *generation* — bumped by
 # every compaction, so a snapshot and the log it supersedes can never be
 # replayed together (see file_kv.py's compaction protocol).

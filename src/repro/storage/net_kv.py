@@ -18,20 +18,52 @@ Every message is one PR-5 frame: ``[u32 payload length][u32 crc32]``
 followed by a pickled payload (``_FRAME_HDR`` from :mod:`.kv_store` —
 the exact bytes the shard logs use).  Messages:
 
-==========================================  =======================================
-``("req",  rid, op, args, kwargs)``          client → server request
-``("res",  rid, value)``                     server → client response
-``("err",  rid, etype, msg)``                server → client op failure
-``("sub",  client_id, topics)``              client → server handshake/subscribe
-``("hello", info)``                          server → client handshake reply
-``("kv",   shard, srv_seq, keys|None)``      pushed KV watch event (keyed wake)
-``("obj",  srv_seq, keys|None)``             pushed object-store watch event
-==========================================  =======================================
+==================================================  =======================================
+``("req",  rid, op, args, kwargs)``                  client → server request
+``("res",  rid, value)``                             server → client response
+``("err",  rid, etype, msg)``                        server → client op failure
+``("sub",  client_id, topics[, opts])``              client → server handshake/subscribe
+``("hello", info)``                                  server → client handshake reply
+``("kv",   shard, srv_seq, keys|None)``              pushed KV watch event (keyed wake)
+``("obj",  srv_seq, keys|None)``                     pushed object-store watch event
+==================================================  =======================================
 
 Requests are pipelined: any number may be in flight on one socket, each
 carrying a client-unique ``rid``; worker threads share one connection
 and block only on their own response.  Requests are cloudpickled (they
 carry ``eval`` closures); responses and events are plain pickles.
+
+Zero-copy buffer frames
+-----------------------
+Large bytes-like payloads (ndarray blobs, checkpoint shards, KV-cache
+blocks) never travel through the pickle codec.  A message whose args or
+result carry a bytes-like value of at least :data:`ZERO_COPY_MIN` is
+split: each large payload becomes a **buffer frame** — the same
+``[u32 length][u32 crc32]`` header with :data:`~.kv_store.BUF_FLAG`
+(bit 31) set on the length, followed by the raw bytes — sent *before*
+its control frame, whose pickle holds a tiny :class:`_WireBuf` index in
+the payload's place.  The sender gathers header + raw ``memoryview``
+segments with ``socket.sendmsg`` (no join, no copy); the receiver's
+decoder, on seeing a torn buffer frame, allocates the payload's final
+bytearray once and the pump ``recv_into``\\ s the socket straight into
+it.  ``bind_buffers`` splices the raw payloads back into the decoded
+message, so both ends hand the bytes over without ever copying them
+through pickle.  Bit 31 is unambiguous: real lengths are capped at
+``MAX_FRAME_LEN`` (1 << 30).
+
+Shard maps: multi-daemon scale-out
+----------------------------------
+:class:`NetKVStore` / :class:`NetBackend` accept a **shard map** — a
+comma-joined address string or list of addresses naming N ``repro-kvd``
+daemons.  Keys route to a daemon by a hash decorrelated from the
+server-side shard hash, and the client's global shard space is the
+concatenation of every daemon's shards (daemon d's shard s is global
+shard ``base[d] + s``), so the per-shard charging/watch machinery is
+unchanged.  Each daemon gets its own connection pair with independent
+reconnect/resync: one daemon's crash degrades only its shards — calls
+touching the survivors never block, and watch re-registration on the
+dead daemon resumes when it returns.  A single address is the N=1
+degenerate case and routes byte-for-byte like PR 8.
 
 Pushed watch events replace client-side polling entirely: the server
 tracks per-shard sequences and streams *keyed* wake frames —
@@ -88,13 +120,95 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import cloudpickle
 
-from .kv_store import DELETE, KVStore, _FRAME_HDR, _sizeof
+from .kv_store import BUF_FLAG, DELETE, KVStore, _FRAME_HDR, _sizeof
 from .object_store import Ledger, _Backend
 from .perf_model import REDIS_2017, StorageProfile
 
 # A frame's payload may carry a whole batched put — generous cap, but an
 # adversarial/corrupt header claiming more fails fast without allocating.
 MAX_FRAME_LEN = 1 << 30
+
+# Bytes-like payloads at least this large ride out-of-band buffer frames
+# instead of the pickle codec.  Below it, one small pickle is cheaper than
+# an extra frame header + scatter-gather bookkeeping.
+ZERO_COPY_MIN = 64 * 1024
+
+
+class _WireBuf:
+    """Placeholder left in a pickled message where a large bytes-like
+    payload was extracted into an out-of-band buffer frame; carries only
+    the payload's index in the frame's buffer list."""
+
+    __slots__ = ("idx",)
+
+    def __init__(self, idx: int) -> None:
+        self.idx = idx
+
+    def __reduce__(self):
+        return (_WireBuf, (self.idx,))
+
+
+def _as_byte_view(obj) -> memoryview:
+    view = obj if isinstance(obj, memoryview) else memoryview(obj)
+    if view.ndim != 1 or view.format != "B":
+        view = view.cast("B")
+    return view
+
+
+def extract_buffers(obj: Any, buffers: List[memoryview], min_bytes: int = ZERO_COPY_MIN) -> Any:
+    """Walk ``obj`` (tuples/lists/dicts of anything), pulling every
+    bytes-like leaf of at least ``min_bytes`` out into ``buffers`` and
+    leaving a :class:`_WireBuf` index in its place.  Small ``memoryview``
+    leaves are normalized to ``bytes`` (memoryviews don't pickle).  The
+    input structure is never mutated — new containers are built on the
+    extraction path."""
+    if isinstance(obj, (bytes, bytearray, memoryview)):
+        view = _as_byte_view(obj)
+        if view.nbytes >= min_bytes:
+            buffers.append(view)
+            return _WireBuf(len(buffers) - 1)
+        return bytes(obj) if isinstance(obj, memoryview) else obj
+    if isinstance(obj, tuple):
+        return tuple(extract_buffers(v, buffers, min_bytes) for v in obj)
+    if isinstance(obj, list):
+        return [extract_buffers(v, buffers, min_bytes) for v in obj]
+    if isinstance(obj, dict):
+        return {k: extract_buffers(v, buffers, min_bytes) for k, v in obj.items()}
+    return obj
+
+
+def bind_buffers(obj: Any, buffers: List[Any]) -> Any:
+    """Inverse of :func:`extract_buffers`: splice received raw buffer
+    payloads back over their :class:`_WireBuf` placeholders."""
+    if isinstance(obj, _WireBuf):
+        try:
+            return buffers[obj.idx]
+        except IndexError:
+            raise ProtocolError(
+                f"buffer placeholder #{obj.idx} without a matching buffer frame"
+            )
+    if isinstance(obj, tuple):
+        return tuple(bind_buffers(v, buffers) for v in obj)
+    if isinstance(obj, list):
+        return [bind_buffers(v, buffers) for v in obj]
+    if isinstance(obj, dict):
+        return {k: bind_buffers(v, buffers) for k, v in obj.items()}
+    return obj
+
+
+def _daemon_of(key: str, n: int) -> int:
+    """Which daemon of an N-entry shard map owns ``key``.  The hash is
+    salted to decorrelate it from the server-side ``crc32(key) % shards``
+    routing — the unsalted hash would alias with it and leave some server
+    shards permanently cold."""
+    if n == 1:
+        return 0
+    return zlib.crc32(b"d~" + key.encode()) % n
+
+
+def _addr_str(addr: Tuple[str, int]) -> str:
+    host, port = addr
+    return host if host.startswith("unix:") else f"{host}:{port}"
 
 
 class ProtocolError(Exception):
@@ -119,6 +233,47 @@ def encode_wire(obj: Any, *, pickler=pickle) -> bytes:
     return _FRAME_HDR.pack(len(payload), zlib.crc32(payload)) + payload
 
 
+def encode_wire_parts(
+    obj: Any, buffers: List[memoryview], *, pickler=pickle
+) -> List[Any]:
+    """One message + its extracted buffers → a list of byte segments for a
+    gathered send.  Buffer frames travel *before* the control frame, so the
+    receiver has every raw payload in hand when the pickled message that
+    references them decodes.  The segments are headers (bytes) interleaved
+    with the raw payload ``memoryview``\\ s — nothing large is joined or
+    copied here."""
+    parts: List[Any] = []
+    for view in buffers:
+        parts.append(_FRAME_HDR.pack(BUF_FLAG | view.nbytes, zlib.crc32(view)))
+        parts.append(view)
+    payload = pickler.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+    parts.append(_FRAME_HDR.pack(len(payload), zlib.crc32(payload)) + payload)
+    return parts
+
+
+# sendmsg gathers at most IOV_MAX segments per call (1024 on Linux); stay
+# far under it so one oversized batch can never fail outright.
+_SENDMSG_SEGS = 64
+
+
+def _sendall_parts(sock: socket.socket, parts: List[Any]) -> None:
+    """Gathered ``sendall``: pushes every segment with ``socket.sendmsg``,
+    advancing through partial sends, so large payload views go to the
+    kernel without ever being joined into one contiguous frame."""
+    segs = [_as_byte_view(p) for p in parts]
+    i = 0
+    while i < len(segs):
+        batch = segs[i : i + _SENDMSG_SEGS]
+        sent = sock.sendmsg(batch)
+        for s in batch:
+            if sent >= s.nbytes:
+                sent -= s.nbytes
+                i += 1
+            else:
+                segs[i] = s[sent:]
+                break
+
+
 class FrameDecoder:
     """Incremental frame decoder for a byte stream.
 
@@ -127,40 +282,122 @@ class FrameDecoder:
     state of a socket mid-read); corrupt input — CRC mismatch, a length
     over ``max_frame``, an unpicklable payload — raises
     :class:`ProtocolError` and poisons the decoder (the connection is
-    dead; resynchronizing inside a corrupt pickle stream is hopeless)."""
+    dead; resynchronizing inside a corrupt pickle stream is hopeless).
+
+    Buffer frames (``BUF_FLAG`` on the length word) carry raw bytes, not
+    pickles: their payloads accumulate and are spliced into the *next*
+    pickled message over its :class:`_WireBuf` placeholders.  A torn
+    buffer frame flips the decoder into **fill mode** — the payload's
+    final ``bytearray`` is allocated once and the owner pumps the socket
+    straight into it (``wanted()`` / ``fill_view()`` / ``filled(n)``), so
+    an 8 MiB array crosses the receive path with zero intermediate
+    copies.  ``bytes_pickled`` / ``bytes_buffer`` count payload bytes by
+    path, which is what the zero-copy conformance pin measures."""
 
     def __init__(self, max_frame: int = MAX_FRAME_LEN) -> None:
         self._buf = bytearray()
         self._max = max_frame
         self._poisoned = False
+        self._bufs: List[Any] = []  # raw payloads awaiting their message
+        self._fill: Optional[bytearray] = None  # torn buffer frame target
+        self._fill_got = 0
+        self._fill_crc = 0
+        self.bytes_pickled = 0
+        self.bytes_buffer = 0
 
-    def feed(self, data: bytes) -> List[Any]:
+    # ---- fill mode: recv_into the payload's final buffer -----------------
+    def wanted(self) -> int:
+        """Bytes the active torn-buffer-frame fill still needs (0: none)."""
+        return 0 if self._fill is None else len(self._fill) - self._fill_got
+
+    def fill_view(self) -> memoryview:
+        """Writable view of the unfilled payload region — hand it to
+        ``sock.recv_into`` and report the count via :meth:`filled`."""
+        return memoryview(self._fill)[self._fill_got :]
+
+    def filled(self, n: int) -> None:
+        self._fill_got += n
+        try:
+            self._finish_fill()
+        except ProtocolError:
+            self._poisoned = True
+            raise
+
+    def _finish_fill(self) -> None:
+        if self._fill is None or self._fill_got < len(self._fill):
+            return
+        if zlib.crc32(self._fill) != self._fill_crc:
+            raise ProtocolError("buffer frame CRC mismatch")
+        self.bytes_buffer += len(self._fill)
+        self._bufs.append(self._fill)
+        self._fill = None
+        self._fill_got = 0
+
+    # ---- stream feed ------------------------------------------------------
+    def feed(self, data) -> List[Any]:
         if self._poisoned:
             raise ProtocolError("decoder poisoned by earlier corrupt frame")
-        self._buf += data
         out: List[Any] = []
-        off = 0
-        buf = self._buf
-        hdr = _FRAME_HDR.size
         try:
+            if self._fill is not None:
+                # Route bytes into the active fill first; residual bytes
+                # (frames behind the buffer payload) fall through below.
+                view = _as_byte_view(data)
+                take = min(view.nbytes, len(self._fill) - self._fill_got)
+                self._fill[self._fill_got : self._fill_got + take] = view[:take]
+                self._fill_got += take
+                self._finish_fill()
+                if self._fill is not None:
+                    return out
+                data = view[take:]
+            self._buf += data
+            off = 0
+            buf = self._buf
+            hdr = _FRAME_HDR.size
             while len(buf) - off >= hdr:
-                length, crc = _FRAME_HDR.unpack_from(buf, off)
+                word, crc = _FRAME_HDR.unpack_from(buf, off)
+                is_buffer = bool(word & BUF_FLAG)
+                length = word & ~BUF_FLAG
                 if length > self._max:
                     raise ProtocolError(
                         f"frame length {length} exceeds cap {self._max}"
                     )
                 end = off + hdr + length
+                if is_buffer and len(buf) < end:
+                    # Torn buffer frame: allocate the final payload buffer
+                    # and move whatever already arrived into it; the owner
+                    # recv_intos the rest.
+                    self._fill = target = bytearray(length)
+                    got = len(buf) - off - hdr
+                    target[:got] = buf[off + hdr :]
+                    self._fill_got = got
+                    self._fill_crc = crc
+                    off = len(buf)
+                    break
                 if len(buf) < end:
                     break  # torn frame: wait for more bytes
+                if is_buffer:
+                    payload = bytearray(buf[off + hdr : end])
+                    if zlib.crc32(payload) != crc:
+                        raise ProtocolError("buffer frame CRC mismatch")
+                    self.bytes_buffer += length
+                    self._bufs.append(payload)
+                    off = end
+                    continue
                 payload = bytes(buf[off + hdr : end])
                 if zlib.crc32(payload) != crc:
                     raise ProtocolError("frame CRC mismatch")
                 try:
-                    out.append(pickle.loads(payload))
+                    msg = pickle.loads(payload)
                 except ProtocolError:
                     raise
                 except Exception as exc:
                     raise ProtocolError(f"undecodable frame payload: {exc!r}")
+                self.bytes_pickled += length
+                if self._bufs:
+                    msg = bind_buffers(msg, self._bufs)
+                    self._bufs = []
+                out.append(msg)
                 off = end
         except ProtocolError:
             self._poisoned = True
@@ -184,15 +421,37 @@ def parse_addr(address) -> Tuple[str, int]:
     return host, int(port)
 
 
+def parse_shard_map(address) -> List[Tuple[str, int]]:
+    """A single address → ``[(host, port)]``; a comma-joined string or a
+    list of addresses → one endpoint per daemon.  Shard-map ORDER IS THE
+    TOPOLOGY: it defines both the daemon hash ring and the global shard
+    numbering, so every client of a cluster must use the same ordered
+    map."""
+    if isinstance(address, (tuple, list)):
+        if (
+            len(address) == 2
+            and isinstance(address[0], str)
+            and isinstance(address[1], int)
+        ):
+            return [parse_addr(address)]
+        return [parse_addr(a) for a in address]
+    address = str(address)
+    if "," in address:
+        return [parse_addr(a.strip()) for a in address.split(",") if a.strip()]
+    return [parse_addr(address)]
+
+
 class _Call:
-    """One in-flight request: its encoded frame (kept for resend after a
-    reconnect), its completion state, and its private wake event — the
-    pump wakes exactly the caller a response belongs to, never the herd."""
+    """One in-flight request: its encoded frame segments (kept for resend
+    after a reconnect — the payload views stay valid because the caller
+    blocks until the call completes), its completion state, and its
+    private wake event — the pump wakes exactly the caller a response
+    belongs to, never the herd."""
 
-    __slots__ = ("frame", "done", "value", "error", "event")
+    __slots__ = ("parts", "done", "value", "error", "event")
 
-    def __init__(self, frame: bytes) -> None:
-        self.frame = frame
+    def __init__(self, parts: List[Any]) -> None:
+        self.parts = parts
         self.done = False
         self.value: Any = None
         self.error: Optional[BaseException] = None
@@ -200,7 +459,13 @@ class _Call:
 
 
 def _dial(
-    host: str, port: int, client_id: str, topics: Tuple[str, ...], timeout_s: float
+    host: str,
+    port: int,
+    client_id: str,
+    topics: Tuple[str, ...],
+    timeout_s: float,
+    *,
+    zero_copy: bool = False,
 ) -> Tuple[socket.socket, Dict[str, Any], FrameDecoder, List[Any]]:
     """Connect + handshake: send ``sub``, block for ``hello``.  Returns the
     socket, the hello payload, the stream decoder (already fed), and any
@@ -214,7 +479,9 @@ def _dial(
     try:
         if sock.family != socket.AF_UNIX:
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        sock.sendall(encode_wire(("sub", client_id, list(topics))))
+        sock.sendall(
+            encode_wire(("sub", client_id, list(topics), {"zero_copy": bool(zero_copy)}))
+        )
         dec = FrameDecoder()
         msgs: List[Any] = []
         while not msgs:
@@ -363,11 +630,13 @@ class NetClient:
         on_reconnect: Optional[Callable[[dict], None]] = None,
         connect_timeout_s: float = 10.0,
         retry_max_s: float = 0.2,
+        zero_copy: bool = True,
     ) -> None:
         self.host, self.port = host, port
         self.client_id = uuid.uuid4().hex
         self._connect_timeout_s = connect_timeout_s
         self._retry_max_s = retry_max_s
+        self._zero_copy = bool(zero_copy)
         self._rid = itertools.count(1)
         self._pending: Dict[int, _Call] = {}
         self._state_lock = threading.Lock()
@@ -375,13 +644,24 @@ class NetClient:
         self._pumping = False
         self._closed = threading.Event()
         self._req_reconnects = 0
+        # Copied-vs-raw byte accounting for the request socket, both
+        # directions; the conformance suite pins the zero-copy ratio on it.
+        self._sent_pickled = 0
+        self._sent_buffer = 0
+        self._recv_pickled_base = 0
+        self._recv_buffer_base = 0
         self.hello: Dict[str, Any] = {}
         deadline = time.monotonic() + connect_timeout_s
         backoff = 0.01
         while True:  # cover the race with a server that is still binding
             try:
                 self._sock, self.hello, self._decoder, _ = _dial(
-                    host, port, self.client_id, (), connect_timeout_s
+                    host,
+                    port,
+                    self.client_id,
+                    (),
+                    connect_timeout_s,
+                    zero_copy=self._zero_copy,
                 )
                 break
             except OSError as exc:
@@ -426,6 +706,21 @@ class NetClient:
     def reconnects(self) -> int:
         return self._req_reconnects + (self._events.reconnects if self._events else 0)
 
+    @property
+    def bytes_pickled(self) -> int:
+        """Payload bytes that crossed the request socket through the pickle
+        codec, both directions.  With zero-copy on, a large array put/get
+        moves almost everything through :attr:`bytes_buffer` instead —
+        the structural pin behind the 'no copies through the codec'
+        acceptance row."""
+        return self._sent_pickled + self._recv_pickled_base + self._decoder.bytes_pickled
+
+    @property
+    def bytes_buffer(self) -> int:
+        """Payload bytes that crossed the request socket as raw buffer
+        frames (memoryview out, recv_into in), both directions."""
+        return self._sent_buffer + self._recv_buffer_base + self._decoder.bytes_buffer
+
     # ---- request plane ---------------------------------------------------
     def call(self, op: str, *args: Any, **kwargs: Any) -> Any:
         return self.call_rid(op, *args, **kwargs)[1]
@@ -435,30 +730,50 @@ class NetClient:
         value)`` — destructive reads use the rid as their server-side ack
         token.  Survives any number of reconnects in between; raises only
         a remapped server error or ``ConnectionError`` after close."""
+        rid, call = self.start_call(op, *args, **kwargs)
+        return rid, self.finish_call((rid, call))
+
+    def start_call(self, op: str, *args: Any, **kwargs: Any) -> Tuple[int, _Call]:
+        """Issue one request WITHOUT blocking for its response — the
+        scatter half of a shard-map fan-out: a caller start_calls every
+        daemon first, then :meth:`finish_call`\\ s each handle, so N
+        daemons cost one round-trip of wall clock, not N."""
         if self._closed.is_set():
             raise ConnectionError("net client is closed")
         rid = next(self._rid)
+        buffers: List[memoryview] = []
+        if self._zero_copy and (op.startswith("kv.") or op.startswith("ob.")):
+            args = extract_buffers(args, buffers)
+            kwargs = extract_buffers(kwargs, buffers)
         msg = ("req", rid, op, args, kwargs)
         try:
             # Plain pickle first: it is ~3x cheaper and covers every op but
             # the closure-carrying evals, which fall back to cloudpickle.
-            frame = encode_wire(msg)
+            parts = encode_wire_parts(msg, buffers)
         except Exception:
-            frame = encode_wire(msg, pickler=cloudpickle)
-        call = _Call(frame)
+            parts = encode_wire_parts(msg, buffers, pickler=cloudpickle)
+        self._sent_pickled += len(parts[-1]) - _FRAME_HDR.size
+        self._sent_buffer += sum(v.nbytes for v in buffers)
+        call = _Call(parts)
         with self._state_lock:
             self._pending[rid] = call
             sock = self._sock
         if sock is not None:
             try:
                 with self._send_lock:
-                    sock.sendall(frame)
+                    _sendall_parts(sock, parts)
             except OSError:
                 pass  # whoever pumps next redials and resends for us
+        return rid, call
+
+    def finish_call(self, handle: Tuple[int, _Call]) -> Any:
+        """Block for a :meth:`start_call` handle's response; returns the
+        value or raises the remapped server error."""
+        _rid, call = handle
         self._await(call)
         if call.error is not None:
             raise call.error
-        return rid, call.value
+        return call.value
 
     def cast(self, op: str, *args: Any, **kwargs: Any) -> None:
         """Fire-and-forget: one frame out, no response, no await.  For
@@ -470,17 +785,23 @@ class NetClient:
         server)."""
         if self._closed.is_set():
             raise ConnectionError("net client is closed")
+        buffers: List[memoryview] = []
+        if self._zero_copy and (op.startswith("kv.") or op.startswith("ob.")):
+            args = extract_buffers(args, buffers)
+            kwargs = extract_buffers(kwargs, buffers)
         msg = ("cast", op, args, kwargs)
         try:
-            frame = encode_wire(msg)
+            parts = encode_wire_parts(msg, buffers)
         except Exception:
-            frame = encode_wire(msg, pickler=cloudpickle)
+            parts = encode_wire_parts(msg, buffers, pickler=cloudpickle)
+        self._sent_pickled += len(parts[-1]) - _FRAME_HDR.size
+        self._sent_buffer += sum(v.nbytes for v in buffers)
         with self._state_lock:
             sock = self._sock
         if sock is not None:
             try:
                 with self._send_lock:
-                    sock.sendall(frame)
+                    _sendall_parts(sock, parts)
             except OSError:
                 pass  # best-effort: advisory write dropped with the conn
 
@@ -528,17 +849,29 @@ class NetClient:
         if sock is None:
             self._redial_and_resend()
             return
+        dec = self._decoder
+        data = None
         try:
-            data = sock.recv(1 << 16)
+            if dec.wanted():
+                # Mid-buffer-frame: recv straight into the payload's final
+                # bytearray — a large array get lands with zero copies.
+                got = sock.recv_into(dec.fill_view())
+            else:
+                data = sock.recv(1 << 16)
+                got = len(data)
         except OSError:
-            data = b""
-        if not data:
+            got = 0
+        if not got:
             if self._closed.is_set():
                 return
             self._redial_and_resend()
             return
         try:
-            msgs = self._decoder.feed(data)
+            if data is None:
+                dec.filled(got)  # buffer bytes only: no message completes
+                msgs: List[Any] = []
+            else:
+                msgs = dec.feed(data)
         except ProtocolError:
             # A server speaking garbage is indistinguishable from a
             # corrupted stream: drop the connection and resync fresh.
@@ -584,20 +917,30 @@ class NetClient:
         backoff = 0.005
         while not self._closed.is_set():
             try:
-                sock, self.hello, self._decoder, backlog = _dial(
-                    self.host, self.port, self.client_id, (), self._connect_timeout_s
+                sock, self.hello, decoder, backlog = _dial(
+                    self.host,
+                    self.port,
+                    self.client_id,
+                    (),
+                    self._connect_timeout_s,
+                    zero_copy=self._zero_copy,
                 )
             except OSError:
                 self._closed.wait(backoff)
                 backoff = min(backoff * 2.0, self._retry_max_s)
                 continue
+            # Fold the dead decoder's byte counters into the running totals
+            # before dropping it — accounting survives reconnects.
+            self._recv_pickled_base += self._decoder.bytes_pickled
+            self._recv_buffer_base += self._decoder.bytes_buffer
+            self._decoder = decoder
             with self._state_lock:
                 self._sock = sock
                 pending = sorted(self._pending.items())
             try:
                 with self._send_lock:
                     for _rid, call in pending:
-                        sock.sendall(call.frame)
+                        _sendall_parts(sock, call.parts)
             except OSError:
                 continue  # lost it again mid-resend: start over
             self._req_reconnects += 1
@@ -658,73 +1001,141 @@ class NetKVStore(KVStore):
         ledger: Optional[Ledger] = None,
         *,
         connect_timeout_s: float = 10.0,
+        zero_copy: bool = True,
     ) -> None:
-        self._addr = parse_addr(address)
+        self._addrs = parse_shard_map(address)
         # Pop-ack and watch bookkeeping must exist before any event can
         # arrive.
         self._ack_guard = threading.Lock()
         self._pop_acks: Dict[str, List[int]] = {}
         self._watch_lock = threading.Lock()
         self._watch_refs: Dict[str, int] = {}
-        self._client = NetClient(
-            self._addr[0],
-            self._addr[1],
-            topics=("kv",),
-            on_event=self._on_event,
-            on_reconnect=self._on_reconnect,
-            connect_timeout_s=connect_timeout_s,
-        )
-        num_shards = int(self._client.hello["num_shards"])
-        self._srv_seqs: Dict[int, int] = dict(
-            enumerate(self._client.hello.get("kv_seqs", []))
-        )
-        super().__init__(num_shards=num_shards, profile=profile, ledger=ledger)
+        # One connection pair per daemon, each with its own reconnect loop
+        # and event closures bound to its daemon index.  The global shard
+        # space concatenates the daemons' shards in shard-map order.
+        self._clients: List[NetClient] = []
+        self._shard_base: List[int] = []
+        self._daemon_shards: List[int] = []
+        self._srv_seqs: Dict[int, int] = {}
+        base = 0
+        for d, (host, port) in enumerate(self._addrs):
+            self._shard_base.append(base)
+            self._daemon_shards.append(0)  # closure-safe until hello lands
+            client = NetClient(
+                host,
+                port,
+                topics=("kv",),
+                on_event=self._make_on_event(d),
+                on_reconnect=self._make_on_reconnect(d),
+                connect_timeout_s=connect_timeout_s,
+                zero_copy=zero_copy,
+            )
+            self._clients.append(client)
+            n = int(client.hello["num_shards"])
+            self._daemon_shards[d] = n
+            for i, seq in enumerate(client.hello.get("kv_seqs", [])):
+                self._srv_seqs[base + i] = seq
+            base += n
+        super().__init__(num_shards=base, profile=profile, ledger=ledger)
+
+    # ---- shard-map routing ----------------------------------------------
+    @property
+    def _client(self) -> NetClient:
+        """The first daemon's client — the whole client for an N=1 map.
+        Kept as the single-daemon compatibility surface (examples and
+        tests reach for ``kv._client.reconnects``)."""
+        return self._clients[0]
+
+    def _daemon_of(self, key: str) -> int:
+        return _daemon_of(key, len(self._clients))
+
+    def _client_for(self, key: str) -> NetClient:
+        return self._clients[self._daemon_of(key)]
+
+    def shard_of(self, key: str) -> int:
+        # Daemon first, then the daemon-local shard (the same crc32 the
+        # server itself routes by), offset into the global space.  N=1
+        # degenerates to exactly the base class hash.
+        d = self._daemon_of(key)
+        return self._shard_base[d] + zlib.crc32(key.encode()) % self._daemon_shards[d]
+
+    def _fanout(self, op: str, per_daemon: Dict[int, tuple]) -> Dict[int, Any]:
+        """One ``op`` frame per daemon, pipelined: every request leaves
+        before any response is awaited, so a shard-map scatter costs one
+        round-trip of wall clock."""
+        handles = [
+            (d, self._clients[d].start_call(op, *args))
+            for d, args in per_daemon.items()
+        ]
+        return {d: self._clients[d].finish_call(h) for d, h in handles}
 
     # ---- endpoint --------------------------------------------------------
     def _endpoint_spec(self) -> Dict[str, Any]:
         return {
             "kind": "net_kv",
-            "addr": f"{self._addr[0]}:{self._addr[1]}",
+            "addr": ",".join(_addr_str(a) for a in self._addrs),
         }
 
     def close(self) -> None:
-        self._client.close()
+        for client in self._clients:
+            client.close()
 
     # ---- pushed watch events --------------------------------------------
-    def _on_event(self, m: tuple) -> None:
-        if m[0] != "kv":
-            return
-        shards = getattr(self, "_shards", None)
-        if shards is None:
-            return  # event raced construction: no waiters exist yet
-        _kind, sidx, srv_seq, keys = m
-        if not (0 <= sidx < len(shards)):
-            return
-        self._srv_seqs[sidx] = max(self._srv_seqs.get(sidx, 0), srv_seq)
-        sh = shards[sidx]
-        with sh.lock:
-            sh.touch(keys)
+    def _make_on_event(self, d: int) -> Callable[[tuple], None]:
+        """Event callback for daemon ``d``: remaps its local shard index
+        into the global shard space and touches only that shard."""
 
-    def _on_reconnect(self, hello: dict) -> None:
-        shards = getattr(self, "_shards", None)
-        if shards is None:
-            return
-        # Order matters: re-pin every live watch FIRST (a write landing
-        # between hello and re-registration must not go unpushed), THEN
-        # adopt the hello sequences, THEN wake every waiter with UNKNOWN
-        # keys so each re-probes its predicate exactly once.  A restarted
-        # server starts a new generation with fresh sequences, so this is
-        # an assignment, not a max.
-        with self._watch_lock:
-            for key in [k for k, n in self._watch_refs.items() if n > 0]:
-                try:
-                    self._client.call("watch.kv", key, True)
-                except (ConnectionError, OSError):
-                    pass  # next reconnect re-registers again
-        self._srv_seqs.update(enumerate(hello.get("kv_seqs", [])))
-        for sh in shards:
+        def on_event(m: tuple) -> None:
+            if m[0] != "kv":
+                return
+            shards = getattr(self, "_shards", None)
+            if shards is None:
+                return  # event raced construction: no waiters exist yet
+            _kind, sidx, srv_seq, keys = m
+            if not (0 <= sidx < self._daemon_shards[d]):
+                return
+            g = self._shard_base[d] + sidx
+            self._srv_seqs[g] = max(self._srv_seqs.get(g, 0), srv_seq)
+            sh = shards[g]
             with sh.lock:
-                sh.touch(None)
+                sh.touch(keys)
+
+        return on_event
+
+    def _make_on_reconnect(self, d: int) -> Callable[[dict], None]:
+        """Reconnect handler for daemon ``d`` ALONE: re-pins only the
+        watches that route to it, adopts only its shard sequences, wakes
+        only its shards' waiters.  The other daemons' connections are
+        untouched — a one-daemon outage never disturbs the survivors."""
+
+        def on_reconnect(hello: dict) -> None:
+            shards = getattr(self, "_shards", None)
+            if shards is None:
+                return
+            # Order matters: re-pin every live watch FIRST (a write landing
+            # between hello and re-registration must not go unpushed), THEN
+            # adopt the hello sequences, THEN wake every waiter with UNKNOWN
+            # keys so each re-probes its predicate exactly once.  A restarted
+            # server starts a new generation with fresh sequences, so this is
+            # an assignment, not a max.
+            with self._watch_lock:
+                live = [k for k, n in self._watch_refs.items() if n > 0]
+                for key in live:
+                    if self._daemon_of(key) != d:
+                        continue
+                    try:
+                        self._clients[d].call("watch.kv", key, True)
+                    except (ConnectionError, OSError):
+                        pass  # next reconnect re-registers again
+            base = self._shard_base[d]
+            for i, seq in enumerate(hello.get("kv_seqs", [])):
+                self._srv_seqs[base + i] = seq
+            for i in range(self._daemon_shards[d]):
+                sh = shards[base + i]
+                with sh.lock:
+                    sh.touch(None)
+
+        return on_reconnect
 
     # ---- registered waits ------------------------------------------------
     def _watch_acquire(self, key: str) -> None:
@@ -737,28 +1148,32 @@ class NetKVStore(KVStore):
         The lock is held ACROSS the wire op: an "on" racing a concurrent
         "off" for the same key could otherwise land first and leave the
         server unwatched under a sleeping waiter."""
+        d = self._daemon_of(key)
+        client = self._clients[d]
+        base = self._shard_base[d]
         with self._watch_lock:
             n = self._watch_refs.get(key, 0)
             self._watch_refs[key] = n + 1
             if n:
                 return
             try:
-                hello = self._client.ensure_events()
+                hello = client.ensure_events()
                 if hello is not None:
                     # The event channel was just created: writes before it
                     # existed were never pushed.  Adopt its hello seqs;
-                    # mismatched shards wake with unknown keys.
-                    stale = [
-                        sidx
-                        for sidx, srv_seq in enumerate(hello.get("kv_seqs", []))
-                        if srv_seq != self._srv_seqs.get(sidx, 0)
-                    ]
-                    self._srv_seqs.update(enumerate(hello.get("kv_seqs", [])))
-                    for sidx in stale:
-                        sh = self._shards[sidx]
+                    # mismatched shards wake with unknown keys.  Only this
+                    # daemon's shards are involved — the hello speaks for
+                    # one daemon.
+                    stale = []
+                    for i, srv_seq in enumerate(hello.get("kv_seqs", [])):
+                        if srv_seq != self._srv_seqs.get(base + i, 0):
+                            stale.append(base + i)
+                        self._srv_seqs[base + i] = srv_seq
+                    for g in stale:
+                        sh = self._shards[g]
                         with sh.lock:
                             sh.touch(None)
-                srv_seq = int(self._client.call("watch.kv", key, True))
+                srv_seq = int(client.call("watch.kv", key, True))
             except BaseException:
                 self._watch_refs[key] = n  # registration failed: unwind
                 if not n:
@@ -779,7 +1194,7 @@ class NetKVStore(KVStore):
                 return
             self._watch_refs.pop(key, None)
             try:
-                self._client.call("watch.kv", key, False)
+                self._client_for(key).call("watch.kv", key, False)
             except (ConnectionError, OSError, RemoteError):
                 pass  # conn gone: the server reaps the watch with it
 
@@ -792,22 +1207,41 @@ class NetKVStore(KVStore):
 
     # ---- atomic single-key ops ------------------------------------------
     def set(self, key: str, value: Any, *, worker: str = "-") -> None:
-        self._client.call("kv.set", key, value)
+        self._client_for(key).call("kv.set", key, value)
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "set", key, _sizeof(value), write=True)
 
     def get(self, key: str, default: Any = None, *, worker: str = "-") -> Any:
-        value = self._client.call("kv.get", key, default)
+        value = self._client_for(key).call("kv.get", key, default)
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "get", key, _sizeof(value), write=False)
         return value
 
+    def _group_keys(self, keys) -> Dict[int, List[int]]:
+        """Input positions grouped by owning daemon (shard-map scatter)."""
+        by_daemon: Dict[int, List[int]] = {}
+        for i, key in enumerate(keys):
+            by_daemon.setdefault(self._daemon_of(key), []).append(i)
+        return by_daemon
+
     def mget(
         self, keys: List[str], default: Any = None, *, worker: str = "-"
     ) -> List[Any]:
-        out = self._client.call("kv.mget", list(keys), default)
+        keys = list(keys)
+        if len(self._clients) == 1:
+            out = self._client.call("kv.mget", keys, default)
+        else:
+            by_daemon = self._group_keys(keys)
+            parts = self._fanout(
+                "kv.mget",
+                {d: ([keys[i] for i in idxs], default) for d, idxs in by_daemon.items()},
+            )
+            out: List[Any] = [default] * len(keys)
+            for d, idxs in by_daemon.items():
+                for i, v in zip(idxs, parts[d]):
+                    out[i] = v
         by_shard: Dict[int, List[int]] = {}
         for i, key in enumerate(keys):
             by_shard.setdefault(self.shard_of(key), []).append(i)
@@ -822,7 +1256,13 @@ class NetKVStore(KVStore):
         return out
 
     def mset(self, mapping: Dict[str, Any], *, worker: str = "-") -> None:
-        self._client.call("kv.mset", dict(mapping))
+        if len(self._clients) == 1:
+            self._client.call("kv.mset", dict(mapping))
+        else:
+            per_daemon: Dict[int, Dict[str, Any]] = {}
+            for key, value in mapping.items():
+                per_daemon.setdefault(self._daemon_of(key), {})[key] = value
+            self._fanout("kv.mset", {d: (m,) for d, m in per_daemon.items()})
         by_shard: Dict[int, List[str]] = {}
         for key in mapping:
             by_shard.setdefault(self.shard_of(key), []).append(key)
@@ -836,34 +1276,43 @@ class NetKVStore(KVStore):
                 )
 
     def setnx(self, key: str, value: Any, *, worker: str = "-") -> bool:
-        won = bool(self._client.call("kv.setnx", key, value))
+        won = bool(self._client_for(key).call("kv.setnx", key, value))
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "setnx", key, _sizeof(value), write=True)
         return won
 
     def incr(self, key: str, amount: float = 1, *, worker: str = "-") -> float:
-        new = self._client.call("kv.incr", key, amount)
+        new = self._client_for(key).call("kv.incr", key, amount)
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "incr", key, 8, write=True)
         return new
 
     def cas(self, key: str, expect: Any, value: Any, *, worker: str = "-") -> bool:
-        won = bool(self._client.call("kv.cas", key, expect, value))
+        won = bool(self._client_for(key).call("kv.cas", key, expect, value))
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "cas", key, _sizeof(value), write=True)
         return won
 
     def delete(self, key: str, *, worker: str = "-") -> None:
-        self._client.call("kv.delete", key)
+        self._client_for(key).call("kv.delete", key)
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "del", key, 0, write=True)
 
     def mdel(self, keys: List[str], *, worker: str = "-") -> int:
-        removed = int(self._client.call("kv.mdel", list(keys)))
+        keys = list(keys)
+        if len(self._clients) == 1:
+            removed = int(self._client.call("kv.mdel", keys))
+        else:
+            by_daemon = self._group_keys(keys)
+            parts = self._fanout(
+                "kv.mdel",
+                {d: ([keys[i] for i in idxs],) for d, idxs in by_daemon.items()},
+            )
+            removed = sum(int(v) for v in parts.values())
         by_shard: Dict[int, List[str]] = {}
         for key in keys:
             by_shard.setdefault(self.shard_of(key), []).append(key)
@@ -876,14 +1325,21 @@ class NetKVStore(KVStore):
         return removed
 
     def exists(self, key: str, *, worker: str = "-") -> bool:
-        ok = bool(self._client.call("kv.exists", key))
+        ok = bool(self._client_for(key).call("kv.exists", key))
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "exists", key, 0, write=False)
         return ok
 
     def scan(self, prefix: str, *, worker: str = "-") -> List[str]:
-        found = self._client.call("kv.scan", prefix)
+        # A prefix scatters across every daemon's keyspace: fan to all,
+        # union (pipelined — one round-trip of wall clock).
+        parts = self._fanout(
+            "kv.scan", {d: (prefix,) for d in range(len(self._clients))}
+        )
+        found: List[str] = []
+        for vals in parts.values():
+            found.extend(vals)
         per_shard: Dict[int, int] = {}
         for k in found:
             sidx = self.shard_of(k)
@@ -907,7 +1363,7 @@ class NetKVStore(KVStore):
         default: Any = None,
         worker: str = "-",
     ) -> Any:
-        old = self._client.call("kv.eval", key, fn, default)
+        old = self._client_for(key).call("kv.eval", key, fn, default)
         new = fn(old)  # deterministic replay: side effects land HERE
         deleted = new is DELETE
         sh = self._shard(key)
@@ -924,7 +1380,17 @@ class NetKVStore(KVStore):
         default: Any = None,
         worker: str = "-",
     ) -> Dict[str, Any]:
-        olds = self._client.call("kv.eval_many", dict(updates), default)
+        if len(self._clients) == 1:
+            olds = self._client.call("kv.eval_many", dict(updates), default)
+        else:
+            per_daemon: Dict[int, Dict[str, Callable[[Any], Any]]] = {}
+            for key, fn in updates.items():
+                per_daemon.setdefault(self._daemon_of(key), {})[key] = fn
+            olds = {}
+            for part in self._fanout(
+                "kv.eval_many", {d: (m, default) for d, m in per_daemon.items()}
+            ).values():
+                olds.update(part)
         by_shard: Dict[int, List[str]] = {}
         for key in updates:
             by_shard.setdefault(self.shard_of(key), []).append(key)
@@ -948,7 +1414,7 @@ class NetKVStore(KVStore):
 
     # ---- lists (queues) --------------------------------------------------
     def rpush(self, key: str, *values: Any, worker: str = "-") -> int:
-        length = int(self._client.call("kv.rpush", key, *values))
+        length = int(self._client_for(key).call("kv.rpush", key, *values))
         sh = self._shard(key)
         with sh.lock:
             self._charge(
@@ -957,7 +1423,7 @@ class NetKVStore(KVStore):
         return length
 
     def rpush_nowait(self, key: str, *values: Any, worker: str = "-") -> None:
-        self._client.cast("kv.rpush", key, *values)
+        self._client_for(key).cast("kv.rpush", key, *values)
         sh = self._shard(key)
         with sh.lock:
             self._charge(
@@ -967,7 +1433,17 @@ class NetKVStore(KVStore):
     def rpush_many(
         self, pushes: Dict[str, List[Any]], *, worker: str = "-"
     ) -> Dict[str, int]:
-        lengths = self._client.call("kv.rpush_many", dict(pushes))
+        if len(self._clients) == 1:
+            lengths = self._client.call("kv.rpush_many", dict(pushes))
+        else:
+            per_daemon: Dict[int, Dict[str, List[Any]]] = {}
+            for key, values in pushes.items():
+                per_daemon.setdefault(self._daemon_of(key), {})[key] = values
+            lengths = {}
+            for part in self._fanout(
+                "kv.rpush_many", {d: (m,) for d, m in per_daemon.items()}
+            ).values():
+                lengths.update(part)
         by_shard: Dict[int, List[str]] = {}
         for key in pushes:
             by_shard.setdefault(self.shard_of(key), []).append(key)
@@ -987,7 +1463,7 @@ class NetKVStore(KVStore):
         with self._ack_guard:
             acked = self._pop_acks.pop(key, None) or []
         try:
-            rid, out = self._client.call_rid("kv.lpop_n", key, max_n, acked)
+            rid, out = self._client_for(key).call_rid("kv.lpop_n", key, max_n, acked)
         except BaseException:
             if acked:  # put the retirement list back for the next attempt
                 with self._ack_guard:
@@ -1046,7 +1522,7 @@ class NetKVStore(KVStore):
     def lrange(
         self, key: str, start: int = 0, stop: int = -1, *, worker: str = "-"
     ) -> List[Any]:
-        out = self._client.call("kv.lrange", key, start, stop)
+        out = self._client_for(key).call("kv.lrange", key, start, stop)
         sh = self._shard(key)
         with sh.lock:
             self._charge(
@@ -1055,7 +1531,7 @@ class NetKVStore(KVStore):
         return out
 
     def llen(self, key: str, *, worker: str = "-") -> int:
-        n = int(self._client.call("kv.llen", key))
+        n = int(self._client_for(key).call("kv.llen", key))
         sh = self._shard(key)
         with sh.lock:
             self._charge(sh, worker, "llen", key, 8, write=False)
@@ -1074,76 +1550,168 @@ class NetBackend(_Backend):
     cross_process = True
     self_watching = True
     echoes_puts = True
+    # The server consumes put blobs synchronously (logged before the res
+    # frame), so callers may hand over live memoryviews without aliasing —
+    # checkpoint.save skips its tobytes() copy on this signal.
+    zero_copy_puts = True
 
-    def __init__(self, address, *, connect_timeout_s: float = 10.0) -> None:
-        self._addr = parse_addr(address)
+    def __init__(
+        self, address, *, connect_timeout_s: float = 10.0, zero_copy: bool = True
+    ) -> None:
+        self._addrs = parse_shard_map(address)
+        self._zero_copy = bool(zero_copy)
         self._init_watch()
-        self._client = NetClient(
-            self._addr[0],
-            self._addr[1],
-            topics=("obj",),
-            on_event=self._on_event,
-            on_reconnect=self._on_reconnect,
-            connect_timeout_s=connect_timeout_s,
-        )
-        self._srv_obj_seq = int(self._client.hello.get("obj_seq", 0))
+        self._clients: List[NetClient] = []
+        self._srv_obj_seqs: Dict[int, int] = {}
+        for d, (host, port) in enumerate(self._addrs):
+            client = NetClient(
+                host,
+                port,
+                topics=("obj",),
+                on_event=self._make_on_event(d),
+                on_reconnect=self._make_on_reconnect(d),
+                connect_timeout_s=connect_timeout_s,
+                zero_copy=zero_copy,
+            )
+            self._clients.append(client)
+            self._srv_obj_seqs[d] = int(client.hello.get("obj_seq", 0))
+
+    # ---- shard-map routing ----------------------------------------------
+    @property
+    def _client(self) -> NetClient:
+        """First daemon's client — the whole client for an N=1 map (the
+        single-daemon compatibility surface)."""
+        return self._clients[0]
+
+    def _daemon_of(self, key: str) -> int:
+        return _daemon_of(key, len(self._clients))
+
+    def _client_for(self, key: str) -> NetClient:
+        return self._clients[self._daemon_of(key)]
+
+    def _fanout(self, op: str, per_daemon: Dict[int, tuple]) -> Dict[int, Any]:
+        handles = [
+            (d, self._clients[d].start_call(op, *args))
+            for d, args in per_daemon.items()
+        ]
+        return {d: self._clients[d].finish_call(h) for d, h in handles}
 
     def endpoint_spec(self) -> Dict[str, Any]:
         return {
             "kind": "net_obj",
-            "addr": f"{self._addr[0]}:{self._addr[1]}",
+            "addr": ",".join(_addr_str(a) for a in self._addrs),
         }
 
     def close(self) -> None:
-        self._client.close()
+        for client in self._clients:
+            client.close()
 
     # ---- pushed watch events --------------------------------------------
-    def _on_event(self, m: tuple) -> None:
-        if m[0] == "obj":
-            self._srv_obj_seq = max(self._srv_obj_seq, int(m[1]))
-            _Backend.notify_put(self, m[2])
+    def _make_on_event(self, d: int) -> Callable[[tuple], None]:
+        def on_event(m: tuple) -> None:
+            if m[0] == "obj":
+                self._srv_obj_seqs[d] = max(self._srv_obj_seqs.get(d, 0), int(m[1]))
+                _Backend.notify_put(self, m[2])
 
-    def _on_reconnect(self, hello: dict) -> None:
-        # Unknown-keys wake: waiters re-probe once, so no put that landed
-        # while we were disconnected can be missed.  New generation means
-        # fresh server sequences — adopt, don't max.
-        self._srv_obj_seq = int(hello.get("obj_seq", 0))
-        _Backend.notify_put(self, None)
+        return on_event
+
+    def _make_on_reconnect(self, d: int) -> Callable[[dict], None]:
+        def on_reconnect(hello: dict) -> None:
+            # Unknown-keys wake: waiters re-probe once, so no put that
+            # landed while daemon ``d`` was unreachable can be missed.  New
+            # generation means fresh server sequences — adopt, don't max.
+            # Only this daemon's sequence resets; the survivors' event
+            # streams never paused.
+            self._srv_obj_seqs[d] = int(hello.get("obj_seq", 0))
+            _Backend.notify_put(self, None)
+
+        return on_reconnect
 
     def wait_put(self, last_seq: int, timeout_s: float) -> int:
-        # The event channel is lazy (non-waiting clients pay zero event
-        # CPU); first wait creates it.  Its hello carries the server's
+        # The event channels are lazy (non-waiting clients pay zero event
+        # CPU); first wait creates them — on every daemon, since a put may
+        # land anywhere in the map.  Each hello carries that daemon's
         # current object sequence — any gap vs the last sequence we saw is
         # a put that predates the channel, so wake with unknown keys.
-        hello = self._client.ensure_events()
-        if hello is not None:
-            srv = int(hello.get("obj_seq", 0))
-            if srv != self._srv_obj_seq:
-                self._srv_obj_seq = srv
-                _Backend.notify_put(self, None)
+        for d, client in enumerate(self._clients):
+            hello = client.ensure_events()
+            if hello is not None:
+                srv = int(hello.get("obj_seq", 0))
+                if srv != self._srv_obj_seqs.get(d, 0):
+                    self._srv_obj_seqs[d] = srv
+                    _Backend.notify_put(self, None)
         return _Backend.wait_put(self, last_seq, timeout_s)
 
     # ---- byte plane ------------------------------------------------------
+    def _wire_blob(self, blob) -> Any:
+        """Large bytes-likes ride buffer frames untouched; everything else
+        (and everything when zero-copy is off) normalizes to ``bytes`` so
+        the pickled fallback path always round-trips."""
+        if self._zero_copy and isinstance(blob, (bytes, bytearray, memoryview)):
+            return blob
+        return bytes(blob)
+
     def put(self, key: str, blob: bytes, *, if_absent: bool) -> bool:
-        return bool(self._client.call("ob.put", key, bytes(blob), if_absent))
+        return bool(
+            self._client_for(key).call("ob.put", key, self._wire_blob(blob), if_absent)
+        )
 
     def put_many(self, items: Dict[str, bytes], *, if_absent: bool) -> int:
-        return int(self._client.call("ob.put_many", dict(items), if_absent))
+        if len(self._clients) == 1:
+            return int(
+                self._client.call(
+                    "ob.put_many",
+                    {k: self._wire_blob(b) for k, b in items.items()},
+                    if_absent,
+                )
+            )
+        per_daemon: Dict[int, Dict[str, Any]] = {}
+        for key, blob in items.items():
+            per_daemon.setdefault(self._daemon_of(key), {})[key] = self._wire_blob(blob)
+        parts = self._fanout(
+            "ob.put_many", {d: (m, if_absent) for d, m in per_daemon.items()}
+        )
+        return sum(int(v) for v in parts.values())
 
     def get(self, key: str) -> bytes:
-        return self._client.call("ob.get", key)
+        return self._client_for(key).call("ob.get", key)
 
     def get_many(self, keys: List[str]) -> Dict[str, bytes]:
-        return self._client.call("ob.get_many", list(keys))
+        if len(self._clients) == 1:
+            return self._client.call("ob.get_many", list(keys))
+        per_daemon: Dict[int, List[str]] = {}
+        for key in keys:
+            per_daemon.setdefault(self._daemon_of(key), []).append(key)
+        out: Dict[str, bytes] = {}
+        for part in self._fanout(
+            "ob.get_many", {d: (ks,) for d, ks in per_daemon.items()}
+        ).values():
+            out.update(part)
+        return out
 
     def exists(self, key: str) -> bool:
-        return bool(self._client.call("ob.exists", key))
+        return bool(self._client_for(key).call("ob.exists", key))
 
     def exists_many(self, keys: List[str]) -> set:
-        return set(self._client.call("ob.exists_many", list(keys)))
+        if len(self._clients) == 1:
+            return set(self._client.call("ob.exists_many", list(keys)))
+        per_daemon: Dict[int, List[str]] = {}
+        for key in keys:
+            per_daemon.setdefault(self._daemon_of(key), []).append(key)
+        out: set = set()
+        for part in self._fanout(
+            "ob.exists_many", {d: (ks,) for d, ks in per_daemon.items()}
+        ).values():
+            out.update(part)
+        return out
 
     def delete(self, key: str) -> None:
-        self._client.call("ob.delete", key)
+        self._client_for(key).call("ob.delete", key)
 
     def list(self, prefix: str) -> List[str]:
-        return list(self._client.call("ob.list", prefix))
+        out: List[str] = []
+        for part in self._fanout(
+            "ob.list", {d: (prefix,) for d in range(len(self._clients))}
+        ).values():
+            out.extend(part)
+        return out

@@ -56,15 +56,33 @@ import pickle
 import socket
 import threading
 import uuid
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import cloudpickle
 
 from .file_kv import FileKVStore
 from .kv_store import DELETE
-from .net_kv import FrameDecoder, ProtocolError, encode_wire
+from .net_kv import (
+    FrameDecoder,
+    ProtocolError,
+    _sendall_parts,
+    encode_wire,
+    encode_wire_parts,
+    extract_buffers,
+)
 
 _ABSENT = object()
+
+# Responses whose payloads may ride zero-copy buffer frames when the
+# client advertised ``zero_copy`` at sub time.  Only the bulk read paths
+# qualify — everything else stays one small pickle.
+_ZC_RESPONSES = frozenset({"ob.get", "ob.get_many", "kv.get", "kv.mget", "kv.lrange"})
+
+# Watch-event frames queued per connection before backpressure kicks in.
+# On overflow the whole backlog collapses into one conservative resync
+# wake — wakes are hints, so dropping them loses precision, never a wake.
+MAX_PUSH_QUEUE = 256
 
 
 def _eval_preimage(fn, stored, default):
@@ -168,8 +186,17 @@ _KV_WRITES = {
 
 class _ServerConn:
     """One accepted connection: socket, its subscription, and a send lock
-    (responses from the conn's own thread interleave with broadcasts from
-    other conns' threads)."""
+    (responses from the conn's own thread interleave with pushes from the
+    conn's own pusher thread).
+
+    Watch events never block a writer: they enqueue on a BOUNDED per-
+    connection queue drained by a dedicated pusher thread (started only
+    for subscribed connections).  A slow watcher fills its queue; on
+    overflow the backlog is dropped and replaced by one conservative
+    resync wake (unknown keys, current sequences) — every waiter
+    re-probes, so backpressure costs precision, never a lost wake, and a
+    stalled consumer can no longer grow server memory without bound or
+    stall op threads in ``sendall``."""
 
     def __init__(self, sock: socket.socket, peer: str) -> None:
         self.sock = sock
@@ -177,7 +204,13 @@ class _ServerConn:
         self.send_lock = threading.Lock()
         self.client_id: Optional[str] = None
         self.topics: Tuple[str, ...] = ()
+        self.zero_copy = False
         self.alive = True
+        self._push_q: deque = deque()
+        self._push_cond = threading.Condition()
+        self._push_overflow = False
+        self._push_thread: Optional[threading.Thread] = None
+        self._push_closed = False
 
     def send(self, msg: Any, *, pickler=pickle) -> None:
         self.send_bytes(encode_wire(msg, pickler=pickler))
@@ -185,6 +218,69 @@ class _ServerConn:
     def send_bytes(self, frame: bytes) -> None:
         with self.send_lock:
             self.sock.sendall(frame)
+
+    def send_parts(self, parts: List[Any]) -> None:
+        with self.send_lock:
+            _sendall_parts(self.sock, parts)
+
+    # ---- backpressured event push ---------------------------------------
+    def start_pusher(self, resync_frames) -> None:
+        """Start the pusher thread (idempotent).  ``resync_frames(conn)``
+        supplies the conservative wake frames sent after an overflow."""
+        with self._push_cond:
+            if self._push_thread is not None or self._push_closed:
+                return
+            self._push_thread = threading.Thread(
+                target=self._push_loop,
+                args=(resync_frames,),
+                daemon=True,
+                name=f"kvd-push-{self.peer}",
+            )
+            self._push_thread.start()
+
+    def push(self, frame: bytes) -> None:
+        """Enqueue one event frame; never blocks the calling op thread."""
+        with self._push_cond:
+            if self._push_closed:
+                return
+            if len(self._push_q) >= MAX_PUSH_QUEUE:
+                self._push_q.clear()
+                self._push_overflow = True
+            else:
+                self._push_q.append(frame)
+            self._push_cond.notify()
+
+    def _push_loop(self, resync_frames) -> None:
+        while True:
+            with self._push_cond:
+                while not (self._push_q or self._push_overflow or self._push_closed):
+                    self._push_cond.wait()
+                if self._push_closed:
+                    return
+                overflow, self._push_overflow = self._push_overflow, False
+                batch = list(self._push_q)
+                self._push_q.clear()
+            try:
+                if overflow:
+                    # The dropped backlog becomes one unknown-keys wake per
+                    # subscribed stream, carrying the CURRENT sequences
+                    # (computed now, so nothing that happened during the
+                    # stall is missed).  Frames enqueued after the overflow
+                    # follow behind; their older sequences are harmless
+                    # (clients take the max and touches are additive).
+                    for frame in resync_frames(self):
+                        self.send_bytes(frame)
+                for frame in batch:
+                    self.send_bytes(frame)
+            except OSError:
+                self.alive = False
+                return
+
+    def close_push(self) -> None:
+        with self._push_cond:
+            self._push_closed = True
+            self._push_q.clear()
+            self._push_cond.notify_all()
 
 
 class KVDServer:
@@ -277,6 +373,7 @@ class KVDServer:
             conns = list(self._conns.values())
             self._conns.clear()
         for conn in conns:
+            conn.close_push()
             try:
                 conn.sock.close()
             except OSError:
@@ -311,6 +408,15 @@ class KVDServer:
         decoder = FrameDecoder()
         try:
             while not self._stop.is_set():
+                if decoder.wanted():
+                    # Mid-buffer-frame: recv straight into the payload's
+                    # final bytearray (a large zero-copy put lands without
+                    # intermediate copies).
+                    got = conn.sock.recv_into(decoder.fill_view())
+                    if not got:
+                        return
+                    decoder.filled(got)
+                    continue
                 data = conn.sock.recv(1 << 16)
                 if not data:
                     return
@@ -334,6 +440,7 @@ class KVDServer:
                 ):
                     self._watches.pop(conn.client_id, None)
                 self._rebuild_push_filters()
+            conn.close_push()
             try:
                 conn.sock.close()
             except OSError:
@@ -346,6 +453,10 @@ class KVDServer:
         if kind == "sub":
             conn.client_id = str(msg[1])
             conn.topics = tuple(msg[2])
+            if len(msg) > 3 and isinstance(msg[3], dict):
+                conn.zero_copy = bool(msg[3].get("zero_copy", False))
+            if conn.topics:
+                conn.start_pusher(self._resync_frames)
             with self._conn_lock:
                 self._rebuild_push_filters()
             with self._seq_lock:
@@ -384,13 +495,16 @@ class KVDServer:
         except Exception as exc:  # clean per-op failure, never a crash
             conn.send(("err", rid, type(exc).__name__, str(exc)))
             return
+        buffers: List[Any] = []
+        if conn.zero_copy and op in _ZC_RESPONSES:
+            value = extract_buffers(value, buffers)
         res = ("res", rid, value)
         try:
-            payload = encode_wire(res)
+            parts = encode_wire_parts(res, buffers)
         except Exception:
             # Values that arrived by value (cloudpickle) may need it back.
-            payload = encode_wire(res, pickler=cloudpickle)
-        conn.send_bytes(payload)
+            parts = encode_wire_parts(res, buffers, pickler=cloudpickle)
+        conn.send_parts(parts)
         self._push_events(frames)
 
     # ---- op execution ----------------------------------------------------
@@ -560,10 +674,26 @@ class KVDServer:
         for event, targets in plan:
             frame = encode_wire(event)
             for conn in targets:
-                try:
-                    conn.send_bytes(frame)
-                except OSError:
-                    conn.alive = False  # its conn loop will reap it
+                # Enqueue, never send: a slow watcher's socket can't stall
+                # this (writer) thread — its pusher thread owns the send.
+                conn.push(frame)
+
+    def _resync_frames(self, conn: _ServerConn) -> List[bytes]:
+        """Conservative wakes sent after a connection's push queue
+        overflowed: one unknown-keys event per subscribed stream carrying
+        the current sequences.  Every waiter behind the connection
+        re-probes its predicate once — the dropped backlog loses no
+        wake."""
+        frames: List[bytes] = []
+        with self._seq_lock:
+            kv_seqs = list(self._kv_seqs)
+            obj_seq = self._obj_seq
+        if "kv" in conn.topics:
+            for sidx, seq in enumerate(kv_seqs):
+                frames.append(encode_wire(("kv", sidx, seq, None)))
+        if "obj" in conn.topics:
+            frames.append(encode_wire(("obj", obj_seq, None)))
+        return frames
 
 
 def main(argv: Optional[List[str]] = None) -> None:

@@ -443,6 +443,13 @@ class _Backend:
     # waiters twice, once locally and once on the echoed event.
     echoes_puts = False
 
+    # True when a put CONSUMES its blob before returning (written to disk,
+    # sent on a socket), so callers may hand over a ``memoryview`` of live
+    # array memory instead of copying to bytes first.  False for backends
+    # that store the reference (the in-memory backend): an aliased view
+    # would let later array mutation corrupt the stored object.
+    zero_copy_puts = False
+
     # How many recent put events carry their key lists before waiters must
     # fall back to an existence probe (bounds memory, not correctness).
     _RECENT_PUTS = 512
@@ -635,6 +642,7 @@ class FileBackend(_Backend):
 
     cross_process = True
     self_watching = True
+    zero_copy_puts = True  # every put writes the blob out before returning
 
     _SEQ_NAME = ".watch-seq"
     _SEQ_ROTATE_BYTES = 1 << 20  # swap the event ledger past 1 MiB

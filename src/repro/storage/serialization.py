@@ -6,9 +6,23 @@ persists goes through :func:`dumps` / :func:`loads`, is integrity-hashed, and
 is addressable by a deterministic key derived from its content
 (:func:`content_key`).
 
-JAX arrays are handled natively (zero-copy to numpy on CPU); arbitrary Python
-objects fall back to pickle — the cloudpickle analogue.  A small header tags
-the codec so readers never guess.
+JAX arrays are handled natively; arbitrary Python objects fall back to
+pickle — the cloudpickle analogue.  A small header tags the codec so readers
+never guess.
+
+Array pytrees use the **raw codec** (PR 9): a length-prefixed pickled
+descriptor (treedef + per-leaf dtype/shape) followed by each leaf's raw
+contiguous bytes.  :func:`dumps_parts` exposes that layout as a list of
+segments whose leaf entries are zero-copy ``memoryview``\\ s over the array
+memory — the wire tier (:mod:`.net_kv`) hands them to ``socket.sendmsg``
+without ever pickling the payload — and :func:`loads` reconstructs every
+leaf with ``np.frombuffer`` over the blob, so a KV-cache block or a
+checkpoint shard is never copied through the codec on either end.
+
+The legacy NPZ codec remains readable.  Its treedef separator is now
+length-prefixed; the original format split on a sentinel byte string
+(``b"\\x00TREE\\x00"``), which corrupted the payload whenever the pickled
+treedef happened to contain those bytes (e.g. a dict key naming them).
 """
 
 from __future__ import annotations
@@ -17,15 +31,17 @@ import hashlib
 import io
 import pickle
 import struct
-from typing import Any, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import numpy as np
 
 _MAGIC = b"RWRN"
 _CODEC_PICKLE = 1
-_CODEC_NPZ = 2  # pytree of arrays: treedef pickled + arrays in .npz
+_CODEC_NPZ = 2  # legacy: pytree of arrays, treedef pickled + arrays in .npz
+_CODEC_RAW = 3  # pytree of arrays: pickled descriptor + raw leaf bytes
 _HEADER = struct.Struct("<4sBQ")  # magic, codec, payload length
+_LEN = struct.Struct("<Q")  # length prefix for embedded pickled sections
 
 
 def _is_array_pytree(value: Any) -> bool:
@@ -35,44 +51,84 @@ def _is_array_pytree(value: Any) -> bool:
     return all(isinstance(l, (np.ndarray, np.generic, jax.Array)) for l in leaves)
 
 
-def dumps(value: Any) -> bytes:
-    """Serialize an arbitrary value.  Array pytrees use the npz fast path."""
+def dumps_parts(value: Any) -> List[Any]:
+    """Serialize ``value`` as a list of byte segments whose concatenation is
+    exactly ``dumps(value)``.  For an array pytree the first segment is the
+    header + descriptor and every following segment is one leaf's raw bytes
+    as a zero-copy ``memoryview`` — a transport that can scatter-gather
+    (``socket.sendmsg``, ``writev``) never copies the array payload at all.
+    Non-array values collapse to a single pickled segment."""
     if _is_array_pytree(value):
         leaves, treedef = jax.tree_util.tree_flatten(value)
-        buf = io.BytesIO()
-        np.savez(
-            buf,
-            **{f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)},
+        arrays = [np.ascontiguousarray(np.asarray(leaf)) for leaf in leaves]
+        views = [memoryview(a).cast("B") for a in arrays]
+        meta = pickle.dumps(
+            (treedef, [(a.dtype.str, a.shape) for a in arrays]),
+            protocol=pickle.HIGHEST_PROTOCOL,
         )
-        payload = pickle.dumps(treedef) + b"\x00TREE\x00" + buf.getvalue()
-        codec = _CODEC_NPZ
-    else:
-        payload = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
-        codec = _CODEC_PICKLE
-    return _HEADER.pack(_MAGIC, codec, len(payload)) + payload
+        payload_len = _LEN.size + len(meta) + sum(v.nbytes for v in views)
+        head = _HEADER.pack(_MAGIC, _CODEC_RAW, payload_len) + _LEN.pack(len(meta)) + meta
+        return [head] + views
+    payload = pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+    return [_HEADER.pack(_MAGIC, _CODEC_PICKLE, len(payload)) + payload]
 
 
-def loads(blob: bytes) -> Any:
-    magic, codec, length = _HEADER.unpack_from(blob, 0)
+def dumps(value: Any) -> bytes:
+    """Serialize an arbitrary value.  Array pytrees use the raw fast path."""
+    return b"".join(dumps_parts(value))
+
+
+def _dumps_npz(value: Any) -> bytes:
+    """Legacy NPZ encoding (compressed-container layout), kept so the codec
+    branch stays exercised.  The treedef is length-prefixed — the old
+    sentinel-scan split corrupted any treedef whose pickle contained the
+    sentinel bytes."""
+    leaves, treedef = jax.tree_util.tree_flatten(value)
+    buf = io.BytesIO()
+    np.savez(buf, **{f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)})
+    tree_blob = pickle.dumps(treedef)
+    payload = _LEN.pack(len(tree_blob)) + tree_blob + buf.getvalue()
+    return _HEADER.pack(_MAGIC, _CODEC_NPZ, len(payload)) + payload
+
+
+def loads(blob: Any) -> Any:
+    """Inverse of :func:`dumps`.  Accepts any bytes-like object (``bytes``,
+    ``bytearray``, ``memoryview``) — raw-codec leaves are reconstructed with
+    ``np.frombuffer`` over the blob itself, so large arrays are zero-copy
+    views of the storage/wire buffer."""
+    view = memoryview(blob)
+    magic, codec, length = _HEADER.unpack_from(view, 0)
     if magic != _MAGIC:
         raise ValueError("bad magic: not a repro-serialized blob")
-    payload = blob[_HEADER.size : _HEADER.size + length]
+    payload = view[_HEADER.size : _HEADER.size + length]
     if codec == _CODEC_PICKLE:
         return pickle.loads(payload)
+    if codec == _CODEC_RAW:
+        (meta_len,) = _LEN.unpack_from(payload, 0)
+        treedef, descs = pickle.loads(payload[_LEN.size : _LEN.size + meta_len])
+        off = _LEN.size + meta_len
+        leaves = []
+        for dtype_str, shape in descs:
+            dtype = np.dtype(dtype_str)
+            nbytes = dtype.itemsize * int(np.prod(shape, dtype=np.int64))
+            arr = np.frombuffer(payload[off : off + nbytes], dtype=dtype)
+            leaves.append(arr.reshape(shape))
+            off += nbytes
+        return jax.tree_util.tree_unflatten(treedef, leaves)
     if codec == _CODEC_NPZ:
-        sep = payload.index(b"\x00TREE\x00")
-        treedef = pickle.loads(payload[:sep])
-        with np.load(io.BytesIO(payload[sep + 6 :])) as npz:
+        (tree_len,) = _LEN.unpack_from(payload, 0)
+        treedef = pickle.loads(payload[_LEN.size : _LEN.size + tree_len])
+        with np.load(io.BytesIO(bytes(payload[_LEN.size + tree_len :]))) as npz:
             leaves = [npz[f"a{i}"] for i in range(len(npz.files))]
         return jax.tree_util.tree_unflatten(treedef, leaves)
     raise ValueError(f"unknown codec {codec}")
 
 
-def digest(blob: bytes) -> str:
+def digest(blob: Any) -> str:
     return hashlib.sha256(blob).hexdigest()
 
 
-def content_key(prefix: str, blob: bytes) -> str:
+def content_key(prefix: str, blob: Any) -> str:
     """Deterministic, globally-unique key for a serialized value (PyWren's
     'globally unique keys in S3')."""
     return f"{prefix}/{digest(blob)[:32]}"

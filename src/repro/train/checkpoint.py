@@ -64,9 +64,14 @@ def save(
     leaves, treedef = jax.tree_util.tree_flatten(state)
     descs = []
     chunks: Dict[str, bytes] = {}
+    # Backends that consume a put before returning (file, net) take the
+    # checkpoint shards as memoryviews over the live array memory — the
+    # wire/disk write is then zero-copy end to end.  Reference-storing
+    # backends (in-memory) still get a private bytes copy.
+    zero_copy = getattr(store.backend, "zero_copy_puts", False)
     for i, leaf in enumerate(leaves):
-        arr = np.asarray(leaf)
-        blob = arr.tobytes()
+        arr = np.ascontiguousarray(np.asarray(leaf))
+        blob = memoryview(arr).cast("B") if zero_copy else arr.tobytes()
         n_chunks = max(1, math.ceil(len(blob) / CHUNK_BYTES))
         for c in range(n_chunks):
             chunks[_leaf_key(run, version, i, c)] = (

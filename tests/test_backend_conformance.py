@@ -25,6 +25,7 @@ level, so the scheduler/executor stack runs unchanged over any of them:
 import threading
 import time
 
+import numpy as np
 import pytest
 
 from repro.storage import (
@@ -179,6 +180,71 @@ def test_kv_incr_and_mdel(bk):
     kv.set("d2", 2)
     assert kv.mdel(["d1", "d2", "nope"]) >= 0
     assert not kv.exists("d1") and not kv.exists("d2")
+
+
+def test_large_array_parity_and_charging(bk):
+    """PR 9: a ≥ 8 MiB ndarray rides every substrate identically — same
+    values back through set/get/mget and object put/get/get_many, and the
+    same charging rows (one op per verb per shard touched, the payload's
+    nbytes charged in full) whether the bytes moved through process memory,
+    the shard log, or wire buffer frames."""
+    big = np.arange(1 << 20, dtype=np.float64)  # 8 MiB
+    kv = bk.kv
+    ops0 = kv.total_ops()
+    bin0 = sum(s.bytes_in for s in kv.shard_stats())
+    bout0 = sum(s.bytes_out for s in kv.shard_stats())
+    kv.set("big/a", big)
+    np.testing.assert_array_equal(kv.get("big/a"), big)
+    assert kv.total_ops() - ops0 == 2  # one charged op per verb
+    assert sum(s.bytes_in for s in kv.shard_stats()) - bin0 == big.nbytes
+    assert sum(s.bytes_out for s in kv.shard_stats()) - bout0 == big.nbytes
+    kv.set("big/b", big * 2)
+    kv.set("small", 7)
+    ops1 = kv.total_ops()
+    got = kv.mget(["big/a", "small", "big/b"])
+    np.testing.assert_array_equal(got[0], big)
+    assert got[1] == 7
+    np.testing.assert_array_equal(got[2], big * 2)
+    # batched charging stays per-shard even when the rows are 8 MiB wide
+    shards = len({kv.shard_of(k) for k in ["big/a", "small", "big/b"]})
+    assert kv.total_ops() - ops1 == shards
+    st = bk.store
+    st.put("blob/x", {"w": big})
+    np.testing.assert_array_equal(st.get("blob/x")["w"], big)
+    np.testing.assert_array_equal(st.get_many(["blob/x"])["blob/x"]["w"], big)
+
+
+def test_net_large_payload_rides_buffer_frames_not_pickle(bk):
+    """The zero-copy acceptance pin (wire tier only): moving an 8 MiB blob
+    through the object plane must move ≥ 5× fewer bytes through the pickle
+    codec than the payload itself — the raw bytes ride out-of-band buffer
+    frames.  A pickled-path control client on the same daemon moves the
+    payload through the codec in full."""
+    if bk.kind != "net":
+        pytest.skip("wire-tier byte accounting only exists on the net backend")
+    blob = np.arange(1 << 20, dtype=np.float64).tobytes()  # 8 MiB
+    st = bk.store
+    client = st.backend._client
+    p0, b0 = client.bytes_pickled, client.bytes_buffer
+    st.put_bytes("zc/x", blob)
+    assert st.get_bytes("zc/x") == blob
+    pickled = client.bytes_pickled - p0
+    buffered = client.bytes_buffer - b0
+    assert buffered >= 2 * len(blob)  # put out + get back, both out-of-band
+    assert pickled * 5 < 2 * len(blob)  # ≥5× fewer copied bytes than payload
+    # control: a zero_copy=False client pays the codec in full
+    from repro.storage import NetBackend
+
+    legacy = ObjectStore(backend=NetBackend(bk.server.address, zero_copy=False))
+    try:
+        lc = legacy.backend._client
+        lp0 = lc.bytes_pickled
+        legacy.put_bytes("zc/legacy", blob)
+        assert legacy.get_bytes("zc/legacy") == blob
+        assert lc.bytes_pickled - lp0 >= 2 * len(blob)
+        assert lc.bytes_buffer == 0
+    finally:
+        legacy.backend.close()
 
 
 # ---------------------------------------------------------------------------

@@ -331,6 +331,81 @@ def test_compaction_bounds_log_and_preserves_state(tmp_path):
         fresh.close()
 
 
+def test_commit_path_never_rewrites_snapshot_inline(tmp_path):
+    """PR 9: with the default ``compaction="thread"``, a commit that crosses
+    the compaction threshold returns after one O(record) append — the
+    O(shard) snapshot rewrite runs on the compactor thread.  Pinned
+    structurally: every snapshot publication is recorded with its thread,
+    and the committing thread never appears; the PR-5 inline path is
+    booby-trapped outright."""
+    import threading
+
+    root = str(tmp_path / "kv")
+    kv = FileKVStore(root, num_shards=1, compact_min_bytes=2048)
+    eng = kv._engines[0]
+    snap_threads = []
+    orig_finish = eng.finish_compaction
+
+    def spy_finish(plan):
+        snap_threads.append(threading.current_thread().name)
+        return orig_finish(plan)
+
+    eng.finish_compaction = spy_finish
+
+    def boom(_state):
+        raise AssertionError("inline snapshot rewrite in the commit path")
+
+    eng._compact = boom
+    try:
+        for i in range(300):
+            kv.set(f"k{i % 5}", "v" * 200, worker="t")
+        kv.compact_now()
+        assert snap_threads and set(snap_threads) == {"filekv-compactor"}
+        assert glob.glob(os.path.join(root, "shard-0.snap.*"))
+        assert os.path.getsize(_shard_log(root)) < 10_000  # storm stayed bounded
+        for i in range(5):
+            assert kv.get(f"k{i}") == "v" * 200
+    finally:
+        kv.close()
+
+
+def test_compaction_storm_p99_commit_cost_bounded(tmp_path):
+    """The compaction-storm regression pin, deterministic: with the
+    threshold crossed on effectively every commit, the commit path's own
+    disk writes stay O(record) — worst-case (p100, hence p99) commit cost
+    is one small frame.  Inline mode on the same storm pays the O(shard)
+    snapshot rewrite inside the commit, which is exactly the stall the
+    compactor thread removes."""
+    kv = FileKVStore(str(tmp_path / "t"), num_shards=1, compact_min_bytes=256)
+    requests = []
+    kv._request_compact = requests.append  # isolate commit-path bytes
+    per_commit = []
+    try:
+        kv.set("base", "v" * 400, worker="t")  # past the threshold for good
+        for i in range(50):
+            before = kv.disk_bytes_written()
+            kv.set(f"k{i}", "v" * 50, worker="t")
+            per_commit.append(kv.disk_bytes_written() - before)
+        assert max(per_commit) < 500  # every commit: one frame, no rewrite
+        assert requests  # ...even while compaction was being requested
+    finally:
+        kv.close()
+    inline = FileKVStore(
+        str(tmp_path / "i"), num_shards=1, compact_min_bytes=256,
+        compaction="inline",
+    )
+    worst = 0
+    try:
+        inline.set("base", "v" * 400, worker="t")
+        for i in range(50):
+            before = inline.disk_bytes_written()
+            inline.set(f"k{i}", "v" * 50, worker="t")
+            worst = max(worst, inline.disk_bytes_written() - before)
+        assert worst > 500  # snapshot blob charged to the committing op
+    finally:
+        inline.close()
+
+
 def test_log_and_snapshot_engines_agree(tmp_path):
     """Differential check: the same op sequence through both engines ends
     in the same visible state."""

@@ -224,6 +224,104 @@ def test_blpop_waiter_survives_restart_no_lost_wakeup(server):
     kv.close()
 
 
+def _first_key(kv, daemon, prefix):
+    i = 0
+    while True:
+        k = f"{prefix}/{i}"
+        if kv._daemon_of(k) == daemon:
+            return k
+        i += 1
+
+
+def test_shard_map_kill_one_daemon_partial_outage(tmp_path):
+    """SIGKILL one daemon of a 2-daemon shard map under churn.  The pins:
+    ops on the surviving daemon's shards stay live through the outage
+    (independent connections — one daemon's crash degrades only its own
+    shards), acknowledged writes on the killed daemon's shards are all
+    present after restart, and watch re-registration wakes waiters on both
+    sides of the partial outage."""
+    srv_a = _Server(str(tmp_path / "a"), _free_port()).start()
+    srv_b = _Server(str(tmp_path / "b"), _free_port()).start()
+    shard_map = f"{srv_a.address},{srv_b.address}"
+    kv = NetKVStore(shard_map)
+    kv2 = NetKVStore(shard_map)  # the waker: a different client
+    try:
+        all_keys = [f"k/{i}" for i in range(120)]
+        a_keys = [k for k in all_keys if kv._daemon_of(k) == 0]
+        b_keys = [k for k in all_keys if kv._daemon_of(k) == 1]
+        assert len(a_keys) > 10 and len(b_keys) > 10  # the map really splits
+        aq = _first_key(kv, 0, "q")  # queue key on the surviving daemon
+        bq = _first_key(kv, 1, "p")  # queue key on the daemon we kill
+        payload = "z" * 2048  # fat enough to force compactions server-side
+
+        acked = []
+        failures = []
+
+        def writer():
+            try:
+                for i in range(600):
+                    k = all_keys[i % len(all_keys)]
+                    kv.set(k, (i, payload))
+                    acked.append(i)
+                    time.sleep(0.002)
+            except Exception as exc:  # pragma: no cover - surfaced below
+                failures.append(exc)
+
+        wt = threading.Thread(target=writer)
+        wt.start()
+        # a waiter on the doomed daemon's shard, blocked BEFORE the kill
+        b_got = {}
+        bt = threading.Thread(
+            target=lambda: b_got.update(v=kv.blpop(bq, timeout_s=60.0))
+        )
+        bt.start()
+        while len(acked) < 40:
+            time.sleep(0.005)
+        time.sleep(0.2)  # the blpop watch is registered by now
+        srv_b.kill()
+        # --- during the outage: the surviving daemon never blocks --------
+        t0 = time.monotonic()
+        probe = _first_key(kv, 0, "live")  # owned by the surviving daemon
+        kv.set(probe, "up")
+        assert kv.get(probe) == "up"
+        assert all(
+            v is None or v[1] == payload for v in kv.mget(a_keys, default=None)
+        )
+        assert time.monotonic() - t0 < 2.0, "surviving shards stalled"
+        # a waiter on the surviving daemon is woken DURING the outage
+        a_got = {}
+        at = threading.Thread(
+            target=lambda: a_got.update(v=kv.blpop(aq, timeout_s=15.0))
+        )
+        at.start()
+        time.sleep(0.3)
+        kv2.rpush(aq, "live")
+        at.join(timeout=15)
+        assert a_got.get("v") == "live"
+        # --- restart: the killed daemon's shards recover ------------------
+        srv_b.start()
+        wt.join(timeout=120)
+        assert not wt.is_alive(), "writer wedged across the partial outage"
+        assert not failures, failures
+        assert len(acked) == 600  # every call completed, outage included
+        got = kv.mget(all_keys)
+        expect = [(480 + j, payload) for j in range(120)]  # the final cycle
+        assert got == expect
+        # the waiter blocked across the restart is woken by a fresh push:
+        # its watch was re-registered on the new server generation
+        kv2.rpush(bq, "back")
+        bt.join(timeout=30)
+        assert b_got.get("v") == "back"
+        # reconnects stayed per-daemon: only the killed daemon's client redialed
+        assert kv._clients[1].reconnects >= 1
+        assert kv._clients[0].reconnects == 0
+    finally:
+        kv2.close()
+        kv.close()
+        srv_a.stop()
+        srv_b.stop()
+
+
 def test_executor_map_exact_results_across_kill(server):
     """End to end: a WrenExecutor map whose whole control plane (queues,
     leases, results) lives on the killed server still produces exactly

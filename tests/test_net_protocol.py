@@ -25,10 +25,14 @@ from repro.storage import NetKVStore
 from repro.storage.kv_store import _FRAME_HDR
 from repro.storage.net_kv import (
     MAX_FRAME_LEN,
+    ZERO_COPY_MIN,
     FrameDecoder,
     ProtocolError,
     encode_wire,
+    encode_wire_parts,
+    extract_buffers,
     parse_addr,
+    parse_shard_map,
 )
 from repro.storage.net_server import KVDServer
 
@@ -177,12 +181,116 @@ def test_crc_collision_resistance_on_length_corruption():
     assert out == []  # or: short frame now torn, waiting forever — also safe
 
 
+def _buffer_frame_blob(msg):
+    """Encode ``msg`` with its large bytes-likes extracted into buffer
+    frames; returns (wire bytes, expected decoded message)."""
+    buffers = []
+    wire_msg = extract_buffers(msg, buffers)
+    assert buffers, "payload should have been extracted into a buffer frame"
+    return b"".join(bytes(p) for p in encode_wire_parts(wire_msg, buffers)), msg
+
+
+def test_torn_buffer_frame_reassembles_across_every_chunking():
+    """A buffer frame torn at arbitrary points — including mid-header and
+    mid-payload — reassembles into the original message exactly; the raw
+    payload bytes are counted on the buffer path, not the pickle path."""
+    payload = bytes(range(256)) * (ZERO_COPY_MIN // 256 + 17)
+    blob, msg = _buffer_frame_blob(("res", 9, payload))
+    for step in (1, 7, 4096, ZERO_COPY_MIN + 3, len(blob)):
+        dec = FrameDecoder()
+        out = []
+        for off in range(0, len(blob), step):
+            out.extend(dec.feed(blob[off : off + step]))
+        assert out == [msg], f"chunk size {step}"
+        assert dec.bytes_buffer == len(payload)
+        assert dec.bytes_pickled < 256  # only the tiny control frame
+
+
+def test_torn_buffer_frame_fill_mode_recv_into_path():
+    """The pump's fast path: a torn buffer frame flips the decoder into
+    fill mode (``wanted``/``fill_view``/``filled``), and the socket bytes
+    land directly in the payload's final buffer."""
+    payload = bytes(range(251)) * (ZERO_COPY_MIN // 251 + 5)
+    blob, msg = _buffer_frame_blob(("res", 3, payload))
+    dec = FrameDecoder()
+    pos = _FRAME_HDR.size + 10  # header + first 10 payload bytes
+    assert dec.feed(blob[:pos]) == []
+    assert dec.wanted() == len(payload) - 10
+    while dec.wanted():
+        n = min(dec.wanted(), 3333)  # a recv_into returning partial reads
+        dec.fill_view()[:n] = blob[pos : pos + n]
+        dec.filled(n)
+        pos += n
+    assert dec.wanted() == 0
+    out = dec.feed(blob[pos:])  # the control frame binds the filled buffer
+    assert out == [msg]
+    assert dec.bytes_buffer == len(payload)
+
+
+def test_buffer_frame_crc_flip_raises_and_poisons():
+    payload = b"\xab" * (ZERO_COPY_MIN + 100)
+    blob, _msg = _buffer_frame_blob(("res", 1, payload))
+    corrupt = bytearray(blob)
+    corrupt[_FRAME_HDR.size + 50] ^= 0xFF  # flip a raw payload byte
+    dec = FrameDecoder()
+    with pytest.raises(ProtocolError, match="CRC"):
+        dec.feed(bytes(corrupt))
+    with pytest.raises(ProtocolError, match="poisoned"):
+        dec.feed(encode_wire("fine"))
+    # same flip, but delivered through the fill-mode path
+    dec2 = FrameDecoder()
+    dec2.feed(bytes(corrupt[: _FRAME_HDR.size + 8]))
+    n = len(payload) - 8
+    dec2.fill_view()[:n] = corrupt[_FRAME_HDR.size + 8 : _FRAME_HDR.size + 8 + n]
+    with pytest.raises(ProtocolError, match="CRC"):
+        dec2.filled(n)
+
+
+def test_dangling_buffer_placeholder_raises():
+    """A control frame referencing a buffer index that never arrived is a
+    protocol error, not a silent placeholder leak."""
+    from repro.storage.net_kv import _WireBuf
+
+    small = b"x" * (ZERO_COPY_MIN + 1)
+    buffers = []
+    extract_buffers(small, buffers)  # one real buffer: index 0
+    parts = encode_wire_parts(("res", 1, _WireBuf(1)), buffers)  # refers to #1
+    dec = FrameDecoder()
+    with pytest.raises(ProtocolError, match="without a matching buffer"):
+        dec.feed(b"".join(bytes(p) for p in parts))
+
+
+def test_small_payloads_stay_on_the_pickle_path():
+    """Below ZERO_COPY_MIN nothing is extracted — one pickled frame, and
+    small memoryviews are normalized to bytes so they still pickle."""
+    buffers = []
+    msg = extract_buffers(("res", 2, memoryview(b"small")), buffers)
+    assert buffers == []
+    assert msg == ("res", 2, b"small")
+    dec = FrameDecoder()
+    assert dec.feed(encode_wire(msg)) == [msg]
+    assert dec.bytes_buffer == 0
+
+
 def test_parse_addr_forms():
     assert parse_addr("127.0.0.1:4000") == ("127.0.0.1", 4000)
     assert parse_addr(("h", 9)) == ("h", 9)
     assert parse_addr("unix:/tmp/kvd.sock") == ("unix:/tmp/kvd.sock", 0)
     with pytest.raises(ValueError):
         parse_addr("no-port-here")
+
+
+def test_parse_shard_map_forms():
+    # single endpoint: the N=1 degenerate case
+    assert parse_shard_map("127.0.0.1:4000") == [("127.0.0.1", 4000)]
+    assert parse_shard_map(("h", 9)) == [("h", 9)]
+    # comma-joined string and list forms; ORDER IS THE TOPOLOGY
+    assert parse_shard_map("a:1, b:2") == [("a", 1), ("b", 2)]
+    assert parse_shard_map(["a:1", ("b", 2), "unix:/tmp/k.sock"]) == [
+        ("a", 1),
+        ("b", 2),
+        ("unix:/tmp/k.sock", 0),
+    ]
 
 
 # ---------------------------------------------------------------------------

@@ -84,6 +84,61 @@ def test_batch001_per_key_op_in_loop():
     assert _rules(comp) == ["BATCH001"]
 
 
+def test_batch001_raw_wire_verbs_in_loop():
+    """PR 9 shard-map surface: a constant kv./ob. op through the raw wire
+    verbs inside a loop is the same N-round-trip mistake as a per-key kv
+    verb; the pipelined start_call/finish_call scatter and per-key watch
+    registration are the sanctioned shapes."""
+    bad = (
+        "def f(clients, keys):\n"
+        "    for c in clients:\n"
+        '        c.call("kv.mget", keys)\n'
+    )
+    assert _rules(bad) == ["BATCH001"]
+    assert _rules(
+        "def f(clients, key):\n"
+        "    for c in clients:\n"
+        '        c.cast("ob.put", key, b"x")\n'
+    ) == ["BATCH001"]
+    assert _rules(
+        "def f(c, keys):\n"
+        '    return [c.call_rid("kv.lpop_n", k, 1, None) for k in keys]\n'
+    ) == ["BATCH001"]
+    # the scatter half of a fan-out is the fix, not a violation
+    good = (
+        "def f(clients, keys):\n"
+        '    hs = [c.start_call("kv.mget", keys) for c in clients]\n'
+        "    return [c.finish_call(h) for c, h in zip(clients, hs)]\n"
+    )
+    assert _rules(good) == []
+    # watch registration is per-key by protocol (reconnect re-pin loop)
+    assert _rules(
+        "def f(c, live):\n"
+        "    for key in live:\n"
+        '        c.call("watch.kv", key, True)\n'
+    ) == []
+    # dynamic op names are out of static reach; outside a loop is fine
+    assert _rules('def f(c, op, k):\n    for _ in range(2):\n        c.call(op, k)\n') == []
+    assert _rules('def f(c, k):\n    c.call("kv.get", k)\n') == []
+
+
+def test_fence001_raw_wire_verbs():
+    """The fence follows the op name through the wire verb: a bare kv.set/
+    kv.mdel on sched/ keys via .call is the same violation as the kv-verb
+    spelling."""
+    assert _rules('def f(c):\n    c.call("kv.set", "sched/lease/t1", 1)\n') == ["FENCE001"]
+    assert _rules('def f(c):\n    c.cast("kv.mdel", ["sched/epoch/t1"])\n') == ["FENCE001"]
+    findings = lint.active(
+        lint.lint_source('def f(c):\n    c.call("kv.set", "sched/job/j1/manifest", 1)\n',
+                         "core/example.py")
+    )
+    assert [f.rule for f in findings] == ["FENCE001"]
+    assert "jobs.commit_records" in findings[0].message
+    # fenced ops and other keyspaces through the wire stay clean
+    assert _rules('def f(c):\n    c.call("kv.eval", "sched/lease/t1", fn)\n') == []
+    assert _rules('def f(c):\n    c.call("kv.set", "ps/block/0", 1)\n') == []
+
+
 def test_lock001_blocking_under_lock():
     bad = (
         "def f(self, kv):\n"

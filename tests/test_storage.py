@@ -54,6 +54,60 @@ def test_serialization_array_pytree(seed, a, b):
     np.testing.assert_array_equal(out["y"][0], tree["y"][0])
 
 
+# Keys crafted to contain the legacy codec's sentinel separator
+# (b"\x00TREE\x00"): the old sentinel-scan split corrupted any pytree whose
+# pickled treedef embedded those bytes.  The length-prefixed header must
+# round-trip them — and arbitrary binary-ish keys — exactly.
+_ADVERSARIAL_KEYS = st.one_of(
+    st.just("\x00TREE\x00"),
+    st.just("pre\x00TREE\x00post"),
+    st.text(alphabet="\x00TRE abc", min_size=1, max_size=12),
+    st.text(max_size=12),
+)
+
+
+@given(
+    st.dictionaries(
+        _ADVERSARIAL_KEYS,
+        st.integers(0, 4).map(lambda n: np.arange(n, dtype=np.float32)),
+        min_size=1,
+        max_size=4,
+    )
+)
+@settings(max_examples=60, deadline=None)
+def test_serialization_sentinel_adversarial_treedef(tree):
+    """Property pin for the PR-9 sentinel fix: pytrees whose treedef pickle
+    contains the old b"\\x00TREE\\x00" separator round-trip exactly through
+    both the raw codec and the legacy NPZ codec."""
+    from repro.storage.serialization import _dumps_npz
+
+    out = loads(dumps(tree))
+    assert sorted(out) == sorted(tree)
+    for k in tree:
+        np.testing.assert_array_equal(out[k], tree[k])
+    legacy = loads(_dumps_npz(tree))
+    for k in tree:
+        np.testing.assert_array_equal(legacy[k], tree[k])
+
+
+def test_dumps_parts_concatenation_is_dumps():
+    """The scatter-gather contract the wire tier rides on: joining the
+    segments of ``dumps_parts`` is byte-identical to ``dumps``, and array
+    leaves are zero-copy memoryviews over the array memory."""
+    from repro.storage.serialization import dumps_parts
+
+    tree = {"w": np.arange(1024, dtype=np.float64), "b": np.ones(3, np.float32)}
+    parts = dumps_parts(tree)
+    assert b"".join(parts) == dumps(tree)
+    views = [p for p in parts if isinstance(p, memoryview)]
+    assert len(views) == 2  # one per leaf, no pickling of the payload
+    total = sum(v.nbytes for v in views)
+    assert total == 1024 * 8 + 3 * 4
+    # non-array values collapse to a single pickled segment
+    (single,) = dumps_parts({"s": "just pickles"})
+    assert loads(single) == {"s": "just pickles"}
+
+
 def test_content_addressing_dedupes():
     store = ObjectStore()
     k1 = store.put_content_addressed("in", {"a": 1})
