@@ -1,47 +1,128 @@
-"""Serving example: batched inference with the storage-mediated request
-plane (clients and engines only share the object store, PyWren-style).
+"""Serving: two continuous-batching engines, one SIGKILLed mid-stream.
+
+PR 10 rebuilt serving around a lease-driven request plane: clients
+``rpush`` request ids onto ``serve/q/*`` and engines lease them with an
+atomic compare-and-take, so any number of engine workers can share one
+queue without double-serving.  The whole crash story is the lease
+lifecycle — submit, take, fence, reap, re-take — and it runs on a plain
+KV, no model required:
+
+>>> import time
+>>> from repro.serve import request_plane as rp
+>>> from repro.storage import KVStore, ObjectStore
+>>> kv, store = KVStore(num_shards=1), ObjectStore()
+>>> rp.submit(store, kv, "r1", [1, 2, 3])           # body first, then id
+'serve/done/r1'
+>>> [r for r, body in rp.lease_requests(store, kv, "e-A", 4)]
+['r1']
+>>> rp.lease_requests(store, kv, "e-B", 4)          # live lease: e-B waits
+[]
+>>> rp.reap_expired(store, kv, now=time.time() + 99)   # e-A dies; lapse reaped
+1
+>>> [r for r, body in rp.lease_requests(store, kv, "e-B", 4)]  # re-served
+['r1']
+>>> kv.get(rp.lease_key("r1"))["term"]   # fenced takeover: term strictly grows
+2
+
+Re-serving is *safe* because generation is deterministic per request: the
+sampling key is derived from the request id (``rp.request_seed``), so e-B
+reproduces byte-identical tokens and the first-writer-wins result publish
+makes the duplicate a no-op.
+
+Below, the real thing: two ``repro.launch.serve`` engine subprocesses
+over shared ``FileKVStore``/``FileBackend`` directories, a client that
+watches tokens stream in *before* completion, and a SIGKILL landing on
+engine A while its slots are mid-decode.  Engine B reaps A's lapsed
+leases and finishes the job: every request completes exactly once.
 
 Run:  PYTHONPATH=src python examples/serve_llm.py
 """
 
+import os
+import signal
+import subprocess
+import sys
+import tempfile
 import time
 
-import jax
 import numpy as np
 
-from repro.configs import CONFIGS
-from repro.models import init_params
-from repro.serve import Engine, ServeConfig, serve_pending, submit_request
-from repro.storage import ObjectStore
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+N_REQ = 8
+
+
+def _spawn_engine(kv_root: str, obj_root: str, engine_id: str) -> subprocess.Popen:
+    env = dict(os.environ, PYTHONPATH=_SRC)
+    proc = subprocess.Popen(
+        [
+            sys.executable, "-m", "repro.launch.serve",
+            "--arch", "qwen3-32b", "--reduced",
+            "--kv-root", kv_root, "--obj-root", obj_root,
+            "--engine-id", engine_id,
+            "--new-tokens", "24", "--decode-chunk", "1",
+            "--lease-timeout", "1.0", "--idle-timeout", "8",
+        ],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True, env=env,
+    )
+    line = proc.stdout.readline().strip()
+    assert line.startswith("READY"), f"engine failed to start: {line!r}"
+    return proc
 
 
 def main() -> None:
-    cfg = CONFIGS["qwen3-32b"].reduced()
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, ServeConfig(max_len=96, max_new_tokens=16))
-    store = ObjectStore()
+    from repro.serve import request_plane as rp
+    from repro.storage import FileBackend, FileKVStore, ObjectStore
 
-    # clients drop requests into storage
-    rng = np.random.default_rng(0)
-    for i in range(10):
-        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 12)).tolist()
-        submit_request(store, f"req-{i:03d}", prompt)
-    print(f"submitted {len(store.list('serve/req/'))} requests")
+    with tempfile.TemporaryDirectory() as root:
+        kv_root = os.path.join(root, "kv")
+        obj_root = os.path.join(root, "obj")
+        kv = FileKVStore(kv_root, num_shards=2)
+        store = ObjectStore(backend=FileBackend(obj_root))
 
-    # the engine leases batches and publishes results atomically; run it
-    # twice to show idempotency (second pass finds nothing new to do)
-    t0 = time.perf_counter()
-    served = 0
-    while True:
-        n = serve_pending(store, engine, batch_size=4)
-        if n == 0:
-            break
-        served += n
-        print(f"served batch of {n} ({time.perf_counter() - t0:.2f}s)")
-    done = store.list("serve/done/")
-    print(f"total served: {served}; results in storage: {len(done)}")
-    sample = store.get(done[0])
-    print(f"example continuation: {sample['tokens'][:8]}...")
+        victim = _spawn_engine(kv_root, obj_root, "engine-A")
+        survivor = _spawn_engine(kv_root, obj_root, "engine-B")
+        print("two engines up (separate processes, shared directories)")
+
+        rng = np.random.default_rng(0)
+        ids = [f"req-{i:03d}" for i in range(N_REQ)]
+        for r in ids:
+            rp.submit(store, kv, r, rng.integers(0, 1000, size=6).tolist())
+        print(f"submitted {N_REQ} requests")
+
+        # SIGKILL engine A while results are still outstanding — its slots
+        # are mid-decode and its leases are live
+        while True:
+            done = store.exists_many([rp.done_key(r) for r in ids])
+            if done:
+                break
+            time.sleep(0.05)
+        victim.kill()
+        victim.wait()
+        print(f"SIGKILLed engine-A with {N_REQ - len(done)} requests outstanding")
+
+        # tokens stream as rpush chunks: watch a still-pending request
+        # arrive in pieces (served by B — possibly a re-serve of one of
+        # A's orphaned leases)
+        pending = [r for r in ids if rp.done_key(r) not in done]
+        chunks = list(rp.stream_result(store, kv, pending[-1], timeout_s=60.0))
+        print(
+            f"{pending[-1]} streamed in {len(chunks)} chunks "
+            f"({sum(len(c) for c in chunks)} tokens) before its done record"
+        )
+
+        # engine B reaps A's lapsed leases and re-serves: nothing is lost,
+        # first-writer-wins publish means nothing is duplicated
+        results = rp.get_results(store, ids, timeout_s=120.0)
+        by_engine: dict = {}
+        for r in ids:
+            by_engine.setdefault(results[r]["engine"], []).append(r)
+        served = {e: len(v) for e, v in sorted(by_engine.items())}
+        assert len(results) == N_REQ, served
+        assert all(results[r]["tokens"] for r in ids)
+        print(f"all {N_REQ} requests completed exactly once: {served}")
+
+        survivor.wait(timeout=60)
+        kv.close()
 
 
 if __name__ == "__main__":

@@ -111,7 +111,17 @@ def decode_attention_pallas(
     group = H // K
     scale = scale if scale is not None else 1.0 / math.sqrt(D)
     block_k = min(block_k, S)
-    assert S % block_k == 0
+    rem = S % block_k
+    if rem:
+        # Pad the cache out to a whole number of blocks.  The pad rows sit at
+        # positions >= S >= cache_len, so the `pos < clen` mask already
+        # excludes them — arbitrary max_len values work, no partial-block
+        # kernel variant needed.
+        pad = block_k - rem
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+        S += pad
     n_k = S // block_k
 
     qg = q.reshape(B, K, group, D)  # group q-heads by kv head

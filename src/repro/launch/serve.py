@@ -1,13 +1,32 @@
-"""Production serving launcher: engine + storage request plane.
+"""Serving engine worker: one continuous-batching engine over shared storage.
 
-Usage:
+Each invocation is ONE stateless engine worker — the paper's scaling unit.
+Point any number of them at the same ``--kv-root``/``--obj-root`` (shared
+filesystem) and they cooperatively drain the ``serve/q/*`` request queues:
+leases keep two engines off the same request, heartbeats keep live work
+fenced, and a worker that dies mid-stream is reaped by the survivors and
+its requests re-served byte-identically (per-request PRNG keys).
+
+Worker over a shared directory (start N of these; clients submit with
+``repro.serve.request_plane.submit`` against the same roots):
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduced \
-      --requests 12 [--batch 4] [--new-tokens 16]
+      --kv-root /srv/kv --obj-root /srv/obj --engine-id e0 --idle-timeout 10
+
+Self-contained demo (no roots -> in-memory stores, submits its own
+Poisson-ish traffic and serves it):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-32b --reduced \
+      --demo-requests 12
+
+The worker prints ``READY <engine-id>`` after jit warmup so orchestrators
+can wait for it before submitting, and a stats line on idle exit.
 """
 
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -15,47 +34,94 @@ import numpy as np
 
 from repro.configs import CONFIGS
 from repro.models import init_params
-from repro.serve import Engine, ServeConfig, serve_pending, submit_request
-from repro.storage import ObjectStore
+from repro.serve import ContinuousEngine, ServeConfig
+from repro.serve import request_plane as rp
+from repro.storage import FileBackend, FileKVStore, KVStore, ObjectStore
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=sorted(CONFIGS))
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--new-tokens", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    args = ap.parse_args()
-
+def _build_engine(args) -> ContinuousEngine:
     cfg = CONFIGS[args.arch]
     if args.reduced:
         cfg = cfg.reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(
-        cfg, params,
-        ServeConfig(max_len=args.max_len, max_new_tokens=args.new_tokens),
+    scfg = ServeConfig(
+        max_batch=args.batch,
+        max_len=args.max_len,
+        max_new_tokens=args.new_tokens,
+        decode_chunk=args.decode_chunk,
+        n_queues=args.queues,
+        lease_timeout_s=args.lease_timeout,
     )
-    store = ObjectStore()
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        prompt = rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 16))).tolist()
-        submit_request(store, f"req-{i:04d}", prompt)
+    engine = ContinuousEngine(cfg, params, scfg)
+    # compile decode + the single-request prefill shape before READY
+    engine.admit([("warm", [1, 2, 3], 2)])
+    while engine.n_live():
+        engine.step_chunk()
+    for k in engine.stats:
+        engine.stats[k] = 0
+    return engine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-32b", choices=sorted(CONFIGS))
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--kv-root", help="shared FileKVStore directory (request plane)")
+    ap.add_argument("--obj-root", help="shared FileBackend directory (bodies/results)")
+    ap.add_argument("--engine-id", default="engine-0")
+    ap.add_argument("--idle-timeout", type=float, default=5.0,
+                    help="exit after the queue stays empty this long (s)")
+    ap.add_argument("--batch", type=int, default=4, help="decode slots")
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="decode steps between admission/stream boundaries")
+    ap.add_argument("--queues", type=int, default=1, help="serve/q/ shard count")
+    ap.add_argument("--lease-timeout", type=float, default=2.0)
+    ap.add_argument("--demo-requests", type=int, default=0,
+                    help="submit this many synthetic requests first (demo mode; "
+                    "uses in-memory stores when no roots are given)")
+    args = ap.parse_args()
+
+    if bool(args.kv_root) != bool(args.obj_root):
+        ap.error("--kv-root and --obj-root must be given together")
+    if args.kv_root:
+        kv = FileKVStore(args.kv_root, num_shards=2)
+        store = ObjectStore(backend=FileBackend(args.obj_root))
+    else:
+        if not args.demo_requests:
+            ap.error("no shared roots: give --kv-root/--obj-root, or "
+                     "--demo-requests N for a self-contained in-memory demo")
+        kv = KVStore(num_shards=2)
+        store = ObjectStore()
+
+    engine = _build_engine(args)
+    print(f"READY {args.engine_id}", flush=True)
+
+    if args.demo_requests:
+        rng = np.random.default_rng(0)
+        cfg = engine.cfg
+        for i in range(args.demo_requests):
+            prompt = rng.integers(
+                0, cfg.vocab_size, size=int(rng.integers(4, 16))
+            ).tolist()
+            rp.submit(store, kv, f"req-{i:04d}", prompt, n_queues=args.queues)
+        print(f"submitted {args.demo_requests} requests", flush=True)
 
     t0 = time.time()
-    total = 0
-    while True:
-        n = serve_pending(store, engine, batch_size=args.batch)
-        if n == 0:
-            break
-        total += n
+    stats = engine.run(
+        store, kv, engine_id=args.engine_id, idle_timeout_s=args.idle_timeout
+    )
     dt = time.time() - t0
     print(
-        f"served {total} requests in {dt:.1f}s "
-        f"({total * args.new_tokens / dt:.1f} tok/s decode on CPU)"
+        f"{args.engine_id}: served {stats['served']} requests, "
+        f"{stats['tokens_out']} tokens in {dt:.1f}s "
+        f"({stats['tokens_out'] / max(dt, 1e-9):.1f} tok/s; "
+        f"{stats['mid_batch_admissions']} mid-batch admissions, "
+        f"{stats['decode_steps']} decode steps)",
+        flush=True,
     )
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

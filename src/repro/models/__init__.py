@@ -1,7 +1,16 @@
 """Model zoo: composable JAX definitions for the assigned architectures."""
 
 from . import attention, layers, mamba2, mla, model, moe, sharding, transformer, xlstm
-from .model import decode_step, forward, forward_hidden, head_weight, init_cache, init_params, prefill
+from .model import (
+    cache_batch_axes,
+    decode_step,
+    forward,
+    forward_hidden,
+    head_weight,
+    init_cache,
+    init_params,
+    prefill,
+)
 
 __all__ = [
     "attention",
@@ -14,6 +23,7 @@ __all__ = [
     "transformer",
     "xlstm",
     "init_params",
+    "cache_batch_axes",
     "forward",
     "forward_hidden",
     "head_weight",

@@ -2,7 +2,9 @@
 (single token), optional cross-attention (enc-dec).
 
 KV-cache layout per layer: {"k": (B, Smax, K, hd), "v": (B, Smax, K, hd)};
-`cache_len` is a scalar (aligned batched serving).  Sharding: batch over dp.
+`cache_len` is a scalar (aligned batched serving) or a per-row (B,) vector
+(continuous batching: every slot decodes at its own position).  Sharding:
+batch over dp.
 For the cache's head dim: if K % tp == 0 heads shard over tp; otherwise the
 *sequence* dim shards over tp and the decode softmax reductions become
 all-reduces (flash-decoding across the model axis) — handled purely by
@@ -113,9 +115,9 @@ def attn_apply(
     *,
     window: Optional[int] = None,
     causal: bool = True,
-    positions: Optional[jnp.ndarray] = None,  # (S,) absolute positions
+    positions: Optional[jnp.ndarray] = None,  # (S,) or per-row (B, S)
     cache: Optional[Dict[str, jnp.ndarray]] = None,
-    cache_len: Optional[jnp.ndarray] = None,  # scalar int32
+    cache_len: Optional[jnp.ndarray] = None,  # scalar or per-row (B,) int32
     cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # encoder k, v
     use_rope: bool = True,
 ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
@@ -138,8 +140,9 @@ def attn_apply(
     if use_rope and cfg.pos_embedding == "rope":
         if positions is None:
             positions = jnp.arange(S)
-        q = apply_rope(q, positions[None, :], cfg.rope_theta)
-        k = apply_rope(k, positions[None, :], cfg.rope_theta)
+        pos_b = positions if positions.ndim == 2 else positions[None, :]
+        q = apply_rope(q, pos_b, cfg.rope_theta)
+        k = apply_rope(k, pos_b, cfg.rope_theta)
     q = shard(q, DP, None, TP, None)
 
     if cache is None:
@@ -173,7 +176,7 @@ def attn_apply(
             q[:, 0],
             new_k,
             new_v,
-            jnp.full((B,), cache_len + 1, jnp.int32),
+            jnp.broadcast_to(jnp.atleast_1d(cache_len) + 1, (B,)).astype(jnp.int32),
             logit_cap=cfg.attn_softcap,
             window=window,
             scale=scale,

@@ -25,18 +25,44 @@ import jax.numpy as jnp
 def write_row(
     cache: jnp.ndarray,  # (B, S, ...) sequence on axis 1
     row: jnp.ndarray,  # (B, 1, ...)
-    index: jnp.ndarray,  # scalar int32
+    index: jnp.ndarray,  # scalar int32, or (B,) int32 for per-row positions
     *,
     dus_ok: bool,
 ) -> jnp.ndarray:
-    """Write one sequence row at a traced index."""
-    if dus_ok:
+    """Write one sequence row at a traced index.
+
+    A vector ``index`` writes each batch row at its *own* position — the
+    continuous-batching case, where every slot's cache has a different
+    length.  DUS can't express a per-row offset, so the vector path is
+    always the masked write (which partitions fine anyway).
+    """
+    index = jnp.asarray(index)
+    if index.ndim == 0 and dus_ok:
         return jax.lax.dynamic_update_slice_in_dim(
             cache, row.astype(cache.dtype), index, axis=1
         )
     S = cache.shape[1]
     pos = jax.lax.broadcasted_iota(jnp.int32, (1, S) + (1,) * (cache.ndim - 2), 1)
+    if index.ndim == 1:
+        index = index.reshape(index.shape[0], *([1] * (cache.ndim - 1)))
     return jnp.where(pos == index, row.astype(cache.dtype), cache)
+
+
+def insert_rows(
+    big: jnp.ndarray,
+    small: jnp.ndarray,
+    slots: jnp.ndarray,  # (n,) int32 indices into big's batch axis
+    axis: int,
+) -> jnp.ndarray:
+    """Scatter `small`'s batch rows into `big` at `slots` along `axis`.
+
+    The slot-insert primitive for continuous batching: a freshly prefilled
+    n-request cache leaf replaces the corresponding rows of the persistent
+    max_batch cache leaf.  Whole-row replacement — the previous occupant's
+    KV is structurally unreachable, not merely masked."""
+    bm = jnp.moveaxis(big, axis, 0)
+    sm = jnp.moveaxis(small, axis, 0)
+    return jnp.moveaxis(bm.at[slots].set(sm.astype(bm.dtype)), 0, axis)
 
 
 def write_segment(

@@ -68,7 +68,8 @@ def _q_heads(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray
     q_lat = rmsnorm(x @ p["q_down"], p["q_norm"], eps=cfg.rms_eps)
     q = jnp.einsum("bsr,rhk->bshk", q_lat, p["q_up"])
     q_nope = q[..., : m.nope_head_dim]
-    q_pe = apply_rope(q[..., m.nope_head_dim :], positions[None, :], cfg.rope_theta)
+    pos_b = positions if positions.ndim == 2 else positions[None, :]
+    q_pe = apply_rope(q[..., m.nope_head_dim :], pos_b, cfg.rope_theta)
     return q_nope, q_pe
 
 
@@ -76,8 +77,9 @@ def _latent(p: Params, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray)
     m = cfg.mla
     kv = x @ p["kv_down"]  # (B, S, r + rope)
     c_kv = rmsnorm(kv[..., : m.kv_lora_rank], p["kv_norm"], eps=cfg.rms_eps)
+    pos_b = positions if positions.ndim == 2 else positions[None, :]
     k_pe = apply_rope(
-        kv[..., m.kv_lora_rank :][:, :, None, :], positions[None, :], cfg.rope_theta
+        kv[..., m.kv_lora_rank :][:, :, None, :], pos_b, cfg.rope_theta
     )[:, :, 0]  # (B, S, rope)
     return c_kv, k_pe
 
@@ -117,7 +119,10 @@ def mla_apply(
         s_pe = jnp.einsum("bhk,bsk->bhs", q_pe[:, 0], new_kpe.astype(jnp.float32))
         scores = (s_lat + s_pe) * scale  # (B, H, S)
         pos = jnp.arange(new_ckv.shape[1])[None, None, :]
-        scores = jnp.where(pos <= cache_len, scores, -1e30)
+        clen = cache_len
+        if jnp.ndim(clen) == 1:
+            clen = clen[:, None, None]  # per-slot lengths (continuous batching)
+        scores = jnp.where(pos <= clen, scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         ctx_lat = jnp.einsum("bhs,bsr->bhr", probs, new_ckv.astype(jnp.float32))
         ctx = jnp.einsum("bhr,rhv->bhv", ctx_lat, kv_up_v.astype(jnp.float32))

@@ -349,6 +349,28 @@ def init_cache(
     return cache
 
 
+def cache_batch_axes(
+    cfg: ModelConfig, max_len: int, cache_dtype=jnp.bfloat16
+) -> Dict[str, Any]:
+    """Pytree of ints: which axis of each cache leaf is the batch axis.
+
+    Cache layouts are family-specific (stacked layers, per-group state),
+    so the batch axis sits at a different position per leaf.  Discover it
+    structurally: eval_shape the cache at two batch sizes and find the one
+    axis that differs — no allocation, no per-family table to keep in sync.
+    Feeds `cache_update.insert_rows` for continuous-batching slot inserts."""
+    a = jax.eval_shape(lambda: init_cache(cfg, 3, max_len, cache_dtype))
+    b = jax.eval_shape(lambda: init_cache(cfg, 5, max_len, cache_dtype))
+
+    def _axis(x, y):
+        for i, (m, n) in enumerate(zip(x.shape, y.shape)):
+            if m != n:
+                return i
+        raise ValueError(f"no batch axis in cache leaf of shape {x.shape}")
+
+    return jax.tree_util.tree_map(_axis, a, b)
+
+
 def prefill(
     p: Params,
     cfg: ModelConfig,
@@ -356,8 +378,14 @@ def prefill(
     cache: Dict[str, Any],
     *,
     remat: bool = False,
+    all_logits: bool = False,
 ) -> Tuple[jnp.ndarray, Dict[str, Any], jnp.ndarray]:
-    """Process the prompt; returns (last-token logits, cache, new_len)."""
+    """Process the prompt; returns (last-token logits, cache, new_len).
+
+    ``all_logits=True`` returns logits for *every* prompt position
+    (B, S, V) — the continuous-batching prefill microbatch right-pads
+    prompts to a common length and gathers each row's logits at its own
+    true last token, which causality makes identical to an unpadded run."""
     enc_out = _encode(p, cfg, batch, remat=remat) if cfg.family == "encdec" else None
     h, positions = _assemble_input(p, cfg, batch)
     h = h.astype(dtype_of(cfg.dtype))
@@ -366,7 +394,7 @@ def prefill(
         p, cfg, h, positions,
         cache=cache, cache_len=zero, enc_out=enc_out, remat=remat,
     )
-    logits = _lm_logits(p, cfg, h[:, -1:])
+    logits = _lm_logits(p, cfg, h if all_logits else h[:, -1:])
     return logits, new_cache, jnp.asarray(h.shape[1], jnp.int32)
 
 
@@ -375,17 +403,23 @@ def decode_step(
     cfg: ModelConfig,
     tokens: jnp.ndarray,  # (B, 1)
     cache: Dict[str, Any],
-    cache_len: jnp.ndarray,  # scalar int32
+    cache_len: jnp.ndarray,  # scalar int32, or (B,) int32 per-slot lengths
 ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
-    """One-token decode; returns (logits (B,1,V), new cache)."""
+    """One-token decode; returns (logits (B,1,V), new cache).
+
+    A vector ``cache_len`` is the continuous-batching form: every batch
+    row (slot) decodes at its own position, so positions become (B, 1)
+    and the cache write / attention mask are per-row."""
     h = _embed_tokens(p, cfg, tokens).astype(dtype_of(cfg.dtype))
+    cache_len = jnp.asarray(cache_len, jnp.int32)
     if cfg.pos_embedding == "learned":
         idx = jnp.minimum(cache_len, p["embed"]["pos"].shape[0] - 1)
-        h = h + p["embed"]["pos"][idx][None, None]
+        pe = p["embed"]["pos"][idx]  # scalar idx -> (D,); vector -> (B, D)
+        h = h + (pe[:, None] if cache_len.ndim == 1 else pe[None, None])
     h = shard(h, DP, None, None)
-    positions = cache_len[None] if cache_len.ndim == 0 else cache_len
+    positions = cache_len[:, None] if cache_len.ndim == 1 else cache_len[None]
     h, new_cache, _ = _backbone(
-        p, cfg, h, jnp.atleast_1d(cache_len), cache=cache, cache_len=cache_len
+        p, cfg, h, positions, cache=cache, cache_len=cache_len
     )
     logits = _lm_logits(p, cfg, h)
     return logits, new_cache

@@ -1,5 +1,16 @@
-"""Serving substrate: batched engine + storage-mediated request plane."""
+"""Serving substrate: batched engine, continuous batching, request plane."""
 
-from .engine import Engine, ServeConfig, serve_pending, submit_request
+from . import request_plane
+from .continuous import ContinuousEngine, Slot
+from .engine import Engine, ServeConfig, sample_tokens, serve_pending, submit_request
 
-__all__ = ["Engine", "ServeConfig", "serve_pending", "submit_request"]
+__all__ = [
+    "ContinuousEngine",
+    "Engine",
+    "ServeConfig",
+    "Slot",
+    "request_plane",
+    "sample_tokens",
+    "serve_pending",
+    "submit_request",
+]

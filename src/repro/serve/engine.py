@@ -37,6 +37,41 @@ class ServeConfig:
     temperature: float = 0.0  # 0 = greedy
     cache_dtype: str = "float32"
     eos_id: int = -1  # -1 = never stop early
+    # ---- continuous batching / request plane (serve.continuous) ----
+    decode_chunk: int = 8  # decode steps between admission boundaries
+    prefill_bucket: int = 16  # right-pad prompts up to a multiple of this
+    n_queues: int = 1  # request-queue shards (serve/q/{i})
+    lease_timeout_s: float = 2.0
+    heartbeat_interval_s: float = 0.5
+
+
+def sample_tokens(
+    logits: jnp.ndarray,  # (B, V)
+    keys: Optional[jnp.ndarray],  # (B, 2) uint32 per-request PRNG keys
+    steps,  # scalar or (B,) int32: per-request decode step index
+    temperature: float,
+) -> jnp.ndarray:
+    """Per-row sampling: row i draws from fold_in(keys[i], steps[i]).
+
+    Keying by (request, step) — not by engine-global state — is what makes
+    sampling deterministic per request, independent across requests, and
+    invariant to batch composition: the same request produces the same
+    stream whether it decodes alone, in a full batch, or on the engine
+    that re-serves it after a SIGKILL."""
+    if temperature <= 0 or keys is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    B = logits.shape[0]
+    steps = jnp.broadcast_to(jnp.asarray(steps, jnp.uint32), (B,))
+
+    def one(k, s, row):
+        return jax.random.categorical(jax.random.fold_in(k, s), row / temperature)
+
+    return jax.vmap(one)(keys, steps, logits).astype(jnp.int32)
+
+
+def request_keys(seeds) -> jnp.ndarray:
+    """(B, 2) uint32 key array from per-request integer seeds."""
+    return jnp.asarray(np.stack([np.asarray(jax.random.PRNGKey(int(s))) for s in seeds]))
 
 
 class Engine:
@@ -49,9 +84,18 @@ class Engine:
 
     # ---- batch generation ------------------------------------------------
     def generate(
-        self, prompts: jnp.ndarray, extras: Optional[Dict[str, jnp.ndarray]] = None
+        self,
+        prompts: jnp.ndarray,
+        extras: Optional[Dict[str, jnp.ndarray]] = None,
+        *,
+        seeds: Optional[List[int]] = None,
     ) -> np.ndarray:
-        """prompts: (B, S) int32 -> (B, max_new_tokens) int32."""
+        """prompts: (B, S) int32 -> (B, max_new_tokens) int32.
+
+        ``seeds`` (one per row, e.g. `request_plane.request_seed(req_id)`)
+        key the sampling stream per request: deterministic per request,
+        independent across requests.  Default `range(B)` — previously every
+        row of every batch shared one fixed PRNGKey(0) stream."""
         B, S = prompts.shape
         scfg = self.scfg
         dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[scfg.cache_dtype]
@@ -61,10 +105,12 @@ class Engine:
             batch.update(extras)
         logits, cache, clen = self._prefill(self.params, batch, cache)
 
+        keys = None
+        if scfg.temperature > 0:
+            keys = request_keys(range(B) if seeds is None else seeds)
         out = np.zeros((B, scfg.max_new_tokens), np.int32)
         done = np.zeros((B,), bool)
-        tok = self._sample(logits[:, -1])
-        key = jax.random.PRNGKey(0)
+        tok = sample_tokens(logits[:, -1], keys, 0, scfg.temperature)
         for t in range(scfg.max_new_tokens):
             out[:, t] = np.where(done, 0, np.asarray(tok))
             if scfg.eos_id >= 0:
@@ -73,14 +119,8 @@ class Engine:
                     break
             logits, cache = self._decode(self.params, tok[:, None], cache, clen)
             clen = clen + 1
-            key = jax.random.fold_in(key, t)
-            tok = self._sample(logits[:, 0], key)
+            tok = sample_tokens(logits[:, 0], keys, t + 1, scfg.temperature)
         return out
-
-    def _sample(self, logits: jnp.ndarray, key=None) -> jnp.ndarray:
-        if self.scfg.temperature <= 0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / self.scfg.temperature).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

@@ -125,6 +125,25 @@ def test_decode_attention_pallas_vs_ref(S, H, K, D, window, cap):
     np.testing.assert_allclose(out, exp, atol=2e-5, rtol=1e-4)
 
 
+@pytest.mark.parametrize("S,block_k", [
+    (97, 32),    # prime cache length, partial final block
+    (300, 256),  # the old `assert S % block_k == 0` crash shape
+    (130, 64),
+])
+def test_decode_attention_pallas_partial_block(S, block_k):
+    """Arbitrary max_len values: the final partial cache block is padded and
+    masked instead of tripping an assert."""
+    B, H, K, D = 2, 4, 2, 32
+    rng = np.random.default_rng(S)
+    q = _rand(rng, (B, H, D))
+    kc = _rand(rng, (B, S, K, D))
+    vc = _rand(rng, (B, S, K, D))
+    clen = jnp.asarray([S, S // 3], jnp.int32)
+    out = decode_attention_pallas(q, kc, vc, clen, block_k=block_k)
+    exp = ref.decode_attention_reference(q, kc, vc, clen)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=1e-4)
+
+
 # ---------------------------------------------------------------------------
 # Mamba2 SSD
 # ---------------------------------------------------------------------------
